@@ -1,0 +1,29 @@
+"""Render the generated roofline tables into experiments/ and inline the
+single-pod table into EXPERIMENTS.md (idempotent)."""
+from __future__ import annotations
+
+from pathlib import Path
+
+from benchmarks import roofline
+
+MARK = "## §Roofline table (generated)"
+
+
+def main():
+    single = roofline.table_markdown("single")
+    multi = roofline.table_markdown("multi")
+    Path("experiments/roofline_single.md").write_text(single + "\n")
+    Path("experiments/roofline_multi.md").write_text(multi + "\n")
+    exp = Path("EXPERIMENTS.md")
+    text = exp.read_text()
+    head = text.split(MARK)[0]
+    exp.write_text(
+        head + MARK + "\n\nSingle-pod (16x16, 256 chips), optimized "
+        "configuration; regenerate via `python -m benchmarks.finalize`.\n\n"
+        + single + "\n\nMulti-pod table: `experiments/roofline_multi.md`.\n")
+    print("wrote roofline tables;",
+          roofline.summary_line())
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,83 @@
+"""Render EXPERIMENTS.md §Roofline from the dry-run JSONs."""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+DRYRUN = Path("experiments/dryrun")
+
+
+def load_records():
+    recs = []
+    for p in sorted(DRYRUN.glob("*.json")):
+        try:
+            recs.append(json.loads(p.read_text()))
+        except Exception:
+            pass
+    return recs
+
+
+def table_markdown(mesh: str = "single") -> str:
+    rows = [r for r in load_records() if r.get("mesh") == mesh and r.get("ok")]
+    out = ["| arch | shape | dominant | compute s | memory s | collective s | "
+           "MODEL_FLOPs | useful ratio | roofline frac |",
+           "|---|---|---|---|---|---|---|---|---|"]
+    for r in sorted(rows, key=lambda r: (r["arch"], r["shape"])):
+        rf = r["roofline"]
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {rf['dominant']} "
+            f"| {rf['compute_s']:.3e} | {rf['memory_s']:.3e} "
+            f"| {rf['collective_s']:.3e} | {rf['model_flops_global']:.2e} "
+            f"| {rf['useful_flops_ratio']:.3f} "
+            f"| {rf['roofline_fraction']:.3f} |")
+    return "\n".join(out)
+
+
+def compare_markdown(mesh: str = "single",
+                     baseline_dir: str = "experiments/dryrun_baseline") -> str:
+    """§Perf before/after: naive-sharding baseline vs optimized records."""
+    base = {}
+    for p in sorted(Path(baseline_dir).glob(f"*__{mesh}.json")):
+        try:
+            d = json.loads(p.read_text())
+            if d.get("ok"):
+                base[(d["arch"], d["shape"])] = d["roofline"]
+        except Exception:
+            pass
+    out = ["| arch | shape | term | baseline s | optimized s | gain |",
+           "|---|---|---|---|---|---|"]
+    for r in load_records():
+        if r.get("mesh") != mesh or not r.get("ok"):
+            continue
+        key = (r["arch"], r["shape"])
+        if key not in base:
+            continue
+        b, o = base[key], r["roofline"]
+        for term in ("compute_s", "memory_s", "collective_s"):
+            gain = b[term] / max(o[term], 1e-12)
+            if gain >= 1.5 or gain <= 0.67:
+                out.append(f"| {key[0]} | {key[1]} | {term[:-2]} "
+                           f"| {b[term]:.3e} | {o[term]:.3e} "
+                           f"| {gain:.1f}x |")
+    return "\n".join(out)
+
+
+def summary_line() -> str:
+    rows = [r for r in load_records() if r.get("ok")]
+    if not rows:
+        return "no dryrun records yet"
+    n = len(rows)
+    doms = {}
+    for r in rows:
+        doms[r["roofline"]["dominant"]] = doms.get(
+            r["roofline"]["dominant"], 0) + 1
+    worst = min(rows, key=lambda r: r["roofline"]["roofline_fraction"])
+    return (f"cells={n} dominant={doms} worst="
+            f"{worst['arch']}/{worst['shape']}/{worst['mesh']}"
+            f"@{worst['roofline']['roofline_fraction']:.3f}")
+
+
+if __name__ == "__main__":
+    print(table_markdown("single"))
+    print()
+    print(summary_line())

@@ -1,0 +1,148 @@
+"""Benchmark harness: one function per paper table/figure + kernel and
+system micro-benchmarks. Prints ``name,us_per_call,derived`` CSV rows
+(derived = the headline number that table/figure is about).
+
+  PYTHONPATH=src python -m benchmarks.run            # fast pass
+  PYTHONPATH=src python -m benchmarks.run --full     # paper-scale GA
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _timeit(fn, *args, reps=3, warmup=1, **kw):
+    r = None
+    for _ in range(warmup):
+        r = fn(*args, **kw)
+        if hasattr(r, "block_until_ready"):
+            r.block_until_ready()
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        r = fn(*args, **kw)
+        if hasattr(r, "block_until_ready"):
+            r.block_until_ready()
+    return (time.perf_counter() - t0) / reps * 1e6, r
+
+
+def bench_table3():
+    from benchmarks import paper_tables
+    us, r = _timeit(paper_tables.table3, reps=1, warmup=0)
+    paper_tables.save("table3", r)
+    enc = r["paper_power_split"]["encoder_share"]
+    return us, f"encoder_power_share={enc:.2f}"
+
+
+def bench_table4():
+    from benchmarks import paper_tables
+    us, r = _timeit(paper_tables.table4, reps=1, warmup=0)
+    paper_tables.save("table4", r)
+    return us, (f"tc_flash/ours@3bit={r[3]['tc_ratio_flash_over_ours']}"
+                f" (paper_area {r[3].get('paper_area_ratio_flash_over_ours')})")
+
+
+def bench_table5(fast=True):
+    from benchmarks import paper_tables
+    us, r = _timeit(paper_tables.table5, reps=1, warmup=0, fast=fast)
+    paper_tables.save("table5", r)
+    g = r[3]["aggregate"]
+    return us, (f"3bit: acc {g['acc_baseline_mean']}->{g['acc_pruned_mean']}%"
+                f" flash->pruned {g['gain_flash_to_pruned_x']}x"
+                f" (paper {r[3]['paper'].get('flash', 0)}"
+                f"->{r[3]['paper'].get('pruned', 0)} TC)")
+
+
+def bench_fig4(fast=True):
+    from benchmarks import paper_tables
+    us, r = _timeit(paper_tables.fig4, reps=1, warmup=0, fast=fast,
+                    datasets=("seeds", "mammographic"), bits_list=(3,))
+    paper_tables.save("fig4", r)
+    k = next(iter(r))
+    return us, f"pareto_points={len(r[k]['pareto_acc_area'])}"
+
+
+def bench_adc_kernel():
+    from repro.kernels import ops, ref
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.random((4096, 21)), jnp.float32)
+    mask = jnp.asarray((rng.random((21, 16)) < 0.6).astype(np.int32))
+    mask = mask.at[:, 0].set(1).at[:, -1].set(1)
+    us_k, _ = _timeit(ops.adc_quantize, x, mask, bits=4, reps=5)
+    table = ref.value_table(mask, 4)
+    us_r, _ = _timeit(jax.jit(
+        lambda x: ref.adc_quantize_ref(x, table, 4)), x, reps=5)
+    return us_k, f"ref_us={us_r:.0f} (interpret-mode kernel; TPU target)"
+
+
+def bench_ga_generation():
+    """One NSGA-II generation of population-vmapped QAT (the paper's inner
+    loop; the beyond-paper SPMD speedup lever)."""
+    from repro.core import search
+    from repro.data import tabular
+    data = tabular.make_dataset("seeds")
+    cfg = search.SearchConfig(bits=3, pop_size=16, generations=1,
+                              train_steps=100)
+    us, _ = _timeit(lambda: search.run_search(data, (7, 4, 3), cfg),
+                    reps=1, warmup=0)
+    return us, "pop=16 vmapped QAT"
+
+
+def bench_lm_train_step():
+    from repro.launch.train import build
+    import repro.models.steps as steps
+    cfg, mesh, train_step, data = build(
+        "gemma2-2b", smoke=True, seq=64, batch=4, microbatches=2)
+    with jax.set_mesh(mesh):
+        state = steps.init_state(jax.random.PRNGKey(0), cfg, mesh)
+        jstep = jax.jit(train_step, donate_argnums=(0,))
+        state, m = jstep(state, data.device_batch(0),
+                         jnp.zeros((), jnp.int32))           # compile
+        t0 = time.perf_counter()
+        for i in range(3):
+            state, m = jstep(state, data.device_batch(i + 1),
+                             jnp.asarray(i + 1, jnp.int32))
+        jax.block_until_ready(m["loss"])
+        us = (time.perf_counter() - t0) / 3 * 1e6
+    return us, f"loss={float(m['loss']):.3f} (smoke cfg)"
+
+
+def bench_roofline_summary():
+    from benchmarks import roofline
+    us, txt = _timeit(roofline.summary_line, reps=1, warmup=0)
+    return us, txt
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    args = ap.parse_args()
+    fast = not args.full
+    benches = [
+        ("table3_flash_split", bench_table3),
+        ("table4_full_adcs", bench_table4),
+        ("table5_pruned_system", lambda: bench_table5(fast)),
+        ("fig4_pareto", lambda: bench_fig4(fast)),
+        ("kernel_adc_quantize", bench_adc_kernel),
+        ("ga_generation_vmap_qat", bench_ga_generation),
+        ("lm_train_step_smoke", bench_lm_train_step),
+        ("roofline_summary", bench_roofline_summary),
+    ]
+    print("name,us_per_call,derived")
+    failures = 0
+    for name, fn in benches:
+        try:
+            us, derived = fn()
+            print(f"{name},{us:.0f},{derived}", flush=True)
+        except Exception as e:                     # noqa: BLE001
+            failures += 1
+            print(f"{name},FAILED,{type(e).__name__}: {e}", flush=True)
+    if failures:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

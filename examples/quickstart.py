@@ -1,0 +1,35 @@
+"""Quickstart: the paper's objects in ~40 lines.
+
+  PYTHONPATH=src python examples/quickstart.py
+"""
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import adc, area
+from repro.kernels import ops
+
+BITS = 3
+
+# 1. a full 3-bit binary-search ADC quantizes an analog ramp
+x = jnp.linspace(0.0, 0.999, 12)
+full = adc.init_full_mask(BITS)
+print("full ADC codes:    ", np.asarray(adc.adc_codes(x, full, bits=BITS)))
+
+# 2. prune levels {0,2,3,6,7} (keep {1,4,5}) — the comparator tree routes
+#    inputs through surviving branches (Fig. 2b semantics)
+mask = jnp.array([0, 1, 0, 0, 1, 1, 0, 0], jnp.int32)
+print("pruned ADC codes:  ", np.asarray(adc.adc_codes(x, mask, bits=BITS)))
+print("pruned ADC values: ", np.asarray(
+    adc.adc_quantize(x, mask, bits=BITS, ste=False)).round(3))
+
+# 3. the design-rule area model (transistor count)
+print(f"\narea: full binary-search ADC  = {area.ours_full_tc(BITS)} T")
+print(f"area: pruned ADC              = {area.pruned_binary_tc(np.asarray(mask))} T")
+print(f"area: baseline binary (Fig2a) = {area.baseline_binary_tc(BITS)} T")
+print(f"area: flash + encoder         = {area.flash_full_tc(BITS)} T")
+
+# 4. the same quantizer as the Pallas TPU kernel (interpret mode on CPU)
+xs = jnp.asarray(np.random.default_rng(0).random((8, 4)), jnp.float32)
+masks = jnp.stack([mask, full, mask, full])           # per-channel ADCs
+print("\nkernel output:\n", np.asarray(
+    ops.adc_quantize(xs, masks, bits=BITS)).round(3))

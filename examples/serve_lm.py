@@ -1,0 +1,17 @@
+"""Batched serving driver: prefill a request batch, decode with KV/SSM
+caches (the decode_* dry-run shapes exercise exactly this path at scale).
+
+  PYTHONPATH=src python examples/serve_lm.py --arch musicgen-medium
+  PYTHONPATH=src python examples/serve_lm.py --arch mamba2-1.3b --gen 32
+"""
+import sys
+
+from repro.launch.serve import main
+
+if __name__ == "__main__":
+    argv = sys.argv[1:]
+    if not any(a.startswith("--arch") for a in argv):
+        argv = ["--arch", "musicgen-medium"] + argv
+    if "--smoke" not in argv:
+        argv.append("--smoke")
+    main(argv)

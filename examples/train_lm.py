@@ -1,0 +1,22 @@
+"""LM training end-to-end driver (fault-tolerant loop + checkpointing).
+
+CPU-sized by default (reduced config; the container has one core). On a pod
+drop --smoke to train the published config. Examples:
+
+  PYTHONPATH=src python examples/train_lm.py                   # quick
+  PYTHONPATH=src python examples/train_lm.py --arch musicgen-medium \
+      --steps 200   # the paper-representative audio arch with ADC frontend
+"""
+import sys
+
+from repro.launch.train import main
+
+if __name__ == "__main__":
+    argv = sys.argv[1:]
+    if not any(a.startswith("--arch") for a in argv):
+        argv = ["--arch", "gemma2-2b"] + argv
+    if "--smoke" not in argv:
+        argv.append("--smoke")
+    if not any(a.startswith("--steps") for a in argv):
+        argv += ["--steps", "60"]
+    main(argv)

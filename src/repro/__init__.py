@@ -1,0 +1,4 @@
+"""flexadc — in-training Binary-Search-ADC optimization (ASPDAC'25) as a
+production multi-pod JAX framework. See DESIGN.md for the system map."""
+
+__version__ = "1.0.0"

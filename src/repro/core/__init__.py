@@ -1,0 +1,3 @@
+"""The paper's primary contribution: binary-search ADC design + in-training
+level-pruning optimization (NSGA-II x QAT). See DESIGN.md §1-2."""
+from repro.core import adc, area, nsga2, qat, search  # noqa: F401

@@ -1,0 +1,160 @@
+"""Binary-search ADC as a differentiable JAX module (the paper's §3).
+
+An N-bit binary-search ADC partitions the analog range [vmin, vmax] into
+``2**N`` quantization levels. Pruning (§3.2) keeps a subset of levels (a
+binary *mask*); the comparator tree then routes an analog input falling in a
+pruned level's interval to the kept leaf that the surviving comparator chain
+reaches. Two semantics are provided:
+
+* ``tree`` (default, circuit-faithful): descend the comparator tree; at a
+  node whose sub-tree holds no kept level, bypass the comparison and take the
+  surviving branch. This is exactly what the pruned circuit of Fig. 2b / 3b
+  computes.
+* ``nearest``: snap to the nearest kept representative value (the idealized
+  quantizer many QAT papers use). Tests assert both coincide on full masks.
+
+Gradients flow through a straight-through estimator (STE), making the module
+usable inside any training step (paper MLPs *and* LM frontends).
+
+All functions are shape-polymorphic and `vmap`/`pjit` friendly; masks are
+ordinary arrays so the NSGA-II population axis can be vmapped.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def level_values(bits: int, vmin: float = 0.0, vmax: float = 1.0) -> jnp.ndarray:
+    """Representative (reconstruction) value of each of the 2^bits levels.
+
+    Level k covers the interval [k, k+1) / 2^bits of the range; its
+    representative is the interval midpoint (what the digital classifier
+    consumes after the ADC).
+    """
+    n = 2 ** bits
+    return vmin + (jnp.arange(n, dtype=jnp.float32) + 0.5) * (vmax - vmin) / n
+
+
+def encode(x: jnp.ndarray, bits: int, vmin: float = 0.0, vmax: float = 1.0
+           ) -> jnp.ndarray:
+    """Full (unpruned) ADC transfer function: analog -> integer code."""
+    n = 2 ** bits
+    k = jnp.floor((x - vmin) / (vmax - vmin) * n).astype(jnp.int32)
+    return jnp.clip(k, 0, n - 1)
+
+
+def tree_lut(mask: jnp.ndarray) -> jnp.ndarray:
+    """Map every original code k to the kept level the pruned comparator tree
+    resolves to. ``mask``: (2^bits,) {0,1}. Returns (2^bits,) int32.
+
+    Vectorised tree walk: maintain per-code [lo, hi) interval; at each depth,
+    if both halves contain kept levels, branch on k < mid; otherwise take the
+    (only) live half — that is the bypassed comparator of the pruned circuit.
+    If the mask is all-zero the LUT degenerates to level 0 (callers must keep
+    >= 1 level; the GA repair step enforces >= 2).
+    """
+    n = mask.shape[-1]
+    bits = n.bit_length() - 1
+    cs = jnp.concatenate([jnp.zeros(1, jnp.int32),
+                          jnp.cumsum(mask.astype(jnp.int32))])
+    k = jnp.arange(n, dtype=jnp.int32)
+    lo = jnp.zeros(n, jnp.int32)
+    hi = jnp.full((n,), n, jnp.int32)
+    for _ in range(bits):
+        mid = (lo + hi) // 2
+        left_alive = (cs[mid] - cs[lo]) > 0
+        right_alive = (cs[hi] - cs[mid]) > 0
+        go_left = jnp.where(left_alive & right_alive, k < mid, left_alive)
+        lo = jnp.where(go_left, lo, mid)
+        hi = jnp.where(go_left, mid, hi)
+    return lo
+
+
+def _nearest_lut(mask: jnp.ndarray) -> jnp.ndarray:
+    """LUT variant of nearest-kept-level (for the idealized semantics)."""
+    n = mask.shape[-1]
+    idx = jnp.arange(n, dtype=jnp.int32)
+    dist = jnp.abs(idx[:, None] - idx[None, :]).astype(jnp.float32)
+    dist = jnp.where(mask[None, :] > 0, dist, jnp.inf)
+    return jnp.argmin(dist, axis=-1).astype(jnp.int32)
+
+
+def adc_quantize(x: jnp.ndarray,
+                 mask: Optional[jnp.ndarray] = None,
+                 *,
+                 bits: int,
+                 vmin: float = 0.0,
+                 vmax: float = 1.0,
+                 mode: str = "tree",
+                 ste: bool = True) -> jnp.ndarray:
+    """Quantize ``x`` through a (possibly pruned) binary-search ADC.
+
+    x: any shape. mask: None (full ADC) | (2^bits,) shared | (C, 2^bits)
+    per-channel, where C == x.shape[-1]. Returns same shape/dtype as x.
+    """
+    n = 2 ** bits
+    values = level_values(bits, vmin, vmax).astype(jnp.float32)
+    xf = x.astype(jnp.float32)
+    code = encode(xf, bits, vmin, vmax)
+    if mask is None:
+        level = code
+        xq = values[level]
+    else:
+        mask = mask.astype(jnp.int32)
+        lut_fn = tree_lut if mode == "tree" else _nearest_lut
+        if mask.ndim == 1:
+            lut = lut_fn(mask)                      # (n,)
+            level = lut[code]
+            xq = values[level]
+        elif mask.ndim == 2:
+            if mask.shape[0] != x.shape[-1]:
+                raise ValueError(
+                    f"per-channel mask C={mask.shape[0]} != last dim {x.shape[-1]}")
+            lut = jax.vmap(lut_fn)(mask)            # (C, n)
+            flat = code.reshape(-1, x.shape[-1])    # (M, C)
+            level = jnp.take_along_axis(lut, flat.T, axis=1).T.reshape(code.shape)
+            xq = values[level]
+        else:
+            raise ValueError(f"mask ndim must be 1 or 2, got {mask.ndim}")
+    xq = xq.astype(x.dtype)
+    if ste:
+        xq = x + jax.lax.stop_gradient(xq - x)
+    return xq
+
+
+@functools.partial(jax.jit, static_argnames=("bits", "mode"))
+def adc_codes(x: jnp.ndarray, mask: jnp.ndarray, *, bits: int,
+              mode: str = "tree") -> jnp.ndarray:
+    """Integer kept-level codes (circuit digital output) — used by tests and
+    the Pallas kernel oracle."""
+    code = encode(x, bits)
+    lut_fn = tree_lut if mode == "tree" else _nearest_lut
+    if mask.ndim == 1:
+        return lut_fn(mask.astype(jnp.int32))[code]
+    lut = jax.vmap(lut_fn)(mask.astype(jnp.int32))
+    flat = code.reshape(-1, x.shape[-1])
+    return jnp.take_along_axis(lut, flat.T, axis=1).T.reshape(code.shape)
+
+
+def init_full_mask(bits: int, channels: Optional[int] = None) -> jnp.ndarray:
+    n = 2 ** bits
+    if channels is None:
+        return jnp.ones((n,), jnp.int32)
+    return jnp.ones((channels, n), jnp.int32)
+
+
+def repair_mask(mask: jnp.ndarray, min_levels: int = 2) -> jnp.ndarray:
+    """GA repair: guarantee at least ``min_levels`` kept levels per channel
+    (an ADC with < 2 levels carries no information). Deterministically turns
+    on the lowest-index pruned levels when needed. Works on (n,) or (C, n)."""
+    m = mask.astype(jnp.int32)
+    kept = m.sum(axis=-1, keepdims=True)
+    # rank pruned levels by index; enable first (min_levels - kept) of them
+    order = jnp.argsort(m, axis=-1, stable=True)      # zeros first
+    rank_of = jnp.argsort(order, axis=-1)
+    need = jnp.maximum(min_levels - kept, 0)
+    return jnp.where((m == 0) & (rank_of < need), 1, m)

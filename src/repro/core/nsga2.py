@@ -1,0 +1,121 @@
+"""NSGA-II (Deb et al. 2002) on binary genomes — the paper's search engine.
+
+Same operator set the paper configures in pymoo: binary tournament on
+(rank, crowding), uniform crossover with probability ``pc`` = 0.7, bit-flip
+mutation with per-individual probability ``pm`` = 0.2 (applied per bit at
+rate pm_bit = pm / sqrt(G) by default, see DESIGN.md §6.3), elitist
+(mu + lambda) survival via fast non-dominated sort + crowding distance.
+
+Vectorised numpy: populations are (P, G) uint8, fitnesses (P, M) float
+(all objectives MINIMIZED). Deterministic under a seeded Generator.
+"""
+from __future__ import annotations
+
+from typing import Callable, Optional, Tuple
+
+import numpy as np
+
+
+def fast_non_dominated_sort(F: np.ndarray) -> np.ndarray:
+    """Pareto rank (0 = front) for fitness matrix F (P, M), minimization."""
+    P = F.shape[0]
+    # dominated[i, j] = i dominates j
+    le = (F[:, None, :] <= F[None, :, :]).all(-1)
+    lt = (F[:, None, :] < F[None, :, :]).any(-1)
+    dom = le & lt
+    n_dom = dom.sum(0)                   # how many dominate j
+    rank = np.full(P, -1, np.int32)
+    front = np.where(n_dom == 0)[0]
+    r = 0
+    while front.size:
+        rank[front] = r
+        n_dom = n_dom - dom[front].sum(0)
+        n_dom[rank >= 0] = np.iinfo(np.int32).max // 2
+        front = np.where(n_dom == 0)[0]
+        r += 1
+    return rank
+
+
+def crowding_distance(F: np.ndarray, rank: np.ndarray) -> np.ndarray:
+    P, M = F.shape
+    dist = np.zeros(P)
+    for r in np.unique(rank):
+        idx = np.where(rank == r)[0]
+        if idx.size <= 2:
+            dist[idx] = np.inf
+            continue
+        for m in range(M):
+            order = idx[np.argsort(F[idx, m], kind="stable")]
+            fmin, fmax = F[order[0], m], F[order[-1], m]
+            dist[order[0]] = dist[order[-1]] = np.inf
+            if fmax - fmin <= 0:
+                continue
+            gap = (F[order[2:], m] - F[order[:-2], m]) / (fmax - fmin)
+            dist[order[1:-1]] += gap
+    return dist
+
+
+def _tournament(rng, rank, dist, k=2):
+    P = rank.shape[0]
+    cand = rng.integers(0, P, size=(P, k))
+    best = cand[:, 0]
+    for j in range(1, k):
+        c = cand[:, j]
+        better = (rank[c] < rank[best]) | ((rank[c] == rank[best]) & (dist[c] > dist[best]))
+        best = np.where(better, c, best)
+    return best
+
+
+def evolve(eval_fn: Callable[[np.ndarray], np.ndarray],
+           genome_len: int,
+           pop_size: int = 32,
+           generations: int = 20,
+           pc: float = 0.7,
+           pm: float = 0.2,
+           pm_bit: Optional[float] = None,
+           seed: int = 0,
+           init: Optional[np.ndarray] = None,
+           log: Optional[Callable[[int, np.ndarray, np.ndarray], None]] = None,
+           ) -> Tuple[np.ndarray, np.ndarray]:
+    """Run NSGA-II. ``eval_fn``: (P, G) uint8 -> (P, M) fitness (minimize).
+    Returns (population, fitness) of the final archive (all evaluated, elitist).
+    """
+    rng = np.random.default_rng(seed)
+    if pm_bit is None:
+        pm_bit = pm / max(np.sqrt(genome_len), 1.0)
+    if init is None:
+        pop = (rng.random((pop_size, genome_len)) < 0.5).astype(np.uint8)
+        pop[0] = 1                                   # seed the full (unpruned) design
+    else:
+        pop = init.astype(np.uint8).copy()
+        pop_size = pop.shape[0]
+    fit = np.asarray(eval_fn(pop), np.float64)
+    for g in range(generations):
+        rank = fast_non_dominated_sort(fit)
+        dist = crowding_distance(fit, rank)
+        parents_a = _tournament(rng, rank, dist)
+        parents_b = _tournament(rng, rank, dist)
+        xa, xb = pop[parents_a], pop[parents_b]
+        do_x = (rng.random((pop_size, 1)) < pc)
+        mix = rng.random((pop_size, genome_len)) < 0.5
+        child = np.where(do_x & mix, xb, xa)
+        flip = rng.random((pop_size, genome_len)) < pm_bit
+        child = np.where(flip, 1 - child, child).astype(np.uint8)
+        cfit = np.asarray(eval_fn(child), np.float64)
+        # (mu + lambda) elitist survival
+        allpop = np.concatenate([pop, child])
+        allfit = np.concatenate([fit, cfit])
+        r = fast_non_dominated_sort(allfit)
+        d = crowding_distance(allfit, r)
+        order = np.lexsort((-d, r))
+        keep = order[:pop_size]
+        pop, fit = allpop[keep], allfit[keep]
+        if log is not None:
+            log(g, pop, fit)
+    return pop, fit
+
+
+def pareto_front(pop: np.ndarray, fit: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
+    rank = fast_non_dominated_sort(fit)
+    sel = rank == 0
+    return pop[sel], fit[sel]

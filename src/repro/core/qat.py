@@ -1,0 +1,54 @@
+"""Quantization-aware training utilities (paper §3.2 / §4.1).
+
+The paper's baseline classifiers are bespoke printed MLPs with 8-bit
+fixed-point *power-of-2* weights [20]; the GA genome carries the decimal
+point position of the coefficients. We implement:
+
+* ``quantize_po2(w, dp)`` — project to sign * 2^e with e in the 8-bit
+  fixed-point exponent window selected by decimal position ``dp`` (STE).
+* ``quantize_fixed(w, dp, bits)`` — plain fixed-point fake-quant (used for
+  activation quantization and ablations).
+
+Both are vmap-safe (``dp`` may be a traced scalar per GA individual).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def _ste(x, xq):
+    return x + jax.lax.stop_gradient(xq - x)
+
+
+def quantize_po2(w: jnp.ndarray, dp, bits: int = 8) -> jnp.ndarray:
+    """Power-of-2 weight quantization with decimal-point position ``dp``.
+
+    Representable magnitudes: 2^e for e in [dp - (bits - 1), dp], plus 0.
+    dp is the integer exponent of the largest representable power (the
+    genome's decimal point position).
+    """
+    dp = jnp.asarray(dp, jnp.float32)
+    e_hi = dp
+    e_lo = dp - (bits - 1)
+    mag = jnp.abs(w).astype(jnp.float32)
+    e = jnp.clip(jnp.round(jnp.log2(jnp.maximum(mag, 1e-12))), e_lo, e_hi)
+    q = jnp.sign(w) * jnp.exp2(e)
+    # underflow-to-zero: anything below half the smallest power is 0
+    q = jnp.where(mag < jnp.exp2(e_lo) * 0.5, 0.0, q)
+    return _ste(w, q.astype(w.dtype))
+
+
+def quantize_fixed(x: jnp.ndarray, dp, bits: int = 8) -> jnp.ndarray:
+    """Symmetric fixed-point fake-quant: step 2^(dp - bits + 1), range +-2^dp."""
+    dp = jnp.asarray(dp, jnp.float32)
+    step = jnp.exp2(dp - (bits - 1))
+    hi = jnp.exp2(dp) - step
+    q = jnp.clip(jnp.round(x / step) * step, -hi - step, hi)
+    return _ste(x, q.astype(x.dtype))
+
+
+def quantize_tree(params, dp, bits: int = 8, mode: str = "po2"):
+    """Apply weight fake-quant to every leaf of a param pytree."""
+    fn = quantize_po2 if mode == "po2" else quantize_fixed
+    return jax.tree_util.tree_map(lambda w: fn(w, dp, bits), params)

@@ -1,0 +1,151 @@
+"""In-training ADC optimization (paper §3.2): NSGA-II over per-channel
+level masks + weight decimal positions, with quantization-aware training in
+the inner loop, minimizing {1 - accuracy, normalized ADC area}.
+
+Beyond-paper systems contribution (DESIGN.md §2): the paper evaluates GA
+individuals one-by-one through pymoo. Here the *entire population's* QAT is
+one ``jax.vmap``-batched program (identical math, P× arithmetic intensity),
+optionally sharded over the mesh's ``data`` axis — evolutionary QAT as an
+SPMD workload. On a 256-chip pod a 256-individual generation trains in the
+wall-time of one individual.
+
+Genome layout per individual (C input channels, N-bit ADC):
+  [ C * 2^N mask bits | 4 bits decimal-point position (dp in [-8, 7]) ]
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+from typing import Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import adc, area, nsga2
+from repro.models import mlp as mlp_lib
+
+DP_BITS = 4
+
+
+@dataclass(frozen=True)
+class SearchConfig:
+    bits: int = 4
+    pop_size: int = 32
+    generations: int = 16
+    train_steps: int = 300
+    lr: float = 5e-2
+    weight_bits: int = 8
+    min_levels: int = 2
+    seed: int = 0
+    mode: str = "tree"            # circuit-faithful pruned-ADC semantics
+    design: str = "ours"          # area model used in the fitness
+    model: str = "mlp"            # 'mlp' | 'svm' (paper targets both)
+
+
+def genome_len(channels: int, bits: int) -> int:
+    return channels * 2 ** bits + DP_BITS
+
+
+def decode_genome(genome: jnp.ndarray, channels: int, bits: int,
+                  min_levels: int = 2) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """genome (G,) uint8 -> (mask (C, 2^N) int32, dp scalar float)."""
+    n = 2 ** bits
+    mask = genome[: channels * n].reshape(channels, n).astype(jnp.int32)
+    mask = adc.repair_mask(mask, min_levels)
+    dpb = genome[channels * n: channels * n + DP_BITS].astype(jnp.int32)
+    dp = jnp.sum(dpb * (2 ** jnp.arange(DP_BITS))) - 8   # [-8, 7]
+    return mask, dp.astype(jnp.float32)
+
+
+def _train_eval_one(genome, data, sizes, cfg: SearchConfig):
+    """QAT one individual: returns test accuracy (scalar). vmap target.
+    Trains the paper's MLP or, with cfg.model == 'svm', a linear SVM
+    (squared-hinge one-vs-rest) on the ADC-quantized inputs."""
+    from repro.models import svm as svm_lib
+    from repro.optim import adamw
+    channels = sizes[0]
+    mask, dp = decode_genome(genome, channels, cfg.bits, cfg.min_levels)
+    xq_tr = adc.adc_quantize(data["x_train"], mask, bits=cfg.bits, mode=cfg.mode)
+    xq_te = adc.adc_quantize(data["x_test"], mask, bits=cfg.bits, mode=cfg.mode)
+    if cfg.model == "svm":
+        params = svm_lib.init_svm(jax.random.PRNGKey(cfg.seed), channels,
+                                  sizes[-1])
+        loss_of = lambda p: svm_lib.svm_loss(p, xq_tr, data["y_train"], dp)
+        acc_of = lambda p: svm_lib.accuracy(p, xq_te, data["y_test"], dp)
+    else:
+        params = mlp_lib.init_mlp(jax.random.PRNGKey(cfg.seed), sizes)
+
+        def loss_of(p):
+            logits = mlp_lib.apply_mlp(p, xq_tr, dp, cfg.weight_bits)
+            logp = jax.nn.log_softmax(logits)
+            onehot = jax.nn.one_hot(data["y_train"], sizes[-1])
+            return -(onehot * logp).sum(-1).mean()
+
+        acc_of = lambda p: mlp_lib.accuracy(p, xq_te, data["y_test"], dp)
+    opt = adamw.init(params)
+
+    def step(carry, _):
+        p, o = carry
+        g = jax.grad(loss_of)(p)
+        p, o = adamw.update(g, o, p, lr=cfg.lr)
+        return (p, o), ()
+
+    (params, _), _ = jax.lax.scan(step, (params, opt), length=cfg.train_steps)
+    return acc_of(params)
+
+
+@functools.partial(jax.jit, static_argnames=("sizes", "cfg"))
+def evaluate_population_acc(genomes: jnp.ndarray, data: Dict, sizes: Tuple[int, ...],
+                            cfg: SearchConfig) -> jnp.ndarray:
+    """(P, G) genomes -> (P,) test accuracies. One vmapped QAT program."""
+    fn = lambda g: _train_eval_one(g, data, sizes, cfg)
+    return jax.vmap(fn)(genomes)
+
+
+def evaluate_population(genomes: np.ndarray, data: Dict, sizes, cfg: SearchConfig
+                        ) -> np.ndarray:
+    """Full fitness: [1 - accuracy, normalized ADC area] (both minimized)."""
+    dev_data = {k: jnp.asarray(v) for k, v in data.items()}
+    accs = np.asarray(evaluate_population_acc(
+        jnp.asarray(genomes, jnp.uint8), dev_data, tuple(sizes), cfg))
+    n = 2 ** cfg.bits
+    C = sizes[0]
+    flash_full = area.flash_full_tc(cfg.bits) * C
+    areas = np.empty(len(genomes))
+    for i, g in enumerate(genomes):
+        mask = np.asarray(g[: C * n].reshape(C, n))
+        mask = np.asarray(adc.repair_mask(jnp.asarray(mask), cfg.min_levels))
+        areas[i] = area.system_tc(mask, cfg.design) / max(flash_full, 1)
+    return np.stack([1.0 - accs, areas], axis=1)
+
+
+def run_search(data: Dict, sizes, cfg: SearchConfig,
+               log: Optional[Callable] = None):
+    """Full in-training optimization. Returns (pareto_genomes, pareto_fit,
+    decode) where fit columns are [1-acc, normalized area]."""
+    C = sizes[0]
+    G = genome_len(C, cfg.bits)
+    eval_fn = lambda pop: evaluate_population(pop, data, sizes, cfg)
+    pop, fit = nsga2.evolve(
+        eval_fn, G, pop_size=cfg.pop_size, generations=cfg.generations,
+        seed=cfg.seed, log=log)
+    pg, pf = nsga2.pareto_front(pop, fit)
+    decode = lambda g: decode_genome(jnp.asarray(g), C, cfg.bits, cfg.min_levels)
+    return pg, pf, decode
+
+
+def full_adc_baseline(data: Dict, sizes, cfg: SearchConfig) -> Dict[str, float]:
+    """Reference point: full (unpruned) ADC + QAT — the paper's 'Baseline'
+    column in Table 5, plus the three full-design area models."""
+    C = sizes[0]
+    G = genome_len(C, cfg.bits)
+    genome = np.ones((1, G), np.uint8)
+    genome[0, -DP_BITS:] = [1, 0, 1, 0]              # dp = 5 - 8 = -3
+    fit = evaluate_population(genome, data, sizes, cfg)
+    return {
+        "accuracy": 1.0 - float(fit[0, 0]),
+        "area_flash_tc": area.flash_full_tc(cfg.bits) * C,
+        "area_binary_baseline_tc": area.baseline_binary_tc(cfg.bits) * C,
+        "area_binary_ours_tc": area.ours_full_tc(cfg.bits) * C,
+    }

@@ -1,0 +1,59 @@
+"""Elastic scaling: rebuild the mesh from the devices that are actually
+alive and reshard state through the checkpoint (DESIGN.md §4).
+
+Policy (matches how large pod jobs degrade in practice): the 'model' axis is
+pinned by the architecture's TP factor and must survive; capacity loss is
+absorbed by shrinking the 'data' (and 'pod') axes to the largest full
+multiple available. Restart then reshards the latest checkpoint against the
+new mesh (CheckpointManager.restore with the new shardings) and the
+data pipeline re-derives per-shard batches from the step number.
+"""
+from __future__ import annotations
+
+from typing import Optional, Sequence
+
+import jax
+
+from repro.launch import mesh as mesh_lib
+
+
+def plan_mesh(n_devices: int, *, model: int = 16, chips_per_pod: int = 256):
+    """Largest (pod, data, model) grid using <= n_devices devices. The pod
+    count follows physical pods (256 chips each); capacity loss inside a
+    pod shrinks 'data'; TP degrades last (to a power of two) only when
+    fewer than `model` devices survive."""
+    if n_devices < model:
+        m = 1
+        while m * 2 <= n_devices:
+            m *= 2
+        return (1, max(n_devices // m, 1), m)
+    rest = n_devices // model
+    pods = max(n_devices // chips_per_pod, 1)
+    while pods > 1 and rest % pods:
+        pods -= 1
+    return (pods, rest // pods, model)
+
+
+def make_elastic_mesh(devices: Optional[Sequence] = None, *, model: int = 16):
+    """Mesh over surviving devices. Drops remainder devices that don't fill
+    the grid (they rejoin at the next restart boundary)."""
+    devices = list(devices if devices is not None else jax.devices())
+    pods, data, tp = plan_mesh(len(devices), model=model)
+    n = pods * data * tp
+    import numpy as np
+    arr = np.array(devices[:n]).reshape(
+        (pods, data, tp) if pods > 1 else (data, tp))
+    axes = ("pod", "data", "model") if pods > 1 else ("data", "model")
+    from jax.sharding import Mesh
+    return Mesh(arr, axes)
+
+
+def reshard_state(ckpt, step: int, state_like, new_mesh, cfg):
+    """Restore a checkpoint against a NEW mesh (device count changed)."""
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    from repro.distributed import sharding as sh
+    pshard = sh.param_shardings(state_like.params, new_mesh, cfg)
+    rep = NamedSharding(new_mesh, P())
+    opt_sh = type(state_like.opt)(step=rep, m=pshard, v=pshard)
+    shardings = type(state_like)(params=pshard, opt=opt_sh, err=None)
+    return ckpt.restore(step, state_like, shardings)

@@ -1,0 +1,14 @@
+"""Pallas TPU kernels for the compute hot-spots (each with a pure-jnp
+oracle in ref.py and a jit'd dispatcher in ops.py; validated in interpret
+mode on CPU, targeted at TPU v5e VMEM/MXU):
+
+  adc_quantize     — the paper's analog-frontend hot path: pruned
+                     binary-search-ADC quantization as a one-hot selection
+                     sum over VMEM code->value tables.
+  qmlp             — fused ADC + printed-MLP forward (serving path of the
+                     paper's classifier system).
+  flash_attention  — online-softmax attention with VMEM scratch; the
+                     §Perf-identified lever for prefill/train score traffic
+                     at LM scale.
+"""
+from repro.kernels import ops, ref  # noqa: F401

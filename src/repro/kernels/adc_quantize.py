@@ -1,0 +1,63 @@
+"""Pallas TPU kernel: batched binary-search-ADC quantization.
+
+TPU adaptation of the paper's comparator tree (DESIGN.md §2): the pruned
+tree collapses to a per-channel code->value table (VALUES, built once per
+mask by ref.value_table). Gathers are weak on the TPU vector unit, so the
+lookup is expressed as a one-hot *selection sum* over the 2^N codes —
+N<=6 unrolls into pure VPU compare/select/fma ops on (block_m, C) tiles
+held in VMEM. Arithmetic intensity is ~2^N flops/elem, so the kernel is
+HBM-bound and the tile pipeline (double-buffered via the grid) keeps it at
+streaming bandwidth.
+
+Layout: x (M, C) f32/bf16, VALUES (C, 2^N) f32 resident in VMEM per tile,
+out (M, C). Grid tiles M; C stays whole (sensor counts are small; ops.py
+falls back to the jnp path for C > 4096 or bits > 6).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(x_ref, table_ref, o_ref, *, bits: int, vmin: float, vmax: float):
+    n = 2 ** bits
+    x = x_ref[...].astype(jnp.float32)                  # (bm, C)
+    scale = n / (vmax - vmin)
+    code = jnp.floor((x - vmin) * scale)
+    code = jnp.clip(code, 0.0, float(n - 1))            # (bm, C) f32 codes
+    out = jnp.zeros_like(x)
+    table = table_ref[...]                              # (C, n) f32
+    for k in range(n):                                  # static unroll
+        out = out + jnp.where(code == float(k), table[:, k][None, :], 0.0)
+    o_ref[...] = out.astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("bits", "vmin", "vmax", "block_m",
+                                    "interpret"))
+def adc_quantize_pallas(x: jnp.ndarray, table: jnp.ndarray, *, bits: int,
+                        vmin: float = 0.0, vmax: float = 1.0,
+                        block_m: int = 512, interpret: bool = True
+                        ) -> jnp.ndarray:
+    """x: (M, C); table: (C, 2^bits). Returns quantized (M, C)."""
+    m, c = x.shape
+    bm = min(block_m, m)
+    pad = (-m) % bm
+    if pad:
+        x = jnp.pad(x, ((0, pad), (0, 0)))
+    grid = (x.shape[0] // bm,)
+    out = pl.pallas_call(
+        functools.partial(_kernel, bits=bits, vmin=vmin, vmax=vmax),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, c), lambda i: (i, 0)),
+            pl.BlockSpec((c, 2 ** bits), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bm, c), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((x.shape[0], c), x.dtype),
+        interpret=interpret,
+    )(x, table.astype(jnp.float32))
+    return out[:m]

@@ -1,0 +1,121 @@
+"""Pallas TPU flash attention — the remaining dominant lever from the
+roofline analysis (§Perf it.5): keep score/probability blocks in VMEM so
+prefill/train attention stops round-tripping O(S²) bytes through HBM.
+
+Canonical TPU structure: grid (batch*kv_heads*rep, num_q_blocks,
+num_kv_blocks) with the kv dimension iterated sequentially ("arbitrary"),
+carrying the online-softmax state (m, l, acc) in VMEM scratch; the output
+block is written at the last kv step. BlockSpecs tile q/k/v/out so each
+step's working set is (q_block + kv_block)·dh + q_block·kv_block floats —
+VMEM-resident for the default 512x512 tiles (1.3 MB fp32 at dh=128).
+
+Semantics == layers.flash_attention == layers.attention (tests sweep
+shapes/dtypes, causal + sliding-window + softcap, in interpret mode).
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG = -1e30
+
+
+def _kernel(qpos_ref, kpos_ref, q_ref, k_ref, v_ref, o_ref,
+            m_ref, l_ref, acc_ref, *, scale, causal, window, cap, nk):
+    kv_step = pl.program_id(2)
+
+    @pl.when(kv_step == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0]                                      # (qb, dh)
+    k = k_ref[0]                                      # (kb, dh)
+    v = v_ref[0]
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+    if cap:
+        s = jnp.tanh(s / cap) * cap
+    dpos = qpos_ref[...][:, None].astype(jnp.int32) \
+        - kpos_ref[...][None, :].astype(jnp.int32)
+    ok = kpos_ref[...][None, :] >= 0
+    if causal:
+        ok &= dpos >= 0
+    if window:
+        ok &= dpos < window
+    s = jnp.where(ok, s, NEG)
+
+    m_prev = m_ref[...]
+    l_prev = l_ref[...]
+    m_new = jnp.maximum(m_prev, s.max(-1))
+    corr = jnp.where(m_prev <= NEG, 0.0, jnp.exp(m_prev - m_new))
+    p = jnp.where((m_new <= NEG)[:, None], 0.0, jnp.exp(s - m_new[:, None]))
+    m_ref[...] = m_new
+    l_ref[...] = l_prev * corr + p.sum(-1)
+    acc_ref[...] = acc_ref[...] * corr[:, None] + jax.lax.dot_general(
+        p.astype(v.dtype), v, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+
+    @pl.when(kv_step == nk - 1)
+    def _finish():
+        denom = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0] = (acc_ref[...] / denom[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("causal", "window", "attn_softcap",
+                              "q_block", "kv_block", "interpret"))
+def flash_attention_pallas(q, k, v, q_positions, k_positions, *,
+                           causal: bool = True, window: int = 0,
+                           attn_softcap: float = 0.0, q_block: int = 512,
+                           kv_block: int = 512, interpret: bool = True):
+    """q: (B,S,H,dh), k/v: (B,Sk,KV,dh), positions int32 (S,)/(Sk,).
+    Returns (B,S,H,dh). GQA via head replication indices in the BlockSpecs
+    (no materialised k/v repeat)."""
+    b, sq, h, dh = q.shape
+    sk, kvh = k.shape[1], k.shape[2]
+    rep = h // kvh
+    scale = 1.0 / math.sqrt(dh)
+    qb = min(q_block, sq)
+    kb = min(kv_block, sk)
+    assert sq % qb == 0 and sk % kb == 0, (sq, qb, sk, kb)
+    nq, nk = sq // qb, sk // kb
+    # flatten (B,H) into the leading grid dim; kv head = h // rep
+    qf = q.transpose(0, 2, 1, 3).reshape(b * h, sq, dh)
+    kf = k.transpose(0, 2, 1, 3).reshape(b * kvh, sk, dh)
+    vf = v.transpose(0, 2, 1, 3).reshape(b * kvh, sk, dh)
+    grid = (b * h, nq, nk)
+
+    out = pl.pallas_call(
+        functools.partial(_kernel, scale=scale, causal=causal,
+                          window=window, cap=attn_softcap, nk=nk),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((qb,), lambda bh, i, j: (i,)),
+            pl.BlockSpec((kb,), lambda bh, i, j: (j,)),
+            pl.BlockSpec((1, qb, dh), lambda bh, i, j: (bh, i, 0)),
+            pl.BlockSpec((1, kb, dh),
+                         lambda bh, i, j, rep=rep, kvh=kvh:
+                         ((bh // (rep * kvh)) * kvh + (bh % (rep * kvh)) // rep,
+                          j, 0)),
+            pl.BlockSpec((1, kb, dh),
+                         lambda bh, i, j, rep=rep, kvh=kvh:
+                         ((bh // (rep * kvh)) * kvh + (bh % (rep * kvh)) // rep,
+                          j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, qb, dh), lambda bh, i, j: (bh, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((b * h, sq, dh), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((qb,), jnp.float32),       # running max
+            pltpu.VMEM((qb,), jnp.float32),       # running denom
+            pltpu.VMEM((qb, dh), jnp.float32),    # output accumulator
+        ],
+        interpret=interpret,
+    )(q_positions.astype(jnp.int32), k_positions.astype(jnp.int32), qf, kf, vf)
+    return out.reshape(b, h, sq, dh).transpose(0, 2, 1, 3)

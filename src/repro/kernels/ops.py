@@ -1,0 +1,50 @@
+"""Public jit'd wrappers for the Pallas kernels with automatic fallback to
+the jnp reference when the kernel's static envelope doesn't apply
+(bits > 6 unrolls too far; huge channel counts exceed a VMEM tile).
+
+On this CPU container the kernels run in interpret mode (the kernel body
+executes in Python per tile); on TPU set interpret=False (default when a
+TPU backend is detected).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels.adc_quantize import adc_quantize_pallas
+from repro.kernels.qmlp import bespoke_mlp_pallas
+
+_MAX_UNROLL_BITS = 6
+_MAX_CHANNELS = 4096
+
+
+def _interpret_default() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def adc_quantize(x: jnp.ndarray, mask: jnp.ndarray, *, bits: int,
+                 vmin: float = 0.0, vmax: float = 1.0, mode: str = "tree",
+                 interpret: bool | None = None) -> jnp.ndarray:
+    """Quantize (M, C) samples through per-channel pruned binary-search ADCs
+    (kernel when applicable, jnp oracle otherwise)."""
+    table = ref.value_table(mask, bits, vmin, vmax, mode)
+    if bits > _MAX_UNROLL_BITS or x.shape[-1] > _MAX_CHANNELS:
+        return ref.adc_quantize_ref(x, table, bits, vmin, vmax)
+    if interpret is None:
+        interpret = _interpret_default()
+    return adc_quantize_pallas(x, table, bits=bits, vmin=vmin, vmax=vmax,
+                               interpret=interpret)
+
+
+def bespoke_mlp(x, mask, w1, b1, w2, b2, *, bits: int, vmin: float = 0.0,
+                vmax: float = 1.0, mode: str = "tree",
+                interpret: bool | None = None):
+    """Fused ADC + 1-hidden-layer printed MLP inference."""
+    table = ref.value_table(mask, bits, vmin, vmax, mode)
+    if bits > _MAX_UNROLL_BITS or x.shape[-1] > _MAX_CHANNELS:
+        return ref.bespoke_mlp_ref(x, table, bits, w1, b1, w2, b2, vmin, vmax)
+    if interpret is None:
+        interpret = _interpret_default()
+    return bespoke_mlp_pallas(x, table, w1, b1, w2, b2, bits=bits,
+                              vmin=vmin, vmax=vmax, interpret=interpret)

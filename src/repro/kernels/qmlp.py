@@ -1,0 +1,67 @@
+"""Pallas TPU kernel: fused analog-frontend + bespoke printed-MLP forward.
+
+One kernel invocation per batch tile performs
+    ADC-quantize (one-hot selection sum, as in adc_quantize.py)
+ -> x @ W1 + b1 (MXU)  -> ReLU  -> h @ W2 + b2 (MXU)
+with W1/W2/b1/b2 and the ADC table fully VMEM-resident (printed MLPs are
+tiny: F, H, O <= a few hundred). Fusing removes two HBM round-trips for the
+xq/h intermediates — the serving hot path of the paper's classifier system.
+
+fp32 accumulation; output fp32 logits.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(x_ref, table_ref, w1_ref, b1_ref, w2_ref, b2_ref, o_ref, *,
+            bits: int, vmin: float, vmax: float):
+    n = 2 ** bits
+    x = x_ref[...].astype(jnp.float32)                  # (bm, F)
+    scale = n / (vmax - vmin)
+    code = jnp.clip(jnp.floor((x - vmin) * scale), 0.0, float(n - 1))
+    xq = jnp.zeros_like(x)
+    table = table_ref[...]
+    for k in range(n):
+        xq = xq + jnp.where(code == float(k), table[:, k][None, :], 0.0)
+    h = jnp.dot(xq, w1_ref[...], preferred_element_type=jnp.float32)
+    h = jnp.maximum(h + b1_ref[...][None, :], 0.0)
+    o = jnp.dot(h, w2_ref[...], preferred_element_type=jnp.float32)
+    o_ref[...] = o + b2_ref[...][None, :]
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("bits", "vmin", "vmax", "block_m",
+                                    "interpret"))
+def bespoke_mlp_pallas(x, table, w1, b1, w2, b2, *, bits: int,
+                       vmin: float = 0.0, vmax: float = 1.0,
+                       block_m: int = 256, interpret: bool = True):
+    m, f = x.shape
+    h = w1.shape[1]
+    o = w2.shape[1]
+    bm = min(block_m, m)
+    pad = (-m) % bm
+    if pad:
+        x = jnp.pad(x, ((0, pad), (0, 0)))
+    grid = (x.shape[0] // bm,)
+    out = pl.pallas_call(
+        functools.partial(_kernel, bits=bits, vmin=vmin, vmax=vmax),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, f), lambda i: (i, 0)),
+            pl.BlockSpec((f, 2 ** bits), lambda i: (0, 0)),
+            pl.BlockSpec((f, h), lambda i: (0, 0)),
+            pl.BlockSpec((h,), lambda i: (0,)),
+            pl.BlockSpec((h, o), lambda i: (0, 0)),
+            pl.BlockSpec((o,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((bm, o), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((x.shape[0], o), jnp.float32),
+        interpret=interpret,
+    )(x, table.astype(jnp.float32), w1.astype(jnp.float32),
+      b1.astype(jnp.float32), w2.astype(jnp.float32), b2.astype(jnp.float32))
+    return out[:m]

@@ -1,0 +1,40 @@
+"""Pure-jnp oracles for every Pallas kernel (kernel-vs-ref allclose tests).
+These are the *semantic* references; `repro.core.adc` is the modelling API
+and tests assert the three agree."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import adc
+
+
+def value_table(mask: jnp.ndarray, bits: int, vmin: float = 0.0,
+                vmax: float = 1.0, mode: str = "tree") -> jnp.ndarray:
+    """Per-channel code->reconstruction-value table: VALUES[c, k] is the
+    analog value the pruned ADC returns for raw code k on channel c.
+    mask: (C, 2^bits). Returns (C, 2^bits) f32."""
+    values = adc.level_values(bits, vmin, vmax)
+    lut_fn = adc.tree_lut if mode == "tree" else adc._nearest_lut
+    lut = jax.vmap(lut_fn)(mask.astype(jnp.int32))        # (C, n)
+    return values[lut]
+
+
+def adc_quantize_ref(x: jnp.ndarray, table: jnp.ndarray, bits: int,
+                     vmin: float = 0.0, vmax: float = 1.0) -> jnp.ndarray:
+    """x: (M, C); table: (C, 2^bits) from value_table. Returns (M, C)."""
+    n = 2 ** bits
+    code = jnp.clip(jnp.floor((x - vmin) / (vmax - vmin) * n), 0, n - 1
+                    ).astype(jnp.int32)                    # (M, C)
+    return jnp.take_along_axis(table.T, code, axis=0).astype(x.dtype)
+
+
+def bespoke_mlp_ref(x: jnp.ndarray, table: jnp.ndarray, bits: int,
+                    w1: jnp.ndarray, b1: jnp.ndarray,
+                    w2: jnp.ndarray, b2: jnp.ndarray,
+                    vmin: float = 0.0, vmax: float = 1.0) -> jnp.ndarray:
+    """Fused analog-frontend + printed-MLP forward:
+    logits = relu(ADC(x) @ w1 + b1) @ w2 + b2."""
+    xq = adc_quantize_ref(x, table, bits, vmin, vmax)
+    h = jax.nn.relu(xq @ w1 + b1)
+    return h @ w2 + b2

@@ -1,0 +1,424 @@
+"""Roofline analysis from compiled dry-run artifacts (EXPERIMENTS.md §Roofline).
+
+The container is CPU-only, so wall-time MFU cannot be measured; instead the
+three roofline terms are derived from the post-SPMD HLO (shapes in the
+module are already per-partition):
+
+  compute term    = HLO_dot_flops_per_device / peak_FLOP/s
+  memory term     = HLO_traffic_bytes_per_device / HBM_bw
+  collective term = collective_bytes_per_device / link_bw
+
+XLA's ``compiled.cost_analysis()`` counts while-loop bodies ONCE, which
+under-reports scanned layer stacks by ~num_layers x. This parser therefore
+walks the HLO text, recovers per-computation trip-count multipliers (while
+conditions compare an induction variable against a constant) and call edges
+(fusions, calls, while bodies), and scales op costs accordingly. Tests
+validate the parser against analytic FLOPs on small models.
+
+Hardware model: TPU v5e — 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link ICI.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import re
+from collections import defaultdict
+from typing import Dict, List, Optional, Tuple
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+LINK_BW = 50e9
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "s4": 1, "u4": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_SHAPE_RE = re.compile(r"\b([a-z][a-z0-9]*)\[([\d,]*)\]")
+_COMP_HDR = re.compile(r"^\s*(?:ENTRY\s+)?%?([\w.\-]+)\s*\([^)]*\)\s*->")
+_WHILE_RE = re.compile(r"while\(.*?\)|while\(")
+_ATTR_COMP = re.compile(r"(condition|body|calls|to_apply)=\{?%?([\w.\-]+)")
+_CONST_CMP = re.compile(r"constant\((\d+)\)")
+_DIRECTION = re.compile(r"direction=(LT|LE|GT|GE|NE|EQ)")
+
+
+def _shape_bytes(dtype: str, dims: str) -> Tuple[int, int]:
+    b = _DTYPE_BYTES.get(dtype)
+    if b is None:
+        return 0, 0
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n, n * b
+
+
+@dataclasses.dataclass
+class HloStats:
+    flops: float = 0.0
+    traffic_bytes: float = 0.0
+    collective_bytes: float = 0.0
+    collectives: Dict[str, float] = dataclasses.field(
+        default_factory=lambda: defaultdict(float))
+    collective_ops: int = 0
+    dot_ops: int = 0
+    top_traffic: List = dataclasses.field(default_factory=list)
+    top_collectives: List = dataclasses.field(default_factory=list)
+
+    def to_dict(self):
+        return {"flops": self.flops, "traffic_bytes": self.traffic_bytes,
+                "collective_bytes": self.collective_bytes,
+                "collectives": dict(self.collectives),
+                "collective_ops": self.collective_ops,
+                "dot_ops": self.dot_ops,
+                "top_traffic": self.top_traffic,
+                "top_collectives": self.top_collectives}
+
+
+def _split_computations(text: str) -> Dict[str, List[str]]:
+    """Computation headers sit at column 0 and end with '{'; instructions
+    are indented. (Regex-matching the header param list breaks on
+    tuple-typed params, so key off indentation.) The header line itself is
+    kept as element 0 — it declares parameter shapes."""
+    comps: Dict[str, List[str]] = {}
+    cur: Optional[str] = None
+    for line in text.splitlines():
+        if line and not line[0].isspace() and line.rstrip().endswith("{"):
+            head = line.split("(", 1)[0].strip()
+            name = head.split()[-1].lstrip("%")
+            cur = name
+            comps[cur] = [line]
+            continue
+        if cur is not None:
+            if line.strip() == "}":
+                cur = None
+                continue
+            comps[cur].append(line)
+    return comps
+
+
+_PARAM_DECL = re.compile(r"([\w.\-]+):\s*([a-z][a-z0-9]*)\[([\d,]*)\]")
+_INSTR_DECL = re.compile(r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(.*)$")
+
+
+def _shape_table(lines: List[str]) -> Dict[str, Tuple[str, Tuple[int, ...]]]:
+    """name -> (dtype, dims) for every instruction (and non-tuple params)."""
+    table: Dict[str, Tuple[str, Tuple[int, ...]]] = {}
+    if lines:
+        for name, dt, dims in _PARAM_DECL.findall(lines[0]):
+            table[name] = (dt, tuple(int(d) for d in dims.split(",") if d))
+    for line in lines[1:]:
+        m = _INSTR_DECL.match(line)
+        if not m:
+            continue
+        name, rhs = m.group(1), m.group(2)
+        sm = _SHAPE_RE.search(rhs.split("(")[0] or rhs)
+        if sm:
+            dt, dims = sm.group(1), sm.group(2)
+            table[name] = (dt, tuple(int(d) for d in dims.split(",") if d))
+    return table
+
+
+def _line_shapes(line: str) -> List[Tuple[str, str]]:
+    return _SHAPE_RE.findall(line)
+
+
+def _result_bytes(line: str) -> int:
+    """Bytes of the result of an instruction line '%x = <shape> op(...)'."""
+    if "=" not in line:
+        return 0
+    rhs = line.split("=", 1)[1]
+    total = 0
+    # result may be a tuple '(f32[..], f32[..])' — count shapes before opname
+    head = rhs.split("(", 1)[0] if re.match(r"\s*\(", rhs) is None else rhs
+    for dt, dims in _SHAPE_RE.findall(head.split(")")[0] if head.startswith(" (")
+                                      else head):
+        total += _shape_bytes(dt, dims)[1]
+    return total
+
+
+_DOT_RE = re.compile(r"=\s*((?:\([^)]*\))|(?:[a-z][a-z0-9]*\[[\d,]*\]\S*))\s+"
+                     r"(dot|convolution)\(([^)]*)\)")
+_CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
+
+
+def _dot_flops(line: str, table: Dict[str, Tuple[str, Tuple[int, ...]]]
+               ) -> float:
+    m = _DOT_RE.search(line)
+    if not m:
+        return 0.0
+    shapes = _SHAPE_RE.findall(line.split("(")[0])
+    if not shapes:
+        return 0.0
+    res_elems = _shape_bytes(*shapes[0])[0]
+    if m.group(2) == "convolution":
+        # depthwise/feature convs: approx 2 * result * window elems
+        win = re.search(r"window=\{size=([\dx]+)", line)
+        wsize = 1
+        if win:
+            for d in win.group(1).split("x"):
+                wsize *= int(d)
+        return 2.0 * res_elems * wsize
+    cm = _CONTRACT_RE.search(line)
+    if cm is None:
+        return 2.0 * res_elems
+    # lhs operand: first name inside dot(...); shapes live in the table
+    operands = [o.strip().lstrip("%") for o in m.group(3).split(",")]
+    lhs = table.get(operands[0]) if operands else None
+    if lhs is None:
+        return 2.0 * res_elems
+    k = 1
+    for idx in (int(i) for i in cm.group(1).split(",") if i):
+        if idx < len(lhs[1]):
+            k *= lhs[1][idx]
+    return 2.0 * res_elems * k
+
+
+_COLL_KIND = re.compile(
+    r"=\s*(?:\([^)]*\)|[a-z][a-z0-9]*\[[\d,]*\]\S*)\s+"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"[\w.-]*\(")
+_COLL_FACTOR = {"all-reduce": 2.0, "all-gather": 1.0, "reduce-scatter": 1.0,
+                "all-to-all": 1.0, "collective-permute": 1.0}
+
+
+def computation_multipliers(comps: Dict[str, List[str]]
+                            ) -> Tuple[Dict[str, float], set]:
+    """How many times each computation executes per step (while-loop trip
+    counts from 'compare(ind, constant(N)), direction=LT' conditions).
+    Also returns the set of *fused/applied* computations: their instructions
+    live in registers/VMEM, not HBM — traffic must not count them."""
+    fused: set = set()
+    edges: List[Tuple[str, str, float]] = []     # (caller, callee, factor)
+    for name, lines in comps.items():
+        for line in lines:
+            attrs = dict()
+            for kind, target in _ATTR_COMP.findall(line):
+                attrs.setdefault(kind, target)
+            if "body" in attrs and "condition" in attrs:
+                cond = attrs["condition"]
+                n = None
+                for cl in comps.get(cond, []):
+                    if "compare" in cl and _DIRECTION.search(cl):
+                        cc = _CONST_CMP.findall(cl)
+                        if cc:
+                            n = int(cc[-1])
+                if n is None:
+                    for cl in comps.get(cond, []):
+                        cc = _CONST_CMP.findall(cl)
+                        if cc:
+                            n = int(cc[-1])
+                edges.append((name, attrs["body"], float(n if n else 1)))
+                edges.append((name, cond, float((n if n else 1) + 1)))
+            else:
+                for kind, target in _ATTR_COMP.findall(line):
+                    if kind in ("calls", "to_apply"):
+                        edges.append((name, target, 1.0))
+                        fused.add(target)
+    mult: Dict[str, float] = defaultdict(float)
+    entry = None
+    for name in comps:
+        if "main" in name:
+            entry = name
+            break
+    if entry is None and comps:
+        entry = next(iter(comps))
+    mult[entry] = 1.0
+    # propagate in topological-ish passes (call graph is a DAG in HLO)
+    for _ in range(64):
+        changed = False
+        new = defaultdict(float)
+        new[entry] = 1.0
+        for caller, callee, f in edges:
+            if mult.get(caller):
+                new[callee] += mult[caller] * f
+        for k, v in new.items():
+            if abs(mult.get(k, 0.0) - v) > 1e-9:
+                changed = True
+        mult = new
+        if not changed:
+            break
+    return dict(mult), fused
+
+
+_META_RE = re.compile(r'op_name="([^"]*)"')
+
+# ops that alias buffers / carry loop state — no HBM movement of their own
+_ALIAS_OPS = {"parameter", "get-tuple-element", "tuple", "while",
+              "conditional", "bitcast", "constant", "after-all",
+              "opt-barrier"}
+_OPNAME_RE = re.compile(
+    r"=\s*(?:\([^)]*\)\s*|[a-z][a-z0-9]*\[[\d,]*\]\S*\s+)([a-z][\w\-]*)\(")
+
+
+def _op_name(line: str) -> str:
+    m = _OPNAME_RE.search(line)
+    return m.group(1) if m else ""
+
+
+def _op_label(line: str) -> str:
+    m = _META_RE.search(line)
+    if m:
+        tail = m.group(1).split("/")
+        return "/".join(tail[-3:])[:90]
+    return line.strip().split(" ")[0][:60]
+
+
+_DUS_OPERANDS = re.compile(r"dynamic-update-slice[\w.\-]*\(([^)]*)\)")
+
+
+def _dus_update_bytes(lines: List[str], table) -> Optional[int]:
+    """If a computation's ROOT is a dynamic-update-slice, the bytes that
+    actually move are the update operand's (in-place semantics)."""
+    for line in lines[1:]:
+        if "ROOT" in line and "dynamic-update-slice" in line:
+            m = _DUS_OPERANDS.search(line)
+            if not m:
+                return None
+            names = [o.strip().lstrip("%") for o in m.group(1).split(",")]
+            if len(names) >= 2 and names[1] in table:
+                dt_, dims_ = table[names[1]]
+                return _shape_bytes(dt_, ",".join(map(str, dims_)))[1]
+    return None
+
+
+_CALLS_RE = re.compile(r"calls=\{?%?([\w.\-]+)")
+
+
+def hlo_stats(text: str, top_k: int = 12) -> HloStats:
+    comps = _split_computations(text)
+    mult, fused = computation_multipliers(comps)
+    # pre-pass: fusion bodies rooted in dynamic-update-slice move only the
+    # update slice (XLA in-place fusion), not the whole carried buffer
+    dus_bytes: Dict[str, int] = {}
+    for name in fused:
+        lines = comps.get(name, [])
+        b = _dus_update_bytes(lines, _shape_table(lines))
+        if b is not None:
+            dus_bytes[name] = b
+    st = HloStats()
+    traffic_items: List[Tuple[float, str]] = []
+    coll_items: List[Tuple[float, str]] = []
+    for name, lines in comps.items():
+        m = mult.get(name, 0.0)
+        if m <= 0:
+            continue
+        in_fusion = name in fused
+        table = _shape_table(lines)
+        for line in lines[1:]:
+            fl = _dot_flops(line, table)
+            if fl:
+                st.flops += fl * m
+                st.dot_ops += 1
+            if in_fusion:
+                continue            # fused ops never round-trip HBM
+            op = _op_name(line)
+            if op in _ALIAS_OPS:
+                continue            # aliasing / loop plumbing: no traffic
+            if op == "dynamic-update-slice":
+                # in-place: only the update operand moves, not the buffer
+                ops_m = _DUS_OPERANDS.search(line)
+                rb = 0
+                if ops_m:
+                    names = [o.strip().lstrip("%")
+                             for o in ops_m.group(1).split(",")]
+                    if len(names) >= 2 and names[1] in table:
+                        dt_, dims_ = table[names[1]]
+                        rb = _shape_bytes(dt_, ",".join(map(str, dims_)))[1]
+            elif op == "fusion":
+                cm_ = _CALLS_RE.search(line)
+                target = cm_.group(1) if cm_ else None
+                rb = (dus_bytes[target] if target in dus_bytes
+                      else _result_bytes(line))
+            else:
+                rb = _result_bytes(line)
+            if rb:
+                t = 2.0 * rb * m                      # write + ~one read
+                st.traffic_bytes += t
+                traffic_items.append((t, f"{op} {_op_label(line)}"))
+            cm = _COLL_KIND.search(line)
+            if cm:
+                kind = cm.group(1)
+                size = rb * _COLL_FACTOR[kind]
+                st.collective_bytes += size * m
+                st.collectives[kind] += size * m
+                st.collective_ops += 1
+                coll_items.append((size * m, f"{kind} {_op_label(line)}"))
+    traffic_items.sort(key=lambda kv: -kv[0])
+    coll_items.sort(key=lambda kv: -kv[0])
+    st.top_traffic = [[round(v), lbl] for v, lbl in traffic_items[:top_k]]
+    st.top_collectives = [[round(v), lbl] for v, lbl in coll_items[:top_k]]
+    return st
+
+
+def roofline(stats: HloStats, *, chips: int, model_flops_global: float,
+             ideal_bytes_per_dev: float = 0.0) -> Dict[str, float]:
+    compute_s = stats.flops / PEAK_FLOPS
+    memory_s = stats.traffic_bytes / HBM_BW
+    coll_s = stats.collective_bytes / LINK_BW
+    dominant = max(("compute", compute_s), ("memory", memory_s),
+                   ("collective", coll_s), key=lambda kv: kv[1])[0]
+    bound = max(compute_s, memory_s, coll_s)
+    useful = model_flops_global / max(stats.flops * chips, 1.0)
+    mfu = (model_flops_global / chips / PEAK_FLOPS) / max(bound, 1e-30)
+    out = {"compute_s": compute_s, "memory_s": memory_s,
+           "collective_s": coll_s, "dominant": dominant,
+           "model_flops_global": model_flops_global,
+           "useful_flops_ratio": min(useful, 1.0),
+           "roofline_fraction": min(mfu, 1.0)}
+    if ideal_bytes_per_dev:
+        # for memory-dominated cells the perf score is achieved-bandwidth:
+        # the unavoidable HBM traffic (params/opt/cache streamed once per
+        # use) over the traffic the compiled program actually does.
+        out["ideal_bytes_per_dev"] = ideal_bytes_per_dev
+        out["bandwidth_fraction"] = min(
+            ideal_bytes_per_dev / max(stats.traffic_bytes, 1.0), 1.0)
+        out["score"] = (out["bandwidth_fraction"] if dominant == "memory"
+                        else out["roofline_fraction"])
+    return out
+
+
+def ideal_bytes(cfg, shape, chips: int, n_microbatches: int = 1) -> float:
+    """Unavoidable per-device HBM traffic per step (documented lower bound):
+      train:   params re-read fwd+bwd per microbatch (2 x n_mb) + optimizer
+               update (read m,v,params + write all: ~3x(params+opt)),
+      prefill: params once + 2L activation writes/reads,
+      decode:  params(active) + the KV/SSM cache, each streamed once.
+    """
+    pb = {"float32": 4, "bfloat16": 2}.get(cfg.param_dtype, 4)
+    ob = {"float32": 4, "bfloat16": 2}.get(cfg.opt_state_dtype, 4)
+    n_total = cfg.param_counts()["total"]
+    n_active = cfg.param_counts()["active"]
+    params_b = n_total * pb / chips
+    opt_b = 2 * n_total * ob / chips
+    act_b = (shape.global_batch * shape.seq_len * cfg.d_model
+             * 2 * 2 * cfg.num_layers / chips)
+    if shape.kind == "train":
+        return params_b * 2 * n_microbatches + 3 * (params_b + opt_b) + act_b
+    if shape.kind == "prefill":
+        return params_b + act_b
+    # decode
+    cache_b = 0.0
+    if cfg.num_kv_heads:
+        clen = min(shape.seq_len, cfg.window) if cfg.attn_type == "sliding" \
+            else shape.seq_len
+        cache_b = (cfg.num_layers * shape.global_batch * clen
+                   * cfg.num_kv_heads * cfg.resolved_head_dim * 2 * 2) / chips
+    if cfg.ssm is not None:
+        from repro.models import ssm as ssm_lib
+        dm = ssm_lib.dims(cfg.d_model, cfg.ssm)
+        cache_b += (cfg.num_layers * shape.global_batch * dm["nheads"]
+                    * cfg.ssm.state_dim * cfg.ssm.head_dim * 4) / chips
+    return n_active * pb / chips + cache_b
+
+
+def model_flops(cfg, shape) -> float:
+    """Analytic MODEL_FLOPS: 6*N*D train (N=active params, D=tokens);
+    2*N*D for inference forward; decode counts the single new token."""
+    n_active = cfg.param_counts()["active"]
+    if shape.kind == "train":
+        return 6.0 * n_active * shape.seq_len * shape.global_batch
+    if shape.kind == "prefill":
+        return 2.0 * n_active * shape.seq_len * shape.global_batch
+    return 2.0 * n_active * shape.global_batch       # decode: 1 token/seq

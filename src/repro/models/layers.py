@@ -1,0 +1,235 @@
+"""Shared transformer building blocks: RMSNorm, RoPE (+ M-RoPE), GQA
+attention (full / q-blocked / banded-sliding / decode), SwiGLU MLP.
+
+Everything is a pure function over explicit param dicts; layer stacks are
+``lax.scan``-ed by the caller (keeps HLO small on the 1-core CPU container
+and on real pods keeps compile time flat in depth).
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+
+def rms_norm(x: jnp.ndarray, w: jnp.ndarray, eps: float = 1e-6) -> jnp.ndarray:
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return ((xf * lax.rsqrt(var + eps)) * (1.0 + w.astype(jnp.float32))).astype(dt)
+
+
+def softcap(x: jnp.ndarray, cap: float) -> jnp.ndarray:
+    if not cap:
+        return x
+    return jnp.tanh(x / cap) * cap
+
+
+# ------------------------------------------------------------------- RoPE
+def rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float,
+         sections: Optional[tuple] = None) -> jnp.ndarray:
+    """Rotary embedding. x: (B, S, H, Dh). positions: (B, S) int or, for
+    M-RoPE (Qwen2-VL), (B, S, 3) with (t, h, w) components and ``sections``
+    summing to Dh/2 giving the per-component frequency split."""
+    b, s, h, dh = x.shape
+    half = dh // 2
+    freqs = theta ** (-jnp.arange(half, dtype=jnp.float32) / half)  # (half,)
+    if sections is not None and positions.ndim == 3:
+        assert sum(sections) == half, (sections, half)
+        comp = jnp.concatenate(
+            [jnp.full((n,), i, jnp.int32) for i, n in enumerate(sections)])
+        pos = jnp.take_along_axis(
+            positions.astype(jnp.float32),                      # (B,S,3)
+            jnp.broadcast_to(comp[None, None], (b, s, half)), axis=-1)
+        angle = pos * freqs[None, None, :]                      # (B,S,half)
+    else:
+        if positions.ndim == 3:
+            positions = positions[..., 0]
+        angle = positions.astype(jnp.float32)[..., None] * freqs  # (B,S,half)
+    cos = jnp.cos(angle)[:, :, None, :]
+    sin = jnp.sin(angle)[:, :, None, :]
+    x1, x2 = x[..., :half].astype(jnp.float32), x[..., half:].astype(jnp.float32)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# -------------------------------------------------------------- attention
+def _sdpa(q, k, v, q_pos, k_pos, *, causal, window, cap, scale,
+          guard_empty_rows: bool = False):
+    """Scores-materialising GQA attention over given q/k blocks.
+    q: (B,Sq,H,dh)  k,v: (B,Sk,KV,dh)  q_pos: (B,Sq) or (Sq,)  k_pos: (Sk,)
+
+    Perf notes (§Perf iteration 1): matmuls run on bf16 inputs with fp32
+    accumulation (MXU-native, halves dot operand traffic); softmax weights
+    are cast back to the value dtype before PV; the fully-masked-row guard
+    only exists on the banded path (causal rows always see the diagonal)."""
+    bq, sq, hq, dh = q.shape
+    kvh = k.shape[2]
+    rep = hq // kvh
+    qr = q.reshape(bq, sq, kvh, rep, dh)
+    scores = jnp.einsum("bqkrd,bskd->bkrqs", qr, k,
+                        preferred_element_type=jnp.float32) * scale
+    scores = softcap(scores, cap)
+    if q_pos.ndim == 1:
+        q_pos = q_pos[None]
+    dposm = q_pos[:, None, None, :, None] - k_pos[None, None, None, None, :]
+    mask = jnp.ones(dposm.shape, bool)
+    if causal:
+        mask &= dposm >= 0
+    if window:
+        mask &= dposm < window
+    scores = jnp.where(mask, scores, -1e30)
+    w = jax.nn.softmax(scores, axis=-1)
+    if guard_empty_rows:
+        w = jnp.where(mask.any(-1, keepdims=True), w, 0.0)
+    out = jnp.einsum("bkrqs,bskd->bqkrd", w.astype(v.dtype), v,
+                     preferred_element_type=jnp.float32)
+    return out.reshape(bq, sq, hq, dh).astype(q.dtype)
+
+
+def attention(q, k, v, *, q_positions, k_positions, causal=True,
+              window: Optional[int] = None, attn_softcap: float = 0.0,
+              q_block: int = 512) -> jnp.ndarray:
+    """GQA attention, q-blocked via scan to bound score memory.
+
+    For ``window`` (sliding) attention the kv range per q block is *banded*:
+    only the (window + q_block) keys that can be attended are sliced in,
+    making prefill cost O(S * window) instead of O(S^2).
+    """
+    b, sq, h, dh = q.shape
+    sk = k.shape[1]
+    scale = 1.0 / math.sqrt(dh)
+    if q_positions.ndim == 1:
+        q_positions = jnp.broadcast_to(q_positions[None], (b, sq))
+    if sq <= q_block:
+        return _sdpa(q, k, v, q_positions, k_positions, causal=causal,
+                     window=window, cap=attn_softcap, scale=scale)
+    assert sq % q_block == 0, (sq, q_block)
+    nb = sq // q_block
+    qb = q.reshape(b, nb, q_block, h, dh).transpose(1, 0, 2, 3, 4)
+    pb = q_positions.reshape(b, nb, q_block).transpose(1, 0, 2)
+    banded = window is not None and (window + q_block) < sk
+
+    def body(_, blk):
+        qi, pi, start = blk
+        if banded:
+            span = window + q_block
+            s0 = jnp.maximum(start - window, 0)
+            s0 = jnp.minimum(s0, sk - span)
+            ki = lax.dynamic_slice_in_dim(k, s0, span, axis=1)
+            vi = lax.dynamic_slice_in_dim(v, s0, span, axis=1)
+            kpi = lax.dynamic_slice_in_dim(k_positions, s0, span, axis=0)
+        else:
+            ki, vi, kpi = k, v, k_positions
+        out = _sdpa(qi, ki, vi, pi, kpi, causal=causal, window=window,
+                    cap=attn_softcap, scale=scale, guard_empty_rows=banded)
+        return None, out
+
+    starts = jnp.arange(nb, dtype=jnp.int32) * q_block
+    _, outs = lax.scan(body, None, (qb, pb, starts))
+    return outs.transpose(1, 0, 2, 3, 4).reshape(b, sq, h, dh)
+
+
+def decode_attention(q, k_cache, v_cache, *, q_position, k_positions,
+                     window: Optional[int] = None, attn_softcap: float = 0.0):
+    """Single-token attention against a (possibly ring-buffer) cache.
+    q: (B,1,H,dh); caches (B,W,KV,dh); k_positions (B,W) absolute positions
+    with -1 marking empty slots."""
+    b, _, h, dh = q.shape
+    kvh = k_cache.shape[2]
+    rep = h // kvh
+    scale = 1.0 / math.sqrt(dh)
+    qr = q.reshape(b, kvh, rep, dh)
+    scores = jnp.einsum("bkrd,bskd->bkrs", qr, k_cache,
+                        preferred_element_type=jnp.float32) * scale
+    scores = softcap(scores, attn_softcap)
+    dpos = q_position[:, None] - k_positions                     # (B,W)
+    valid = (k_positions >= 0) & (dpos >= 0)
+    if window:
+        valid &= dpos < window
+    scores = jnp.where(valid[:, None, None, :], scores, -1e30)
+    w = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkrs,bskd->bkrd", w.astype(v_cache.dtype), v_cache,
+                     preferred_element_type=jnp.float32)
+    return out.reshape(b, 1, h, dh).astype(q.dtype)
+
+
+def flash_attention(q, k, v, *, q_positions, k_positions, causal=True,
+                    window=None, attn_softcap: float = 0.0,
+                    q_block: int = 512, kv_block: int = 1024) -> jnp.ndarray:
+    """Streaming (FlashAttention-style) online-softmax attention: two-level
+    scan over (q blocks x kv blocks) with running (max, denom, acc) — score
+    tensors never materialise at (Sq x Sk), so HBM traffic is O(S*d) K/V
+    re-reads instead of O(S^2) score round-trips.
+
+    Forward-only (serving/prefill): reverse-mode through the inner scan
+    would stash per-step residuals — training keeps the q-blocked
+    score-materialising path (the Pallas kernel is the TPU answer there).
+    """
+    b, sq, h, dh = q.shape
+    sk = k.shape[1]
+    kvh = k.shape[2]
+    rep = h // kvh
+    scale = 1.0 / math.sqrt(dh)
+    if q_positions.ndim == 1:
+        q_positions = jnp.broadcast_to(q_positions[None], (b, sq))
+    assert sq % q_block == 0, (sq, q_block)
+    padk = (-sk) % kv_block
+    if padk:
+        k = jnp.pad(k, ((0, 0), (0, padk), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, padk), (0, 0), (0, 0)))
+        k_positions = jnp.pad(k_positions, (0, padk), constant_values=-1)
+    nq, nk = sq // q_block, (sk + padk) // kv_block
+    qs = q.reshape(b, nq, q_block, h, dh).transpose(1, 0, 2, 3, 4)
+    ps = q_positions.reshape(b, nq, q_block).transpose(1, 0, 2)
+    ks = k.reshape(b, nk, kv_block, kvh, dh).transpose(1, 0, 2, 3, 4)
+    vs = v.reshape(b, nk, kv_block, kvh, dh).transpose(1, 0, 2, 3, 4)
+    kps = k_positions.reshape(nk, kv_block)
+    neg = jnp.float32(-jnp.inf)
+
+    def q_body(_, blk):
+        qi, pi = blk                                     # (b,qb,h,dh),(b,qb)
+        qr = qi.reshape(b, q_block, kvh, rep, dh)
+
+        def kv_body(carry, kblk):
+            m, l, acc = carry
+            kj, vj, kpj = kblk
+            s = jnp.einsum("bqkrd,bskd->bkrqs", qr, kj,
+                           preferred_element_type=jnp.float32) * scale
+            s = softcap(s, attn_softcap)
+            dpos = pi[:, None, None, :, None] - kpj[None, None, None, None, :]
+            ok = kpj[None, None, None, None, :] >= 0
+            if causal:
+                ok &= dpos >= 0
+            if window:
+                ok &= dpos < window
+            s = jnp.where(ok, s, neg)
+            m_new = jnp.maximum(m, s.max(-1))
+            corr = jnp.where(m == neg, 0.0, jnp.exp(m - m_new))
+            p = jnp.where(m_new[..., None] == neg, 0.0,
+                          jnp.exp(s - m_new[..., None]))
+            l = l * corr + p.sum(-1)
+            acc = acc * corr[..., None] + jnp.einsum(
+                "bkrqs,bskd->bkrqd", p.astype(vj.dtype), vj,
+                preferred_element_type=jnp.float32)
+            return (m_new, l, acc), None
+
+        m0 = jnp.full((b, kvh, rep, q_block), neg, jnp.float32)
+        l0 = jnp.zeros((b, kvh, rep, q_block), jnp.float32)
+        a0 = jnp.zeros((b, kvh, rep, q_block, dh), jnp.float32)
+        (m, l, acc), _ = lax.scan(kv_body, (m0, l0, a0), (ks, vs, kps))
+        out = acc / jnp.maximum(l, 1e-30)[..., None]     # (b,kvh,rep,qb,dh)
+        return None, out.transpose(0, 3, 1, 2, 4).reshape(b, q_block, h, dh)
+
+    _, outs = lax.scan(q_body, None, (qs, ps))
+    return outs.transpose(1, 0, 2, 3, 4).reshape(b, sq, h, dh).astype(q.dtype)
+
+
+# ------------------------------------------------------------------- MLP
+def swiglu(x, wi, wg, wo):
+    h = jnp.einsum("bsd,df->bsf", x, wi.astype(x.dtype))
+    g = jnp.einsum("bsd,df->bsf", x, wg.astype(x.dtype))
+    return jnp.einsum("bsf,fd->bsd", jax.nn.silu(g) * h, wo.astype(x.dtype))

@@ -1,0 +1,353 @@
+"""Serving paths: prefill (build KV/SSM caches) and single-token decode.
+
+Cache layouts (leading L = stacked layers, scanned):
+  attention: ring buffers k/v (L, B, C, KV, hd) with C = min(S, window or S),
+             plus kpos (C,) absolute positions (-1 = empty). Ring semantics
+             double as StreamingLLM-style eviction for full-attention archs.
+  ssm:       conv tail (L, B, conv_w-1, C_conv) + state (L, B, H, N, P).
+  local_global (gemma2): separate stacks for local (window ring) and global
+             (full length) layer caches.
+
+``decode_*`` shapes in the assigned grid lower these functions (one new
+token against a seq_len cache), NOT train_step.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ArchConfig
+from repro.models import layers as L
+from repro.models import moe as moe_lib
+from repro.models import ssm as ssm_lib
+from repro.models import transformer as T
+
+
+# ------------------------------------------------------------ cache init
+def attn_cache_len(cfg: ArchConfig, seq_len: int, *, local: bool) -> int:
+    if local or cfg.attn_type == "sliding":
+        return min(cfg.window, seq_len)
+    return seq_len
+
+
+def init_cache(cfg: ArchConfig, batch: int, seq_len: int) -> Dict[str, Any]:
+    """Empty decode cache sized for a context of ``seq_len``."""
+    dt = jnp.dtype(cfg.dtype)
+    kv, hd = cfg.num_kv_heads, cfg.resolved_head_dim
+    n_scan = T._scan_len(cfg)
+    c: Dict[str, Any] = {"pos": jnp.zeros((), jnp.int32)}
+
+    def kvbuf(n, length):
+        return jnp.zeros((n, batch, length, kv, hd), dt)
+
+    if cfg.family in ("dense", "vlm", "audio", "moe"):
+        if cfg.attn_type == "local_global":
+            wloc = attn_cache_len(cfg, seq_len, local=True)
+            c.update(k=kvbuf(n_scan, wloc), v=kvbuf(n_scan, wloc),
+                     kpos=jnp.full((wloc,), -1, jnp.int32),
+                     k2=kvbuf(n_scan, seq_len), v2=kvbuf(n_scan, seq_len),
+                     kpos2=jnp.full((seq_len,), -1, jnp.int32))
+        else:
+            w = attn_cache_len(cfg, seq_len, local=False)
+            c.update(k=kvbuf(n_scan, w), v=kvbuf(n_scan, w),
+                     kpos=jnp.full((w,), -1, jnp.int32))
+        if cfg.moe and cfg.moe.first_k_dense:
+            npre = cfg.moe.first_k_dense
+            c.update(k_pre=kvbuf(npre, seq_len), v_pre=kvbuf(npre, seq_len))
+    if cfg.family in ("ssm", "hybrid"):
+        s = cfg.ssm
+        dm = ssm_lib.dims(cfg.d_model, s)
+        w = s.conv_width - 1
+        c.update(conv_x=jnp.zeros((n_scan, batch, w, dm["d_in"]), dt),
+                 conv_bc=jnp.zeros((n_scan, batch, w, dm["d_bc"]), dt),
+                 state=jnp.zeros((n_scan, batch, dm["nheads"], s.state_dim,
+                                  s.head_dim), jnp.float32))
+    if cfg.family == "hybrid":
+        w = attn_cache_len(cfg, seq_len, local=True)
+        c.update(k=kvbuf(n_scan, w), v=kvbuf(n_scan, w),
+                 kpos=jnp.full((w,), -1, jnp.int32))
+    return c
+
+
+# ----------------------------------------------------------------- decode
+def _qkv_one(p, x, cfg: ArchConfig, positions):
+    dt = x.dtype
+    q = jnp.einsum("bsd,dhk->bshk", x, p["q"].astype(dt))
+    k = jnp.einsum("bsd,dhk->bshk", x, p["k"].astype(dt))
+    v = jnp.einsum("bsd,dhk->bshk", x, p["v"].astype(dt))
+    if cfg.use_rope:
+        sections = cfg.mrope_sections if cfg.mrope else None
+        q = L.rope(q, positions, cfg.rope_theta, sections)
+        k = L.rope(k, positions, cfg.rope_theta, sections)
+    return q, k, v
+
+
+def _attend_decode(p, x, kc, vc, kpos, pos, cfg: ArchConfig, positions, *,
+                   window):
+    """x (B,1,D); kc/vc (B,C,KV,hd); kpos (C,). Returns (out, k_new, v_new)."""
+    q, k, v = _qkv_one(p, x, cfg, positions)
+    slot = pos % kc.shape[1]
+    kc = lax.dynamic_update_slice_in_dim(kc, k.astype(kc.dtype), slot, axis=1)
+    vc = lax.dynamic_update_slice_in_dim(vc, v.astype(vc.dtype), slot, axis=1)
+    qpos = positions[..., 0] if positions.ndim == 3 else positions
+    # the just-written slot must be attendable (self-attention of the new
+    # token); the cache-level kpos array is updated once per step outside.
+    kpos_eff = kpos.at[slot].set(qpos[0, 0].astype(kpos.dtype))
+    out = L.decode_attention(
+        q, kc, vc, q_position=qpos[:, 0],
+        k_positions=jnp.broadcast_to(kpos_eff[None],
+                                     (x.shape[0], kpos.shape[0])),
+        window=window, attn_softcap=cfg.attn_logit_softcap)
+    out = T._mask_pad_heads(out, cfg)
+    out = jnp.einsum("bshk,hkd->bsd", out, p["o"].astype(x.dtype))
+    return out, kc, vc
+
+
+def decode_step(params, batch, cache, cfg: ArchConfig, mesh):
+    """One token for the whole stack. batch: tokens/embeddings (B,1[,F]),
+    positions (B,1[,3]). Returns (logits (B,V) fp32, new_cache)."""
+    x = T.embed_input(params, batch, cfg)
+    positions = batch["positions"]
+    pos = cache["pos"]
+    new = dict(cache)
+
+    if cfg.moe and cfg.moe.first_k_dense:
+        dense_cfg = dataclasses.replace(cfg, family="dense", post_norm=False)
+        def pre_body(x, xs):
+            lp, kc, vc = xs
+            h = L.rms_norm(x, lp["ln1"], cfg.norm_eps)
+            a, kc, vc = _attend_decode(lp, h, kc, vc, cache["kpos"],
+                                       pos, dense_cfg, positions, window=None)
+            x = x + a
+            h = L.rms_norm(x, lp["ln2"], cfg.norm_eps)
+            return x + T._mlp(lp, h), (kc, vc)
+        x, (new["k_pre"], new["v_pre"]) = _scan_layers(
+            pre_body, x, (params["prelayers"], cache["k_pre"], cache["v_pre"]))
+
+    fam = cfg.family
+    if fam in ("dense", "vlm", "audio", "moe") and cfg.attn_type != "local_global":
+        window = cfg.window if cfg.attn_type == "sliding" else None
+        def body(x, xs):
+            lp, kc, vc = xs
+            h = L.rms_norm(x, lp["ln1"], cfg.norm_eps)
+            a, kc, vc = _attend_decode(lp, h, kc, vc, cache["kpos"], pos, cfg,
+                                       positions, window=window)
+            if cfg.post_norm:
+                a = L.rms_norm(a, lp["ln1p"], cfg.norm_eps)
+            x = x + a
+            h = L.rms_norm(x, lp["ln2"], cfg.norm_eps)
+            if fam == "moe":
+                y = moe_lib.moe_ffn_decode(h, lp["moe"], cfg.moe, mesh)
+                if cfg.moe.num_shared_experts:
+                    y = y + moe_lib.shared_ffn(h, lp["moe"])
+            else:
+                y = T._mlp(lp, h)
+                if cfg.post_norm:
+                    y = L.rms_norm(y, lp["ln2p"], cfg.norm_eps)
+            return x + y, (kc, vc)
+        x, (new["k"], new["v"]) = _scan_layers(
+            body, x, (params["layers"], cache["k"], cache["v"]))
+
+    elif fam == "dense" and cfg.attn_type == "local_global":
+        def one(lp, x, kc, vc, kposs, win):
+            h = L.rms_norm(x, lp["ln1"], cfg.norm_eps)
+            a, kc, vc = _attend_decode(lp, h, kc, vc, kposs, pos, cfg,
+                                       positions, window=win)
+            if cfg.post_norm:
+                a = L.rms_norm(a, lp["ln1p"], cfg.norm_eps)
+            x = x + a
+            h = L.rms_norm(x, lp["ln2"], cfg.norm_eps)
+            y = T._mlp(lp, h)
+            if cfg.post_norm:
+                y = L.rms_norm(y, lp["ln2p"], cfg.norm_eps)
+            return x + y, kc, vc
+
+        def body(x, xs):
+            lp1, lp2, kc, vc, kc2, vc2 = xs
+            x, kc, vc = one(lp1, x, kc, vc, cache["kpos"], cfg.window)
+            x, kc2, vc2 = one(lp2, x, kc2, vc2, cache["kpos2"], None)
+            return x, (kc, vc, kc2, vc2)
+        x, (new["k"], new["v"], new["k2"], new["v2"]) = _scan_layers(
+            body, x, (params["layers"], params["layers2"],
+                      cache["k"], cache["v"], cache["k2"], cache["v2"]))
+
+    elif fam == "ssm":
+        def body(x, xs):
+            lp, cx, cbc, state = xs
+            h = L.rms_norm(x, lp["ln1"], cfg.norm_eps)
+            y, nc = ssm_lib.ssd_decode(
+                lp["ssm"], h, {"conv_x": cx, "conv_bc": cbc, "state": state},
+                cfg.d_model, cfg.ssm)
+            return x + y, (nc["conv_x"], nc["conv_bc"], nc["state"])
+        x, (new["conv_x"], new["conv_bc"], new["state"]) = _scan_layers(
+            body, x, (params["layers"], cache["conv_x"], cache["conv_bc"],
+                      cache["state"]))
+
+    elif fam == "hybrid":
+        def body(x, xs):
+            lp, kc, vc, cx, cbc, state = xs
+            h = L.rms_norm(x, lp["ln1"], cfg.norm_eps)
+            a, kc, vc = _attend_decode(lp, h, kc, vc, cache["kpos"], pos, cfg,
+                                       positions, window=cfg.window)
+            s, nc = ssm_lib.ssd_decode(
+                lp["ssm"], h, {"conv_x": cx, "conv_bc": cbc, "state": state},
+                cfg.d_model, cfg.ssm)
+            a = L.rms_norm(a, lp["attn_scale"], cfg.norm_eps)
+            s = L.rms_norm(s, lp["ssm_scale"], cfg.norm_eps)
+            x = x + 0.5 * (a + s)
+            h = L.rms_norm(x, lp["ln2"], cfg.norm_eps)
+            return x + T._mlp(lp, h), (kc, vc, nc["conv_x"], nc["conv_bc"],
+                                       nc["state"])
+        x, (new["k"], new["v"], new["conv_x"], new["conv_bc"], new["state"]) = \
+            _scan_layers(body, x, (params["layers"], cache["k"], cache["v"],
+                                   cache["conv_x"], cache["conv_bc"],
+                                   cache["state"]))
+
+    # position bookkeeping (shared rings)
+    qpos = positions[..., 0] if positions.ndim == 3 else positions
+    cur = qpos[0, 0].astype(jnp.int32)
+    for key in ("kpos", "kpos2"):
+        if key in cache:
+            buf = cache[key]
+            new[key] = lax.dynamic_update_index_in_dim(
+                buf, cur, pos % buf.shape[0], axis=0)
+    new["pos"] = pos + 1
+
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    w = T.lm_head(params, x, cfg)
+    logits = jnp.einsum("bsd,dv->bsv", x, w.astype(x.dtype))[:, 0]
+    return L.softcap(logits.astype(jnp.float32), cfg.final_logit_softcap), new
+
+
+def _scan_layers(body, x, xs):
+    def f(carry, xs_):
+        y, out = body(carry, xs_)
+        return y, out
+    return lax.scan(f, x, xs)
+
+
+# ---------------------------------------------------------------- prefill
+def prefill(params, batch, cfg: ArchConfig, mesh, extra_slots: int = 0):
+    """Full-context forward that also builds the decode cache.
+    ``extra_slots`` reserves cache capacity for subsequent decode tokens
+    (with 0, decode ring-evicts the oldest entries, StreamingLLM-style).
+    Returns (last_position logits (B,V) fp32, cache)."""
+    x = T.embed_input(params, batch, cfg)
+    positions = batch["positions"]
+    B, S = x.shape[:2]
+    cache = init_cache(cfg, B, S + extra_slots)
+
+    def kv_of(lp, h, *, length):
+        _, k, v = _qkv_one(lp, h, cfg, positions)
+        k = k.astype(jnp.dtype(cfg.dtype))
+        v = v.astype(jnp.dtype(cfg.dtype))
+        if length <= S:
+            return k[:, -length:], v[:, -length:]
+        padw = ((0, 0), (0, length - S), (0, 0), (0, 0))
+        return jnp.pad(k, padw), jnp.pad(v, padw)
+
+    outs: Dict[str, Any] = {}
+    if cfg.moe and cfg.moe.first_k_dense:
+        dense_cfg = dataclasses.replace(cfg, family="dense", post_norm=False)
+        def pre_body(x, lp):
+            h = L.rms_norm(x, lp["ln1"], cfg.norm_eps)
+            kv = kv_of(lp, h, length=S + extra_slots)
+            x = x + T._attend(lp, h, dense_cfg, positions, window=None,
+                               streaming=False)  # streaming refuted in pure XLA: §Perf it.5
+            h2 = L.rms_norm(x, lp["ln2"], cfg.norm_eps)
+            return x + T._mlp(lp, h2), kv
+        x, (outs["k_pre"], outs["v_pre"]) = lax.scan(
+            pre_body, x, params["prelayers"])
+
+    fam = cfg.family
+    if fam in ("dense", "vlm", "audio", "moe") and cfg.attn_type != "local_global":
+        window = cfg.window if cfg.attn_type == "sliding" else None
+        wlen = attn_cache_len(cfg, S + extra_slots, local=False)
+        def body(carry, lp):
+            x, aux = carry
+            h = L.rms_norm(x, lp["ln1"], cfg.norm_eps)
+            kv = kv_of(lp, h, length=wlen)
+            a = T._attend(lp, h, cfg, positions, window=window,
+                          streaming=False)  # streaming refuted in pure XLA: §Perf it.5
+            if cfg.post_norm:
+                a = L.rms_norm(a, lp["ln1p"], cfg.norm_eps)
+            x = x + a
+            h = L.rms_norm(x, lp["ln2"], cfg.norm_eps)
+            if fam == "moe":
+                y, a2 = moe_lib.moe_ffn(h, lp["moe"], cfg.moe, mesh)
+                if cfg.moe.num_shared_experts:
+                    y = y + moe_lib.shared_ffn(h, lp["moe"])
+                aux = aux + a2
+            else:
+                y = T._mlp(lp, h)
+                if cfg.post_norm:
+                    y = L.rms_norm(y, lp["ln2p"], cfg.norm_eps)
+            return (x + y, aux), kv
+        (x, _), (outs["k"], outs["v"]) = lax.scan(
+            body, (x, jnp.zeros((), jnp.float32)), params["layers"])
+
+    elif fam == "dense" and cfg.attn_type == "local_global":
+        wloc = attn_cache_len(cfg, S + extra_slots, local=True)
+        def body(x, lps):
+            lp1, lp2 = lps
+            h = L.rms_norm(x, lp1["ln1"], cfg.norm_eps)
+            kv1 = kv_of(lp1, h, length=wloc)
+            x = T._dense_layer(lp1, x, cfg, positions, window=cfg.window,
+                               streaming=False)  # streaming refuted in pure XLA: §Perf it.5
+            h = L.rms_norm(x, lp2["ln1"], cfg.norm_eps)
+            kv2 = kv_of(lp2, h, length=S + extra_slots)
+            x = T._dense_layer(lp2, x, cfg, positions, window=None,
+                               streaming=False)  # streaming refuted in pure XLA: §Perf it.5
+            return x, (kv1, kv2)
+        x, ((outs["k"], outs["v"]), (outs["k2"], outs["v2"])) = lax.scan(
+            body, x, (params["layers"], params["layers2"]))
+
+    elif fam in ("ssm", "hybrid"):
+        wloc = attn_cache_len(cfg, S + extra_slots, local=True)
+        def body(x, lp):
+            h = L.rms_norm(x, lp["ln1"], cfg.norm_eps)
+            extras = {}
+            if fam == "hybrid":
+                kv = kv_of(lp, h, length=wloc)
+                a = T._attend(lp, h, cfg, positions, window=cfg.window,
+                              streaming=False)  # streaming refuted in pure XLA: §Perf it.5
+                s, st = ssm_lib.ssd_prefill(lp["ssm"], h, cfg.d_model, cfg.ssm)
+                a = L.rms_norm(a, lp["attn_scale"], cfg.norm_eps)
+                s = L.rms_norm(s, lp["ssm_scale"], cfg.norm_eps)
+                x = x + 0.5 * (a + s)
+                h2 = L.rms_norm(x, lp["ln2"], cfg.norm_eps)
+                x = x + T._mlp(lp, h2)
+                extras = (kv[0], kv[1], st["conv_x"], st["conv_bc"], st["state"])
+            else:
+                s, st = ssm_lib.ssd_prefill(lp["ssm"], h, cfg.d_model, cfg.ssm)
+                x = x + s
+                extras = (st["conv_x"], st["conv_bc"], st["state"])
+            return x, extras
+        x, extras = lax.scan(body, x, params["layers"])
+        if fam == "hybrid":
+            (outs["k"], outs["v"], outs["conv_x"], outs["conv_bc"],
+             outs["state"]) = extras
+        else:
+            outs["conv_x"], outs["conv_bc"], outs["state"] = extras
+
+    cache.update(outs)
+    qpos = positions[..., 0] if positions.ndim == 3 else positions
+    last = qpos[0, -1].astype(jnp.int32)
+    for key, ln in (("kpos", cache["k"].shape[2] if "k" in cache else 0),
+                    ("kpos2", cache["k2"].shape[2] if "k2" in cache else 0)):
+        if key in cache and ln:
+            valid = min(S, ln)
+            slots = jnp.arange(ln, dtype=jnp.int32)
+            kp = last - valid + 1 + slots
+            cache[key] = jnp.where(slots < valid, kp, -1)
+    cache["pos"] = (last + 1).astype(jnp.int32)
+
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    w = T.lm_head(params, x, cfg)
+    logits = jnp.einsum("bd,dv->bv", x[:, -1], w.astype(x.dtype))
+    return L.softcap(logits.astype(jnp.float32), cfg.final_logit_softcap), cache

@@ -1,0 +1,224 @@
+"""Mamba-2 (SSD, state-space duality — arXiv:2405.21060) in JAX.
+
+TPU adaptation (DESIGN.md §4): the reference CUDA implementation fuses
+z/x/B/C/dt into one in_proj and one conv buffer, then slices — slicing a
+tensor-parallel-sharded dim forces XLA reshards, so here the projections are
+*split* (z/x/B/C/dt each their own matmul, depthwise convs split into the
+d_inner part and the tiny B/C part). Heads shard over 'model'; B/C (ngroups
+small) replicate.
+
+The chunked SSD algorithm: intra-chunk "attention-like" matmuls + an
+inter-chunk state recurrence (lax.scan over chunks). Decode keeps
+(conv tails, ssm state) — O(1) per token, which is what makes long_500k
+tractable for ssm/hybrid archs.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import SSMConfig
+
+
+def dims(d_model: int, s: SSMConfig) -> Dict[str, int]:
+    d_in = s.expand * d_model
+    return dict(d_in=d_in, nheads=d_in // s.head_dim,
+                d_bc=2 * s.ngroups * s.state_dim)
+
+
+def init_ssm(key, d_model: int, s: SSMConfig, dtype=jnp.float32) -> Dict:
+    dm = dims(d_model, s)
+    ks = jax.random.split(key, 7)
+    sc = 1.0 / jnp.sqrt(d_model)
+    n = lambda k, shape, m=sc: (jax.random.normal(k, shape) * m).astype(dtype)
+    return {
+        "z_proj": n(ks[0], (d_model, dm["d_in"])),
+        "x_proj": n(ks[1], (d_model, dm["d_in"])),
+        "bc_proj": n(ks[2], (d_model, dm["d_bc"])),
+        "dt_proj": n(ks[3], (d_model, dm["nheads"])),
+        "conv_w_x": n(ks[4], (s.conv_width, dm["d_in"]), 0.1),
+        "conv_b_x": jnp.zeros((dm["d_in"],), dtype),
+        "conv_w_bc": n(ks[5], (s.conv_width, dm["d_bc"]), 0.1),
+        "conv_b_bc": jnp.zeros((dm["d_bc"],), dtype),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, dm["nheads"])).astype(dtype),
+        "D": jnp.ones((dm["nheads"],), dtype),
+        "dt_bias": jnp.zeros((dm["nheads"],), dtype),
+        "norm_w": jnp.zeros((dm["d_in"],), dtype),
+        "out_proj": n(ks[6], (dm["d_in"], d_model)),
+    }
+
+
+def _causal_conv(x, w, b):
+    """Depthwise causal conv along S. x (B,S,C), w (W,C)."""
+    width = w.shape[0]
+    pad = jnp.pad(x, ((0, 0), (width - 1, 0), (0, 0)))
+    out = lax.conv_general_dilated(
+        pad, w[:, None, :].astype(x.dtype),
+        window_strides=(1,), padding="VALID",
+        dimension_numbers=("NHC", "HIO", "NHC"),
+        feature_group_count=x.shape[-1])
+    return jax.nn.silu(out + b.astype(x.dtype))
+
+
+def _gated_norm(y, z, w, eps=1e-6):
+    yf = (y * jax.nn.silu(z.astype(jnp.float32))).astype(jnp.float32)
+    var = jnp.mean(yf * yf, axis=-1, keepdims=True)
+    return (yf * lax.rsqrt(var + eps) * (1.0 + w.astype(jnp.float32))).astype(y.dtype)
+
+
+def _project(params, x, s: SSMConfig, d_model: int):
+    dm = dims(d_model, s)
+    dt_ = x.dtype
+    z = jnp.einsum("bsd,de->bse", x, params["z_proj"].astype(dt_))
+    xs = jnp.einsum("bsd,de->bse", x, params["x_proj"].astype(dt_))
+    bc = jnp.einsum("bsd,de->bse", x, params["bc_proj"].astype(dt_))
+    dt = jnp.einsum("bsd,dh->bsh", x, params["dt_proj"].astype(dt_))
+    return z, xs, bc, dt
+
+
+def ssd_forward(params: Dict, x: jnp.ndarray, d_model: int, s: SSMConfig
+                ) -> jnp.ndarray:
+    y, _ = _ssd_core(params, x, d_model, s, want_state=False)
+    return y
+
+
+def ssd_prefill(params: Dict, x: jnp.ndarray, d_model: int, s: SSMConfig):
+    """Returns (y, {'conv_x', 'conv_bc', 'state'}) — the decode cache after
+    the last token."""
+    return _ssd_core(params, x, d_model, s, want_state=True)
+
+
+def _ssd_core(params: Dict, x: jnp.ndarray, d_model: int, s: SSMConfig,
+              want_state: bool):
+    B, S_in, _ = x.shape
+    dm = dims(d_model, s)
+    H, P, N, G = dm["nheads"], s.head_dim, s.state_dim, s.ngroups
+
+    z, xs_raw, bc_raw, dt = _project(params, x, s, d_model)
+    xs = _causal_conv(xs_raw, params["conv_w_x"], params["conv_b_x"])
+    bc = _causal_conv(bc_raw, params["conv_w_bc"], params["conv_b_bc"])
+
+    # pad S to a chunk multiple; padded steps get dt = 0 (identity decay,
+    # zero input) so outputs and the final state are unaffected
+    cl = min(s.chunk, S_in)
+    pad = (-S_in) % cl
+    S = S_in + pad
+    if pad:
+        xs = jnp.pad(xs, ((0, 0), (0, pad), (0, 0)))
+        bc = jnp.pad(bc, ((0, 0), (0, pad), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+    nc = S // cl
+    xs = xs.reshape(B, S, H, P)
+    Bm = bc[..., :G * N].reshape(B, S, G, N)
+    Cm = bc[..., G * N:].reshape(B, S, G, N)
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32)
+                         + params["dt_bias"].astype(jnp.float32))     # (B,S,H)
+    if pad:
+        valid = (jnp.arange(S) < S_in)[None, :, None]
+        dt = jnp.where(valid, dt, 0.0)
+    A = -jnp.exp(params["A_log"].astype(jnp.float32))                 # (H,)
+    a = dt * A[None, None, :]                                         # <= 0
+
+    ch = lambda t: t.reshape(B, nc, cl, *t.shape[2:])
+    Xc, Bc, Cc, ac, dtc = map(ch, (xs, Bm, Cm, a, dt))
+    acs = jnp.cumsum(ac, axis=2)                                      # inclusive
+    hpg = H // G
+    to_heads = lambda t: (jnp.broadcast_to(t, (B, nc, cl, H, N)) if G == 1
+                          else jnp.repeat(t, hpg, axis=3))
+    Bch = to_heads(Bc.astype(jnp.float32))                            # (B,nc,cl,H,N)
+    Cch = to_heads(Cc.astype(jnp.float32))
+
+    CB = jnp.einsum("bcihn,bcjhn->bchij", Cch, Bch)                   # (B,nc,H,cl,cl)
+    diff = acs[:, :, :, None, :] - acs[:, :, None, :, :]              # (B,nc,i,j,H)
+    diff = diff.transpose(0, 1, 4, 2, 3)                              # (B,nc,H,i,j)
+    tril = jnp.tril(jnp.ones((cl, cl), bool))[None, None, None]
+    # mask BEFORE exp: exp of +large in the dead branch would poison grads
+    Ldec = jnp.exp(jnp.where(tril, diff, -jnp.inf))
+    M = CB * Ldec * dtc.transpose(0, 1, 3, 2)[:, :, :, None, :]       # * dt_j
+    Y = jnp.einsum("bchij,bcjhp->bcihp", M.astype(x.dtype), Xc)
+
+    decay_end = jnp.exp(acs[:, :, -1:, :] - acs)                      # (B,nc,cl,H)
+    Sc = jnp.einsum("bcjhn,bcjh,bcjhp->bchnp",
+                    Bch, (decay_end * dtc).astype(jnp.float32),
+                    Xc.astype(jnp.float32))                           # (B,nc,H,N,P)
+    chunk_decay = jnp.exp(acs[:, :, -1, :])                           # (B,nc,H)
+
+    def scan_fn(h, inp):
+        sc, dec = inp
+        h_out = h
+        h = h * dec[..., None, None] + sc
+        return h, h_out
+
+    h0 = jnp.zeros((B, H, N, P), jnp.float32)
+    h_last, h_prev = lax.scan(scan_fn, h0, (Sc.transpose(1, 0, 2, 3, 4),
+                                            chunk_decay.transpose(1, 0, 2)))
+    h_prev = h_prev.transpose(1, 0, 2, 3, 4)                          # (B,nc,H,N,P)
+
+    inter = jnp.einsum("bcihn,bchnp->bcihp", Cch * jnp.exp(acs)[..., None],
+                       h_prev)
+    Y = Y + inter.astype(x.dtype)
+    Y = Y + (params["D"].astype(jnp.float32)[None, None, :, None]
+             * Xc.astype(jnp.float32)).astype(x.dtype)
+    y = Y.reshape(B, S, dm["d_in"])[:, :S_in]
+    y = _gated_norm(y, z, params["norm_w"])
+    out = jnp.einsum("bse,ed->bsd", y, params["out_proj"].astype(x.dtype))
+    if not want_state:
+        return out, None
+    w = s.conv_width - 1
+    return out, {"conv_x": xs_raw[:, S_in - w:, :],
+                 "conv_bc": bc_raw[:, S_in - w:, :],
+                 "state": h_last}
+
+
+def init_ssm_cache(batch: int, d_model: int, s: SSMConfig, dtype=jnp.bfloat16):
+    dm = dims(d_model, s)
+    w = s.conv_width - 1
+    return {"conv_x": jnp.zeros((batch, w, dm["d_in"]), dtype),
+            "conv_bc": jnp.zeros((batch, w, dm["d_bc"]), dtype),
+            "state": jnp.zeros((batch, dm["nheads"], s.state_dim, s.head_dim),
+                               jnp.float32)}
+
+
+def ssd_decode(params: Dict, x: jnp.ndarray, cache: Dict, d_model: int,
+               s: SSMConfig) -> Tuple[jnp.ndarray, Dict]:
+    """One-token step. x: (B, 1, D). Returns (y (B,1,D), new cache)."""
+    B = x.shape[0]
+    dm = dims(d_model, s)
+    H, P, N, G = dm["nheads"], s.head_dim, s.state_dim, s.ngroups
+
+    z, xs_raw, bc_raw, dt = _project(params, x, s, d_model)
+
+    def conv_step(hist, new, w, b):
+        hist = jnp.concatenate([hist, new.astype(hist.dtype)], axis=1)  # (B,W,C)
+        out = jnp.einsum("bwc,wc->bc", hist.astype(jnp.float32),
+                         w.astype(jnp.float32))
+        return jax.nn.silu(out + b.astype(jnp.float32)), hist[:, 1:]
+
+    xconv, new_cx = conv_step(cache["conv_x"], xs_raw,
+                              params["conv_w_x"], params["conv_b_x"])
+    bconv, new_cbc = conv_step(cache["conv_bc"], bc_raw,
+                               params["conv_w_bc"], params["conv_b_bc"])
+    xs = xconv.reshape(B, H, P)
+    Bm = bconv[:, :G * N].reshape(B, G, N)
+    Cm = bconv[:, G * N:].reshape(B, G, N)
+    dtv = jax.nn.softplus(dt[:, 0].astype(jnp.float32)
+                          + params["dt_bias"].astype(jnp.float32))    # (B,H)
+    A = -jnp.exp(params["A_log"].astype(jnp.float32))
+    dec = jnp.exp(dtv * A[None])
+    hpg = H // G
+    to_heads = lambda t: (jnp.broadcast_to(t, (B, H, N)) if G == 1
+                          else jnp.repeat(t, hpg, axis=1))
+    Bh = to_heads(Bm.astype(jnp.float32))
+    Ch = to_heads(Cm.astype(jnp.float32))
+    state = cache["state"] * dec[..., None, None] + jnp.einsum(
+        "bh,bhn,bhp->bhnp", dtv, Bh, xs.astype(jnp.float32))
+    y = jnp.einsum("bhn,bhnp->bhp", Ch, state)
+    y = y + params["D"].astype(jnp.float32)[None, :, None] * xs.astype(jnp.float32)
+    y = y.reshape(B, 1, dm["d_in"]).astype(x.dtype)
+    y = _gated_norm(y, z, params["norm_w"])
+    out = jnp.einsum("bse,ed->bsd", y, params["out_proj"].astype(x.dtype))
+    return out, {"conv_x": new_cx, "conv_bc": new_cbc, "state": state}

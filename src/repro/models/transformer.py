@@ -1,0 +1,411 @@
+"""Unified decoder-LM substrate covering all assigned families:
+
+  dense   — llama-style GQA + SwiGLU (yi, deepseek, phi3) and gemma2
+            (local/global alternation, softcaps, post-norms, tied embed)
+  moe     — routed experts over 'model' (llama4-scout, kimi-k2)
+  ssm     — mamba2 SSD stack
+  hybrid  — hymba parallel attention + SSM heads
+  vlm/audio — dense backbone + stub modality frontend feeding the paper's
+            PrunedADC quantizer (DESIGN.md §3/§5)
+
+One ``lax.scan`` over stacked layer params (+ optional remat) keeps compile
+time flat in depth. Everything is a pure function of (params, batch).
+
+Batch dict keys:
+  token archs:   tokens (B,S) int32, labels (B,S) int32, positions (B,S[,3])
+  frontend archs: embeddings (B,S,F) float, labels, positions, adc_mask
+  decode:        last-token variants (B,1[,F]), plus a cache pytree.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ArchConfig
+from repro.core import adc
+from repro.models import layers as L
+from repro.models import moe as moe_lib
+from repro.models import ssm as ssm_lib
+
+
+# ============================================================ param builders
+def _pad_qo(q, o, cfg: ArchConfig):
+    """Zero-pad the q-head axis to cfg.padded_heads (§Perf: padded-head TP).
+    Pad weights stay exactly zero: _attend masks pad outputs, so their
+    gradients vanish."""
+    hp = cfg.padded_heads
+    h = cfg.num_heads
+    if hp == h:
+        return q, o
+    q = jnp.pad(q, ((0, 0), (0, hp - h), (0, 0)))
+    o = jnp.pad(o, ((0, hp - h), (0, 0), (0, 0)))
+    return q, o
+
+
+def _dense_block(key, cfg: ArchConfig, dtype):
+    d, hd = cfg.d_model, cfg.resolved_head_dim
+    h, kv, f = cfg.num_heads, cfg.num_kv_heads, cfg.d_ff
+    ks = jax.random.split(key, 8)
+    sc = lambda fan: 1.0 / math.sqrt(fan)
+    q0 = (jax.random.normal(ks[0], (d, h, hd)) * sc(d)).astype(dtype)
+    o0 = (jax.random.normal(ks[3], (h, hd, d)) * sc(h * hd)).astype(dtype)
+    q0, o0 = _pad_qo(q0, o0, cfg)
+    p = {
+        "ln1": jnp.zeros((d,), dtype),
+        "q": q0,
+        "k": (jax.random.normal(ks[1], (d, kv, hd)) * sc(d)).astype(dtype),
+        "v": (jax.random.normal(ks[2], (d, kv, hd)) * sc(d)).astype(dtype),
+        "o": o0,
+        "ln2": jnp.zeros((d,), dtype),
+        "wi": (jax.random.normal(ks[4], (d, f)) * sc(d)).astype(dtype),
+        "wg": (jax.random.normal(ks[5], (d, f)) * sc(d)).astype(dtype),
+        "wo": (jax.random.normal(ks[6], (f, d)) * sc(f)).astype(dtype),
+    }
+    if cfg.post_norm:
+        p["ln1p"] = jnp.zeros((d,), dtype)
+        p["ln2p"] = jnp.zeros((d,), dtype)
+    return p
+
+
+def _attn_only(key, cfg: ArchConfig, dtype):
+    d, hd = cfg.d_model, cfg.resolved_head_dim
+    h, kv = cfg.num_heads, cfg.num_kv_heads
+    ks = jax.random.split(key, 4)
+    sc = lambda fan: 1.0 / math.sqrt(fan)
+    q0 = (jax.random.normal(ks[0], (d, h, hd)) * sc(d)).astype(dtype)
+    o0 = (jax.random.normal(ks[3], (h, hd, d)) * sc(h * hd)).astype(dtype)
+    q0, o0 = _pad_qo(q0, o0, cfg)
+    return {
+        "q": q0,
+        "k": (jax.random.normal(ks[1], (d, kv, hd)) * sc(d)).astype(dtype),
+        "v": (jax.random.normal(ks[2], (d, kv, hd)) * sc(d)).astype(dtype),
+        "o": o0,
+    }
+
+
+def _moe_block(key, cfg: ArchConfig, dtype):
+    k1, k2 = jax.random.split(key)
+    p = {"ln1": jnp.zeros((cfg.d_model,), dtype),
+         "ln2": jnp.zeros((cfg.d_model,), dtype)}
+    p.update(_attn_only(k1, cfg, dtype))
+    p["moe"] = moe_lib.init_moe(k2, cfg.d_model, cfg.moe, dtype)
+    return p
+
+
+def _ssm_block(key, cfg: ArchConfig, dtype):
+    return {"ln1": jnp.zeros((cfg.d_model,), dtype),
+            "ssm": ssm_lib.init_ssm(key, cfg.d_model, cfg.ssm, dtype)}
+
+
+def _hybrid_block(key, cfg: ArchConfig, dtype):
+    d = cfg.d_model
+    k1, k2, k3 = jax.random.split(key, 3)
+    p = {"ln1": jnp.zeros((d,), dtype), "ln2": jnp.zeros((d,), dtype),
+         "attn_scale": jnp.zeros((d,), dtype),
+         "ssm_scale": jnp.zeros((d,), dtype)}
+    p.update(_attn_only(k1, cfg, dtype))
+    p["ssm"] = ssm_lib.init_ssm(k2, cfg.d_model, cfg.ssm, dtype)
+    ks = jax.random.split(k3, 3)
+    sc = lambda fan: 1.0 / math.sqrt(fan)
+    p["wi"] = (jax.random.normal(ks[0], (d, cfg.d_ff)) * sc(d)).astype(dtype)
+    p["wg"] = (jax.random.normal(ks[1], (d, cfg.d_ff)) * sc(d)).astype(dtype)
+    p["wo"] = (jax.random.normal(ks[2], (cfg.d_ff, d)) * sc(cfg.d_ff)).astype(dtype)
+    return p
+
+
+def _block_builder(cfg: ArchConfig):
+    return {"dense": _dense_block, "vlm": _dense_block, "audio": _dense_block,
+            "moe": _moe_block, "ssm": _ssm_block,
+            "hybrid": _hybrid_block}[cfg.family]
+
+
+def _scan_len(cfg: ArchConfig) -> int:
+    """Number of scan steps (gemma2 local/global pairs scan 2 layers/step;
+    MoE archs scan only the non-dense layers)."""
+    n = cfg.num_layers - (cfg.moe.first_k_dense if cfg.moe else 0)
+    if cfg.attn_type == "local_global":
+        assert n % 2 == 0
+        return n // 2
+    return n
+
+
+def init_params(key, cfg: ArchConfig) -> Dict[str, Any]:
+    dtype = jnp.dtype(cfg.param_dtype)
+    d, v = cfg.d_model, cfg.vocab_size
+    k_emb, k_head, k_layers, k_front, k_pre = jax.random.split(key, 5)
+    p: Dict[str, Any] = {"final_norm": jnp.zeros((d,), dtype)}
+
+    if cfg.frontend:
+        p["front_proj"] = (jax.random.normal(k_front, (cfg.frontend_dim, d))
+                           * (1.0 / math.sqrt(cfg.frontend_dim))).astype(dtype)
+    else:
+        p["embed"] = (jax.random.normal(k_emb, (v, d)) * 0.02).astype(dtype)
+    if cfg.frontend or not cfg.tie_embeddings:
+        p["head"] = (jax.random.normal(k_head, (d, v))
+                     * (1.0 / math.sqrt(d))).astype(dtype)
+
+    build = _block_builder(cfg)
+    n_scan = _scan_len(cfg)
+    per_step = 2 if cfg.attn_type == "local_global" else 1
+    keys = jax.random.split(k_layers, n_scan * per_step).reshape(n_scan, per_step, 2)
+    if per_step == 2:
+        blocks = [ [build(keys[i, j], cfg, dtype) for i in range(n_scan)]
+                   for j in range(2) ]
+        p["layers"] = jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *blocks[0])
+        p["layers2"] = jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *blocks[1])
+    else:
+        blocks = [build(keys[i, 0], cfg, dtype) for i in range(n_scan)]
+        p["layers"] = jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *blocks)
+    if cfg.moe and cfg.moe.first_k_dense:
+        dense_cfg = dataclasses.replace(cfg, family="dense", post_norm=False)
+        pre = [
+            _dense_block(k, dense_cfg, dtype)
+            for k in jax.random.split(k_pre, cfg.moe.first_k_dense)]
+        p["prelayers"] = jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *pre)
+    return p
+
+
+# ================================================================= forward
+def _constrain_heads(t, cfg: ArchConfig, mesh):
+    """Pin projection outputs to (batch over dp, heads over model) — under
+    remat XLA otherwise recomputes the QKV dot by contracting the
+    FSDP-sharded d_model dim and all-reduces activation-sized partials
+    (measured 4.1 TB/step on kimi train; §Perf it.8)."""
+    if mesh is None or getattr(mesh, "devices", None) is None \
+            or mesh.devices.size == 1:
+        return t
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    from repro.distributed import sharding as sh
+    baxes = sh.batch_axes(mesh, cfg, t.shape[0])
+    tp = mesh.shape.get("model", 1)
+    heads_ax = "model" if (tp > 1 and t.shape[2] % tp == 0
+                           and not cfg.extra_dp) else None
+    if baxes is None and heads_ax is None:
+        return t
+    spec = P(baxes if baxes and len(baxes) > 1 else (baxes[0] if baxes else None),
+             None, heads_ax, None)
+    return jax.lax.with_sharding_constraint(t, NamedSharding(mesh, spec))
+
+
+def _attend(p, x, cfg: ArchConfig, positions, *, window, q_block=512,
+            streaming=False, mesh=None):
+    dt = x.dtype
+    q = jnp.einsum("bsd,dhk->bshk", x, p["q"].astype(dt))
+    k = jnp.einsum("bsd,dhk->bshk", x, p["k"].astype(dt))
+    v = jnp.einsum("bsd,dhk->bshk", x, p["v"].astype(dt))
+    q = _constrain_heads(q, cfg, mesh)
+    k = _constrain_heads(k, cfg, mesh)
+    v = _constrain_heads(v, cfg, mesh)
+    if cfg.use_rope:
+        sections = cfg.mrope_sections if cfg.mrope else None
+        q = L.rope(q, positions, cfg.rope_theta, sections)
+        k = L.rope(k, positions, cfg.rope_theta, sections)
+    kpos = positions[..., 0] if positions.ndim == 3 else positions
+    kpos = kpos[0] if kpos.ndim == 2 else kpos
+    if streaming and x.shape[1] >= 2048:
+        out = L.flash_attention(q, k, v, q_positions=kpos, k_positions=kpos,
+                                causal=True, window=window,
+                                attn_softcap=cfg.attn_logit_softcap,
+                                q_block=q_block)
+    else:
+        out = L.attention(q, k, v, q_positions=kpos, k_positions=kpos,
+                          causal=True, window=window,
+                          attn_softcap=cfg.attn_logit_softcap, q_block=q_block)
+    out = _mask_pad_heads(out, cfg)
+    return jnp.einsum("bshk,hkd->bsd", out, p["o"].astype(dt))
+
+
+def _mask_pad_heads(out, cfg: ArchConfig):
+    """Zero outputs of padding heads (padded-head TP): keeps the padded
+    model numerically identical to the published head count and kills
+    gradients into the pad weights."""
+    hp, h = cfg.padded_heads, cfg.num_heads
+    if hp == h:
+        return out
+    hmask = (jnp.arange(hp) < h).astype(out.dtype)
+    return out * hmask[None, None, :, None]
+
+
+def _mlp(p, x):
+    return L.swiglu(x, p["wi"], p["wg"], p["wo"])
+
+
+def _dense_layer(p, x, cfg: ArchConfig, positions, *, window,
+                 streaming=False, mesh=None):
+    h = L.rms_norm(x, p["ln1"], cfg.norm_eps)
+    h = _attend(p, h, cfg, positions, window=window, streaming=streaming,
+                mesh=mesh)
+    if cfg.post_norm:
+        h = L.rms_norm(h, p["ln1p"], cfg.norm_eps)
+    x = x + h
+    h = L.rms_norm(x, p["ln2"], cfg.norm_eps)
+    h = _mlp(p, h)
+    if cfg.post_norm:
+        h = L.rms_norm(h, p["ln2p"], cfg.norm_eps)
+    return x + h
+
+
+def _moe_layer(p, x, cfg: ArchConfig, positions, mesh):
+    h = L.rms_norm(x, p["ln1"], cfg.norm_eps)
+    h = _attend(p, h, cfg, positions, window=None, mesh=mesh)
+    x = x + h
+    h = L.rms_norm(x, p["ln2"], cfg.norm_eps)
+    y, aux = moe_lib.moe_ffn(h, p["moe"], cfg.moe, mesh)
+    if cfg.moe.num_shared_experts:
+        y = y + moe_lib.shared_ffn(h, p["moe"])
+    return x + y, aux
+
+
+def _ssm_layer(p, x, cfg: ArchConfig):
+    h = L.rms_norm(x, p["ln1"], cfg.norm_eps)
+    return x + ssm_lib.ssd_forward(p["ssm"], h, cfg.d_model, cfg.ssm)
+
+
+def _hybrid_layer(p, x, cfg: ArchConfig, positions, mesh=None):
+    h = L.rms_norm(x, p["ln1"], cfg.norm_eps)
+    a = _attend(p, h, cfg, positions, window=cfg.window, mesh=mesh)
+    s = ssm_lib.ssd_forward(p["ssm"], h, cfg.d_model, cfg.ssm)
+    a = L.rms_norm(a, p["attn_scale"], cfg.norm_eps)
+    s = L.rms_norm(s, p["ssm_scale"], cfg.norm_eps)
+    x = x + 0.5 * (a + s)
+    h = L.rms_norm(x, p["ln2"], cfg.norm_eps)
+    return x + _mlp(p, h)
+
+
+def constrain_batch(x, cfg: ArchConfig, mesh):
+    """Pin activation batch sharding (XLA's propagation otherwise may
+    replicate scan carries — measured 16x traffic on extra_dp archs)."""
+    if mesh is None or getattr(mesh, "devices", None) is None \
+            or mesh.devices.size == 1:
+        return x
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    from repro.distributed import sharding as sh
+    baxes = sh.batch_axes(mesh, cfg, x.shape[0])
+    if not baxes:
+        return x
+    spec = P(baxes if len(baxes) > 1 else baxes[0],
+             *([None] * (x.ndim - 1)))
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+def embed_input(params, batch, cfg: ArchConfig):
+    dt = jnp.dtype(cfg.dtype)
+    if cfg.frontend:
+        emb = batch["embeddings"]
+        if cfg.adc.enable:
+            mask = batch.get("adc_mask")
+            emb = adc.adc_quantize(emb, mask, bits=cfg.adc.bits,
+                                   vmin=cfg.adc.vmin, vmax=cfg.adc.vmax)
+        x = jnp.einsum("bsf,fd->bsd", emb.astype(dt),
+                       params["front_proj"].astype(dt))
+    else:
+        x = params["embed"][batch["tokens"]].astype(dt)
+    if cfg.family == "dense" and cfg.tie_embeddings:
+        x = x * jnp.asarray(math.sqrt(cfg.d_model), dt)   # gemma2 scaling
+    return x
+
+
+def _layer_stack(params, x, cfg: ArchConfig, positions, mesh):
+    """Scan the (stacked) layer params over x. Returns (x, aux_loss)."""
+    aux0 = jnp.zeros((), jnp.float32)
+
+    def body(carry, lp):
+        x, aux = carry
+        x = constrain_batch(x, cfg, mesh)
+        if cfg.family in ("dense", "vlm", "audio"):
+            if cfg.attn_type == "local_global":
+                lp1, lp2 = lp
+                x = _dense_layer(lp1, x, cfg, positions, window=cfg.window,
+                                 mesh=mesh)
+                x = _dense_layer(lp2, x, cfg, positions, window=None,
+                                 mesh=mesh)
+            else:
+                w = cfg.window if cfg.attn_type == "sliding" else None
+                x = _dense_layer(lp, x, cfg, positions, window=w, mesh=mesh)
+        elif cfg.family == "moe":
+            x, a = _moe_layer(lp, x, cfg, positions, mesh)
+            aux = aux + a
+        elif cfg.family == "ssm":
+            x = _ssm_layer(lp, x, cfg)
+        elif cfg.family == "hybrid":
+            x = _hybrid_layer(lp, x, cfg, positions, mesh)
+        return (x, aux), None
+
+    if cfg.remat == "full":
+        body = jax.checkpoint(body, prevent_cse=False)
+
+    if cfg.moe and cfg.moe.first_k_dense:
+        dense_cfg = dataclasses.replace(cfg, family="dense", post_norm=False)
+        def pre_body(carry, lp):
+            x, aux = carry
+            x = _dense_layer(lp, x, dense_cfg, positions, window=None,
+                             mesh=mesh)
+            return (x, aux), None
+        if cfg.remat == "full":
+            pre_body = jax.checkpoint(pre_body, prevent_cse=False)
+        (x, _), _ = lax.scan(pre_body, (x, aux0), params["prelayers"])
+
+    xs = ((params["layers"], params["layers2"])
+          if cfg.attn_type == "local_global" else params["layers"])
+    (x, aux), _ = lax.scan(body, (x, aux0), xs)
+    return x, aux
+
+
+def lm_head(params, x, cfg: ArchConfig):
+    w = (params["head"] if ("head" in params) else params["embed"].T)
+    return w  # callers use chunked CE / matmul with this
+
+
+def forward(params, batch, cfg: ArchConfig, mesh) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Full forward to final hidden states. Returns (x, aux_loss)."""
+    x = embed_input(params, batch, cfg)
+    x = constrain_batch(x, cfg, mesh)
+    positions = batch["positions"]
+    x, aux = _layer_stack(params, x, cfg, positions, mesh)
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    return x, aux
+
+
+def logits_fn(params, batch, cfg: ArchConfig, mesh) -> jnp.ndarray:
+    x, _ = forward(params, batch, cfg, mesh)
+    w = lm_head(params, x, cfg)
+    lg = jnp.einsum("bsd,dv->bsv", x, w.astype(x.dtype))
+    return L.softcap(lg.astype(jnp.float32), cfg.final_logit_softcap)
+
+
+def chunked_ce_loss(x, head_w, labels, cfg: ArchConfig, chunk: int = 512
+                    ) -> jnp.ndarray:
+    """Sequence-chunked cross-entropy so (B,S,V) logits never materialise
+    (V up to 256k). Each chunk is remat'ed."""
+    B, S, D = x.shape
+    chunk = min(chunk, S)
+    assert S % chunk == 0
+    nc = S // chunk
+    xc = x.reshape(B, nc, chunk, D).transpose(1, 0, 2, 3)
+    lc = labels.reshape(B, nc, chunk).transpose(1, 0, 2)
+
+    @functools.partial(jax.checkpoint, prevent_cse=False)
+    def body(tot, inp):
+        xb, lb = inp
+        lg = jnp.einsum("bsd,dv->bsv", xb, head_w.astype(xb.dtype))
+        lg = L.softcap(lg.astype(jnp.float32), cfg.final_logit_softcap)
+        logp = jax.nn.log_softmax(lg, axis=-1)
+        nll = -jnp.take_along_axis(logp, lb[..., None], axis=-1)[..., 0]
+        return tot + nll.sum(), None
+
+    tot, _ = lax.scan(body, jnp.zeros((), jnp.float32), (xc, lc))
+    return tot / (B * S)
+
+
+def loss_fn(params, batch, cfg: ArchConfig, mesh):
+    x, aux = forward(params, batch, cfg, mesh)
+    w = lm_head(params, x, cfg)
+    ce = chunked_ce_loss(x, w, batch["labels"], cfg)
+    total = ce + (cfg.moe.router_aux_weight * aux if cfg.moe else 0.0)
+    return total, {"ce": ce, "aux": aux}

@@ -1,0 +1,65 @@
+"""AdamW with dtype-configurable state (fp32 default, bf16 for XXL models).
+
+Pure-pytree implementation (no optax dependency): ``init(params)`` returns
+``OptState``; ``update(grads, state, params)`` returns (updates, new_state).
+Used by both the tiny printed-MLP QAT loop (vmapped over GA populations) and
+the billion-parameter LM ``train_step`` (pjit-sharded: states inherit the
+parameter sharding leaf-by-leaf, so FSDP covers optimizer memory too).
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+class OptState(NamedTuple):
+    step: jnp.ndarray
+    m: Any
+    v: Any
+
+
+def init(params, state_dtype: str = "float32") -> OptState:
+    dt = jnp.dtype(state_dtype)
+    zeros = lambda p: jnp.zeros(p.shape, dt)
+    return OptState(step=jnp.zeros((), jnp.int32),
+                    m=jax.tree_util.tree_map(zeros, params),
+                    v=jax.tree_util.tree_map(zeros, params))
+
+
+def update(grads, state: OptState, params, *,
+           lr, b1: float = 0.9, b2: float = 0.95, eps: float = 1e-8,
+           weight_decay: float = 0.0, grad_clip: float = 0.0):
+    """Returns (new_params, new_state). ``lr`` may be a schedule value."""
+    step = state.step + 1
+    if grad_clip and grad_clip > 0:
+        gnorm = global_norm(grads)
+        scale = jnp.minimum(1.0, grad_clip / jnp.maximum(gnorm, 1e-12))
+        grads = jax.tree_util.tree_map(lambda g: g * scale, grads)
+    c1 = 1.0 - b1 ** step.astype(jnp.float32)
+    c2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+    def upd(g, m, v, p):
+        gf = g.astype(jnp.float32)
+        mf = m.astype(jnp.float32) * b1 + gf * (1 - b1)
+        vf = v.astype(jnp.float32) * b2 + gf * gf * (1 - b2)
+        u = (mf / c1) / (jnp.sqrt(vf / c2) + eps)
+        if weight_decay:
+            u = u + weight_decay * p.astype(jnp.float32)
+        newp = p.astype(jnp.float32) - lr * u
+        return newp.astype(p.dtype), mf.astype(m.dtype), vf.astype(v.dtype)
+
+    g_flat, treedef = jax.tree_util.tree_flatten(grads)
+    m_flat = jax.tree_util.tree_leaves(state.m)
+    v_flat = jax.tree_util.tree_leaves(state.v)
+    p_flat = jax.tree_util.tree_leaves(params)
+    out = [upd(g, m, v, p) for g, m, v, p in zip(g_flat, m_flat, v_flat, p_flat)]
+    unflat = lambda i: jax.tree_util.tree_unflatten(treedef, [t[i] for t in out])
+    return unflat(0), OptState(step=step, m=unflat(1), v=unflat(2))
+
+
+def global_norm(tree) -> jnp.ndarray:
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32)))
+                        for l in leaves))

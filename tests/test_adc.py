@@ -1,0 +1,86 @@
+"""Unit + property tests for the binary-search ADC core (paper §3)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import adc
+
+
+def test_full_mask_is_identity_quantizer():
+    for bits in (2, 3, 4, 5):
+        n = 2 ** bits
+        lut = adc.tree_lut(jnp.ones(n, jnp.int32))
+        np.testing.assert_array_equal(np.asarray(lut), np.arange(n))
+
+
+def test_tree_semantics_known_case():
+    # mask keeps levels {1, 4, 5} of a 3-bit ADC
+    mask = jnp.array([0, 1, 0, 0, 1, 1, 0, 0], jnp.int32)
+    lut = np.asarray(adc.tree_lut(mask))
+    # left half {0..3} only has 1 alive -> all left codes map to 1
+    assert all(lut[k] == 1 for k in range(4))
+    # right half: node {4,5} alive both -> 4,5 stay; {6,7} dead -> to 5
+    assert lut[4] == 4 and lut[5] == 5 and lut[6] == 5 and lut[7] == 5
+
+
+def test_tree_vs_nearest_full_mask_equal():
+    bits = 4
+    x = jnp.linspace(0, 0.999, 64)
+    full = adc.init_full_mask(bits)
+    a = adc.adc_quantize(x, full, bits=bits, mode="tree", ste=False)
+    b = adc.adc_quantize(x, full, bits=bits, mode="nearest", ste=False)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b))
+
+
+def test_ste_gradient_is_identity():
+    mask = jnp.array([1, 0, 0, 1], jnp.int32)
+    g = jax.grad(lambda x: adc.adc_quantize(x, mask, bits=2).sum())(
+        jnp.array([0.3, 0.7]))
+    np.testing.assert_allclose(np.asarray(g), [1.0, 1.0])
+
+
+def test_repair_mask_enforces_min_levels():
+    m = jnp.zeros((3, 8), jnp.int32)
+    r = np.asarray(adc.repair_mask(m, 2))
+    assert (r.sum(-1) >= 2).all()
+    m2 = jnp.ones((3, 8), jnp.int32)
+    np.testing.assert_array_equal(np.asarray(adc.repair_mask(m2, 2)),
+                                  np.asarray(m2))
+
+
+def test_per_channel_masks_independent():
+    bits = 3
+    mask = jnp.stack([jnp.ones(8, jnp.int32),
+                      jnp.array([1, 0, 0, 0, 0, 0, 0, 1], jnp.int32)])
+    x = jnp.full((5, 2), 0.4)
+    q = np.asarray(adc.adc_quantize(x, mask, bits=bits, ste=False))
+    assert not np.allclose(q[:, 0], q[:, 1])
+
+
+@settings(max_examples=40, deadline=None)
+@given(bits=st.integers(2, 6), seed=st.integers(0, 10 ** 6))
+def test_lut_property_maps_to_kept_levels(bits, seed):
+    """Every code maps to a KEPT level; kept levels map to themselves."""
+    rng = np.random.default_rng(seed)
+    n = 2 ** bits
+    mask = (rng.random(n) < 0.5).astype(np.int32)
+    mask[rng.integers(0, n)] = 1                      # >= 1 kept
+    lut = np.asarray(adc.tree_lut(jnp.asarray(mask)))
+    kept = set(np.where(mask == 1)[0].tolist())
+    assert set(lut.tolist()) <= kept
+    for k in kept:
+        assert lut[k] == k
+
+
+@settings(max_examples=40, deadline=None)
+@given(bits=st.integers(2, 5), seed=st.integers(0, 10 ** 6))
+def test_lut_property_monotonic(bits, seed):
+    """The comparator tree preserves order: lut is non-decreasing."""
+    rng = np.random.default_rng(seed)
+    n = 2 ** bits
+    mask = (rng.random(n) < 0.5).astype(np.int32)
+    mask[0] = 1
+    lut = np.asarray(adc.tree_lut(jnp.asarray(mask)))
+    assert (np.diff(lut) >= 0).all()

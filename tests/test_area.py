@@ -1,0 +1,84 @@
+"""Design-rule area model tests (paper §3.1-3.2 calibration anchors)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import area
+
+
+def test_paper_component_counts_3bit():
+    """Full 3-bit proposed design: 5 COM + 2 INV + 9 T (paper §3.1)."""
+    want = 5 * area.COMPARATOR_TC + 2 * area.INVERTER_TC + 9
+    assert area.ours_full_tc(3) == want == 46
+
+
+def test_baseline_3bit_fig2a():
+    """Fig 2a: 3 COM + 2 NOT + 4 AND + 6 T."""
+    want = 3 * area.COMPARATOR_TC + 2 + 4 * area.AND_TC + 6
+    assert area.baseline_binary_tc(3) == want == 41
+
+
+def test_control_block_counts():
+    """Control/select transistors: stage d uses 2^(d+1) - 2 (= 2 + 6 = 8 for
+    3-bit) + 1 TA amplifier = the paper's '9 transistors'."""
+    sel = sum(2 ** (d + 1) - 2 for d in range(1, 3))
+    assert sel == 8
+
+
+def test_pruned_full_mask_equals_full_design():
+    for bits in (2, 3, 4, 5):
+        full = np.ones(2 ** bits, bool)
+        assert area.pruned_binary_tc(full) == area.ours_full_tc(bits)
+
+
+def test_rule_r3_prune_half_tree():
+    """Pruning across V_ref/2 removes the root comparator + half tree:
+    area of {left half only} < full, and equals the structure of a 2-bit
+    ADC-like subtree (root bypassed)."""
+    mask = np.array([1, 1, 1, 1, 0, 0, 0, 0])
+    a_half = area.pruned_binary_tc(mask)
+    a_full = area.pruned_binary_tc(np.ones(8, bool))
+    assert a_half < a_full
+    # root not needed -> its comparator is gone: removing the root costs
+    # at least one comparator vs full
+    assert a_full - a_half >= area.COMPARATOR_TC
+
+
+def test_single_level_is_free():
+    assert area.pruned_binary_tc(np.array([0, 0, 1, 0])) == 0
+
+
+def test_flash_ratios_match_paper_scale():
+    """Table 4/5: flash/ours TC ratios grow with bits, ~1.8-2.8x."""
+    r3 = area.flash_full_tc(3) / area.ours_full_tc(3)
+    r4 = area.flash_full_tc(4) / area.ours_full_tc(4)
+    assert 1.8 < r3 < 2.6
+    assert 2.2 < r4 < 3.2
+    assert r4 > r3
+
+
+@settings(max_examples=60, deadline=None)
+@given(bits=st.integers(2, 6), seed=st.integers(0, 10 ** 6))
+def test_pruning_monotone_property(bits, seed):
+    """Pruning MORE levels never increases transistor count (r1/r2)."""
+    rng = np.random.default_rng(seed)
+    n = 2 ** bits
+    mask = (rng.random(n) < 0.7).astype(bool)
+    mask[rng.integers(0, n)] = True
+    sub = mask.copy()
+    on = np.where(sub)[0]
+    if len(on) > 1:
+        sub[rng.choice(on)] = False
+    assert area.pruned_binary_tc(sub) <= area.pruned_binary_tc(mask)
+    assert area.pruned_binary_tc(mask) <= area.ours_full_tc(bits)
+
+
+@settings(max_examples=30, deadline=None)
+@given(bits=st.integers(2, 5), seed=st.integers(0, 10 ** 6))
+def test_pruned_flash_vs_binary(bits, seed):
+    """Pruned binary beats pruned flash for the same mask (no encoder)."""
+    rng = np.random.default_rng(seed)
+    n = 2 ** bits
+    mask = (rng.random(n) < 0.5).astype(bool)
+    mask[:2] = True
+    assert area.pruned_binary_tc(mask) <= area.pruned_flash_tc(mask) * 1.5

@@ -1,0 +1,133 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps + hypothesis
+property tests (interpret mode executes kernel bodies on CPU)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import adc
+from repro.kernels import ops, ref
+from repro.kernels.adc_quantize import adc_quantize_pallas
+from repro.kernels.qmlp import bespoke_mlp_pallas
+
+
+def _rand_mask(rng, c, n):
+    m = (rng.random((c, n)) < 0.6).astype(np.int32)
+    m[:, 0] = 1
+    m[:, -1] = 1                                   # >= 2 levels/channel
+    return jnp.asarray(m)
+
+
+@pytest.mark.parametrize("bits", [2, 3, 4])
+@pytest.mark.parametrize("m,c", [(8, 5), (33, 7), (130, 21)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_adc_kernel_matches_ref(bits, m, c, dtype):
+    rng = np.random.default_rng(bits * 100 + m + c)
+    x = jnp.asarray(rng.random((m, c)), dtype)
+    mask = _rand_mask(rng, c, 2 ** bits)
+    table = ref.value_table(mask, bits)
+    want = ref.adc_quantize_ref(x, table, bits)
+    got = adc_quantize_pallas(x, table, bits=bits, block_m=32, interpret=True)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), rtol=1e-6)
+
+
+@pytest.mark.parametrize("bits", [2, 4])
+def test_kernel_matches_core_adc(bits):
+    """Kernel == ref == core.adc tree semantics (the modelling API)."""
+    rng = np.random.default_rng(0)
+    c = 9
+    x = jnp.asarray(rng.random((64, c)), jnp.float32)
+    mask = _rand_mask(rng, c, 2 ** bits)
+    via_core = adc.adc_quantize(x, mask, bits=bits, mode="tree", ste=False)
+    via_ops = ops.adc_quantize(x, mask, bits=bits, interpret=True)
+    np.testing.assert_allclose(np.asarray(via_ops), np.asarray(via_core),
+                               rtol=1e-6)
+
+
+@pytest.mark.parametrize("bits", [3, 4])
+def test_bespoke_mlp_kernel(bits):
+    rng = np.random.default_rng(7)
+    m, f, h, o = 50, 13, 6, 3
+    x = jnp.asarray(rng.random((m, f)), jnp.float32)
+    mask = _rand_mask(rng, f, 2 ** bits)
+    table = ref.value_table(mask, bits)
+    w1 = jnp.asarray(rng.normal(size=(f, h)), jnp.float32)
+    b1 = jnp.asarray(rng.normal(size=(h,)), jnp.float32)
+    w2 = jnp.asarray(rng.normal(size=(h, o)), jnp.float32)
+    b2 = jnp.asarray(rng.normal(size=(o,)), jnp.float32)
+    want = ref.bespoke_mlp_ref(x, table, bits, w1, b1, w2, b2)
+    got = bespoke_mlp_pallas(x, table, w1, b1, w2, b2, bits=bits,
+                             block_m=16, interpret=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+@settings(max_examples=25, deadline=None)
+@given(bits=st.integers(2, 5),
+       m=st.integers(1, 70),
+       c=st.integers(1, 24),
+       seed=st.integers(0, 2 ** 16))
+def test_adc_kernel_property(bits, m, c, seed):
+    """Property: kernel == oracle for arbitrary shapes/masks; outputs are
+    always kept-level representatives."""
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.random((m, c)) * 1.2 - 0.1, jnp.float32)  # incl. OOR
+    mask = _rand_mask(rng, c, 2 ** bits)
+    table = ref.value_table(mask, bits)
+    want = ref.adc_quantize_ref(x, table, bits)
+    got = adc_quantize_pallas(x, table, bits=bits, block_m=32, interpret=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-6)
+    # every output is one of the kept representatives of its channel
+    vals = adc.level_values(bits)
+    for ch in range(c):
+        kept = set(np.asarray(vals)[np.asarray(mask[ch]) == 1].tolist())
+        assert set(np.asarray(got[:, ch]).tolist()) <= kept
+
+
+# ---------------------------------------------------------- flash attention
+from repro.kernels.flash_attention import flash_attention_pallas  # noqa: E402
+from repro.models import layers as Lyr  # noqa: E402
+
+
+@pytest.mark.parametrize("b,s,h,kv,dh,win,cap", [
+    (1, 64, 4, 2, 16, 0, 0.0),
+    (2, 128, 4, 4, 32, 0, 30.0),       # MHA + softcap
+    (1, 128, 8, 2, 16, 48, 0.0),       # GQA + sliding window
+    (1, 96, 2, 1, 8, 0, 0.0),          # MQA, non-pow2 seq
+])
+def test_flash_kernel_matches_attention(b, s, h, kv, dh, win, cap):
+    rng = np.random.default_rng(s + h)
+    q = jnp.asarray(rng.normal(size=(b, s, h, dh)).astype("float32")) * 0.3
+    k = jnp.asarray(rng.normal(size=(b, s, kv, dh)).astype("float32")) * 0.3
+    v = jnp.asarray(rng.normal(size=(b, s, kv, dh)).astype("float32")) * 0.3
+    pos = jnp.arange(s, dtype=jnp.int32)
+    ref = Lyr.attention(q, k, v, q_positions=pos, k_positions=pos,
+                        causal=True, window=win or None, attn_softcap=cap,
+                        q_block=32)
+    got = flash_attention_pallas(q, k, v, pos, pos, causal=True, window=win,
+                                 attn_softcap=cap, q_block=32, kv_block=32,
+                                 interpret=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                               rtol=2e-5, atol=2e-5)
+
+
+@settings(max_examples=10, deadline=None)
+@given(s_blocks=st.integers(2, 4), h=st.sampled_from([2, 4]),
+       kv=st.sampled_from([1, 2]), seed=st.integers(0, 999))
+def test_flash_kernel_property(s_blocks, h, kv, seed):
+    if h % kv:
+        return
+    s = 32 * s_blocks
+    rng = np.random.default_rng(seed)
+    q = jnp.asarray(rng.normal(size=(1, s, h, 16)).astype("float32"))
+    k = jnp.asarray(rng.normal(size=(1, s, kv, 16)).astype("float32"))
+    v = jnp.asarray(rng.normal(size=(1, s, kv, 16)).astype("float32"))
+    pos = jnp.arange(s, dtype=jnp.int32)
+    ref = Lyr.attention(q, k, v, q_positions=pos, k_positions=pos,
+                        causal=True, q_block=32)
+    got = flash_attention_pallas(q, k, v, pos, pos, q_block=32, kv_block=32,
+                                 interpret=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                               rtol=3e-5, atol=3e-5)

@@ -1,0 +1,39 @@
+"""Power-of-2 / fixed-point QAT tests (paper §4.1 quantization scheme)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import qat
+
+
+def test_po2_values_are_powers_of_two():
+    w = jnp.asarray(np.random.default_rng(0).normal(size=128) * 2)
+    q = np.asarray(qat.quantize_po2(w, dp=0.0))
+    nz = q[q != 0]
+    exps = np.log2(np.abs(nz))
+    np.testing.assert_allclose(exps, np.round(exps), atol=1e-6)
+
+
+def test_po2_respects_dp_window():
+    w = jnp.asarray([100.0, 1e-6, -3.0])
+    q = np.asarray(qat.quantize_po2(w, dp=0.0, bits=8))
+    assert abs(q[0]) <= 1.0 + 1e-6          # clamped to 2^0
+    assert q[1] == 0.0                      # underflow to zero
+    assert q[2] == -2.0 or q[2] == -1.0     # nearest po2 within window
+
+
+def test_ste_passes_gradient():
+    g = jax.grad(lambda w: qat.quantize_po2(w, 0.0).sum())(jnp.ones(4) * 0.3)
+    np.testing.assert_allclose(np.asarray(g), 1.0)
+
+
+@settings(max_examples=30, deadline=None)
+@given(dp=st.integers(-6, 6), seed=st.integers(0, 9999))
+def test_fixed_point_grid(dp, seed):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=64))
+    q = np.asarray(qat.quantize_fixed(x, float(dp), bits=8))
+    step = 2.0 ** (dp - 7)
+    np.testing.assert_allclose(q / step, np.round(q / step), atol=1e-4)
+    assert np.abs(q).max() <= 2.0 ** dp + 1e-6

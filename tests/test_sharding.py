@@ -1,0 +1,97 @@
+"""Sharding-rule tests: divisibility fallbacks, FSDP vs TP-only rule sets,
+full-config PartitionSpecs for the assigned archs (no device allocation —
+specs are computed against abstract meshes)."""
+import jax
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import get_config
+from repro.distributed import sharding as sh
+from repro.models import transformer
+
+
+class FakeMesh:
+    """Duck-typed mesh: spec_for only needs axis_names + shape."""
+    def __init__(self, shape: dict):
+        self.shape = shape
+        self.axis_names = tuple(shape)
+
+
+MESH1 = FakeMesh({"data": 16, "model": 16})
+MESH2 = FakeMesh({"pod": 2, "data": 16, "model": 16})
+
+
+def test_kv_heads_fallback_to_head_dim():
+    # kv=8 not divisible by model=16 -> head_dim picks up the axis
+    spec = sh.spec_for((8192, 8, 128), ("embed", "kv_heads", "head_dim"),
+                       MESH1, sh.RULES_FSDP)
+    assert spec == P("data", None, "model")
+
+
+def test_kv_heads_sharded_when_divisible():
+    spec = sh.spec_for((4096, 32, 128), ("embed", "kv_heads", "head_dim"),
+                       MESH1, sh.RULES_FSDP)
+    assert spec == P("data", "model")       # trailing None trimmed
+
+
+def test_hymba_heads_replicated():
+    # 25 q-heads don't divide 16 -> heads replicated, head_dim=64 takes model
+    spec = sh.spec_for((1600, 25, 64), ("embed", "heads", "head_dim"),
+                       MESH1, sh.RULES_FSDP)
+    assert spec == P("data", None, "model")
+
+
+def test_multipod_fsdp_combined_axes():
+    spec = sh.spec_for((152064, 8192), ("vocab", "embed"), MESH2,
+                       sh.RULES_FSDP)
+    assert spec == P("model", ("pod", "data"))
+
+
+def test_tp_only_rules_replicate_embed():
+    spec = sh.spec_for((2304, 9216), ("embed", "mlp"), MESH1,
+                       sh.RULES_TP_ONLY)
+    assert spec == P(None, "model")
+
+
+def test_batch_not_shardable_stays_replicated():
+    spec = sh.spec_for((1, 524288), ("batch", "seq"), MESH1, sh.RULES_FSDP)
+    assert spec == P()
+
+
+@pytest.mark.parametrize("arch", ["qwen2-vl-72b", "kimi-k2-1t-a32b",
+                                  "mamba2-1.3b", "hymba-1.5b", "gemma2-2b"])
+def test_full_config_param_specs_cover_tree(arch):
+    """Every param leaf of the FULL config gets a spec; big matrices are
+    sharded on at least one axis under FSDP rules."""
+    cfg = get_config(arch)
+    pshapes = jax.eval_shape(
+        lambda: transformer.init_params(jax.random.PRNGKey(0), cfg))
+    specs = jax.tree_util.tree_map_with_path(
+        lambda path, leaf: sh.spec_for(
+            tuple(leaf.shape),
+            sh._leaf_logical(sh._path_names(path), len(leaf.shape)),
+            MESH2, sh.RULES_FSDP),
+        pshapes)
+    leaves = jax.tree_util.tree_leaves_with_path(pshapes)
+    spec_leaves = jax.tree_util.tree_leaves(
+        specs, is_leaf=lambda x: isinstance(x, P))
+    assert len(leaves) == len(spec_leaves)
+    for (path, leaf), spec in zip(leaves, spec_leaves):
+        if np.prod(leaf.shape) >= 1 << 22:      # >= 4M params: must shard
+            assert any(s is not None for s in spec), (path, leaf.shape, spec)
+
+
+def test_cache_specs_shard_batch_and_seq():
+    """kv=8 can't split over model=16 -> the cache shards its SEQ dim
+    (decode then all-reduces softmax stats only, §Perf iteration 6)."""
+    cfg = get_config("yi-34b")
+    from repro.models import serving
+    cache = jax.eval_shape(lambda: serving.init_cache(cfg, 128, 1024))
+    specs = sh.cache_specs(cache, MESH1, cfg)
+    assert specs["k"] == P(None, "data", "model")
+    # divisible kv (deepseek kv=32) keeps head sharding
+    cfg2 = get_config("deepseek-7b")
+    cache2 = jax.eval_shape(lambda: serving.init_cache(cfg2, 128, 1024))
+    specs2 = sh.cache_specs(cache2, MESH1, cfg2)
+    assert specs2["k"] == P(None, "data", None, "model")

@@ -1,0 +1,82 @@
+"""End-to-end behaviour tests for the paper's system (§3.2 methodology):
+dataset -> NSGA-II x vmapped QAT -> pareto of pruned bespoke ADCs."""
+import numpy as np
+import pytest
+
+from repro.core import area, search
+from repro.data import tabular
+
+
+@pytest.fixture(scope="module")
+def seeds_run():
+    data = tabular.make_dataset("seeds")
+    sizes = (7, 4, 3)
+    cfg = search.SearchConfig(bits=3, pop_size=16, generations=6,
+                              train_steps=250, seed=0)
+    base = search.full_adc_baseline(data, sizes, cfg)
+    pg, pf, decode = search.run_search(data, sizes, cfg)
+    return data, sizes, cfg, base, pg, pf, decode
+
+
+def test_search_finds_smaller_adc_with_small_acc_loss(seeds_run):
+    """Paper's headline: big transistor-count reduction within 5% accuracy
+    (and usually an accuracy IMPROVEMENT over the full ADC)."""
+    data, sizes, cfg, base, pg, pf, decode = seeds_run
+    full_binary_tc = base["area_binary_ours_tc"]
+    flash_tc = base["area_flash_tc"]
+    ok = [(1 - a, r * flash_tc) for a, r in pf
+          if (1 - a) >= base["accuracy"] - 0.05]
+    assert ok, "no pareto point within 5% of baseline accuracy"
+    best_tc = min(tc for _, tc in ok)
+    assert best_tc < full_binary_tc, (best_tc, full_binary_tc)
+
+
+def test_pruned_beats_full_adc_accuracy(seeds_run):
+    """Fig 4 claim: partial ADCs reach HIGHER accuracy than the full ADC
+    (kept levels adapt to the input distribution). Tolerance 1% = the
+    paper's own "<1% accuracy loss" bound."""
+    data, sizes, cfg, base, pg, pf, decode = seeds_run
+    assert (1.0 - pf[:, 0].min()) >= base["accuracy"] - 0.01
+
+
+def test_pareto_front_is_nondominated(seeds_run):
+    _, _, _, _, _, pf, _ = seeds_run
+    for i in range(len(pf)):
+        for j in range(len(pf)):
+            if i == j:
+                continue
+            dominates = (pf[j] <= pf[i]).all() and (pf[j] < pf[i]).any()
+            assert not dominates
+
+
+def test_decoded_genome_consistency(seeds_run):
+    """Area objective in fitness == area model applied to decoded mask."""
+    data, sizes, cfg, base, pg, pf, decode = seeds_run
+    flash_full = area.flash_full_tc(cfg.bits) * sizes[0]
+    for g, f in zip(pg[:4], pf[:4]):
+        mask, dp = decode(g)
+        tc = area.system_tc(np.asarray(mask), "ours")
+        np.testing.assert_allclose(tc / flash_full, f[1], atol=1e-9)
+        assert -8 <= float(dp) <= 7
+
+
+def test_search_deterministic(seeds_run):
+    data, sizes, cfg, base, pg, pf, _ = seeds_run
+    pg2, pf2, _ = search.run_search(data, sizes, cfg)
+    np.testing.assert_array_equal(pg, pg2)
+
+
+def test_svm_search_path():
+    """The paper targets 'MLPs and SVMs' — the same in-training ADC
+    optimization must run with the linear-SVM classifier."""
+    data = tabular.make_dataset("mammographic")
+    sizes = (5, 0, 2)                 # svm ignores the hidden entry
+    cfg = search.SearchConfig(bits=3, pop_size=8, generations=2,
+                              train_steps=150, model="svm")
+    base = search.full_adc_baseline(data, sizes, cfg)
+    assert base["accuracy"] > 0.5     # better than chance on 2 classes
+    pg, pf, decode = search.run_search(data, sizes, cfg)
+    assert len(pf) >= 1
+    # area objective still consistent with the decoded masks
+    best = pf[np.argsort(pf[:, 0])][0]
+    assert 0.0 <= best[1] <= 1.0
