@@ -11,6 +11,8 @@ import argparse
 import time
 
 import jax
+
+from repro import compat
 import jax.numpy as jnp
 import numpy as np
 
@@ -91,12 +93,55 @@ def bench_ga_generation():
     return us, "pop=16 vmapped QAT"
 
 
+def bench_search_adc(pop=16):
+    """Batched vs per-individual search engines (DESIGN.md §2): times one
+    full population evaluation (== the per-generation work NSGA-II hands
+    to the engine) on each path, plus steady-state per-generation wall
+    time of a short real search. Writes search_adc.json next to the paper
+    tables (consumed by finalize/README plots)."""
+    from benchmarks import paper_tables
+    from repro.core import search
+    from repro.data import tabular
+    data = tabular.make_dataset("seeds")
+    sizes = (7, 4, 3)
+    base = dict(bits=3, pop_size=pop, generations=2, train_steps=60)
+    G = search.genome_len(sizes[0], base["bits"])
+    rng = np.random.default_rng(0)
+    genomes = (rng.random((pop, G)) < 0.5).astype(np.uint8)
+    genomes[0] = 1
+    report = {"pop_size": pop, "qat_steps": base["train_steps"],
+              "bits": base["bits"], "dataset": "seeds",
+              "backend": jax.default_backend()}
+    for engine in ("batched", "reference"):
+        cfg = search.SearchConfig(engine=engine, **base)
+        eval_fn = search.make_eval_fn(data, sizes, cfg)
+        us_gen, _ = _timeit(eval_fn, genomes, reps=2, warmup=1)
+        report[engine] = {"per_generation_s": us_gen / 1e6,
+                          "individuals_per_s": pop / (us_gen / 1e6)}
+    # steady-state check on a real (short) batched search
+    marks = [time.perf_counter()]
+    cfg = search.SearchConfig(engine="batched", **base)
+    search.run_search(data, sizes, cfg,
+                      log=lambda g, p, f: marks.append(time.perf_counter()))
+    gen_s = [b - a for a, b in zip(marks[:-1], marks[1:])]
+    report["batched"]["search_gen_s"] = gen_s
+    speedup = (report["reference"]["per_generation_s"]
+               / report["batched"]["per_generation_s"])
+    report["speedup_batched_over_reference"] = speedup
+    paper_tables.save("search_adc", report)
+    bi = report["batched"]["individuals_per_s"]
+    ri = report["reference"]["individuals_per_s"]
+    return (report["batched"]["per_generation_s"] * 1e6,
+            f"pop={pop}: batched {bi:.1f} vs per-individual {ri:.1f} "
+            f"individuals/s ({speedup:.1f}x)")
+
+
 def bench_lm_train_step():
     from repro.launch.train import build
     import repro.models.steps as steps
     cfg, mesh, train_step, data = build(
         "gemma2-2b", smoke=True, seq=64, batch=4, microbatches=2)
-    with jax.set_mesh(mesh):
+    with compat.set_mesh(mesh):
         state = steps.init_state(jax.random.PRNGKey(0), cfg, mesh)
         jstep = jax.jit(train_step, donate_argnums=(0,))
         state, m = jstep(state, data.device_batch(0),
@@ -118,6 +163,9 @@ def bench_roofline_summary():
 
 def main() -> None:
     ap = argparse.ArgumentParser()
+    ap.add_argument("names", nargs="*",
+                    help="run only the named benchmarks (substring match), "
+                         "e.g. 'search_adc'")
     ap.add_argument("--full", action="store_true")
     args = ap.parse_args()
     fast = not args.full
@@ -128,9 +176,15 @@ def main() -> None:
         ("fig4_pareto", lambda: bench_fig4(fast)),
         ("kernel_adc_quantize", bench_adc_kernel),
         ("ga_generation_vmap_qat", bench_ga_generation),
+        ("search_adc", bench_search_adc),
         ("lm_train_step_smoke", bench_lm_train_step),
         ("roofline_summary", bench_roofline_summary),
     ]
+    if args.names:
+        benches = [(n, f) for n, f in benches
+                   if any(q in n for q in args.names)]
+        if not benches:
+            raise SystemExit(f"no benchmark matches {args.names}")
     print("name,us_per_call,derived")
     failures = 0
     for name, fn in benches:

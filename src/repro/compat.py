@@ -1,0 +1,88 @@
+"""Version-compat shims for the jax API surface this repo uses.
+
+The codebase is written against the modern jax API (>= 0.6: top-level
+``jax.shard_map`` / ``jax.set_mesh`` / ``jax.sharding.AxisType``); CI and
+the reference container run the 0.4.x line. Every module that touches
+meshes or manual sharding imports from here instead of from jax directly:
+
+* ``shard_map``  — accepts the modern kwargs (``axis_names``, ``check_vma``)
+  and translates them to the 0.4.x ``jax.experimental.shard_map`` signature
+  (``auto`` = mesh axes minus the manual ``axis_names``; ``check_rep``).
+* ``set_mesh``   — context manager; on 0.4.x the ``Mesh`` object itself is
+  the context manager, so we just return it.
+* ``make_mesh``  — swallows ``axis_types`` where unsupported.
+* ``AxisType``   — real enum when available, inert stand-in otherwise.
+"""
+from __future__ import annotations
+
+import enum
+from typing import Any, Optional
+
+import jax
+
+# ---------------------------------------------------------------- shard_map
+try:  # jax >= 0.6: top-level function
+    from jax import shard_map as _sm
+    if not callable(_sm):  # transitional versions expose a module here
+        _sm = _sm.shard_map  # type: ignore[attr-defined]
+    _MODERN_SHARD_MAP = True
+except (ImportError, AttributeError):  # jax 0.4.x / 0.5.x
+    from jax.experimental.shard_map import shard_map as _sm
+    _MODERN_SHARD_MAP = False
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, axis_names=None,
+              check_vma: Optional[bool] = None, **kwargs):
+    """Modern-signature shard_map that also runs on jax 0.4.x.
+
+    ``axis_names``: the mesh axes the body is *manual* over (None = all).
+    ``check_vma``: replication checking (modern name of ``check_rep``).
+    """
+    if _MODERN_SHARD_MAP:
+        kw = dict(kwargs)
+        if axis_names is not None:
+            kw["axis_names"] = set(axis_names)
+        if check_vma is not None:
+            kw["check_vma"] = check_vma
+        return _sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, **kw)
+    kw = dict(kwargs)
+    if axis_names is not None:
+        kw["auto"] = frozenset(mesh.axis_names) - frozenset(axis_names)
+    if check_vma is not None:
+        kw["check_rep"] = check_vma
+    return _sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, **kw)
+
+
+# ------------------------------------------------------------------- meshes
+def make_mesh(axis_shapes, axis_names, *, axis_types=None, devices=None):
+    """jax.make_mesh, dropping ``axis_types`` where the arg doesn't exist."""
+    try:
+        return jax.make_mesh(axis_shapes, axis_names, axis_types=axis_types,
+                             devices=devices)
+    except TypeError:
+        return jax.make_mesh(axis_shapes, axis_names, devices=devices)
+
+
+def set_mesh(mesh) -> Any:
+    """``with set_mesh(mesh):`` — ambient-mesh context on every jax line.
+
+    Modern jax provides ``jax.set_mesh``; on 0.4.x a ``Mesh`` is itself the
+    context manager that installs it as the ambient physical mesh.
+    """
+    if hasattr(jax, "set_mesh"):
+        return jax.set_mesh(mesh)
+    return mesh
+
+
+if hasattr(jax.sharding, "AxisType"):
+    AxisType = jax.sharding.AxisType
+else:
+    class AxisType(enum.Enum):  # type: ignore[no-redef]
+        """Stand-in for jax.sharding.AxisType on the 0.4.x line (where all
+        mesh axes behave as Auto and the arg is simply not passed)."""
+        Auto = "auto"
+        Explicit = "explicit"
+        Manual = "manual"
+
+
+__all__ = ["shard_map", "make_mesh", "set_mesh", "AxisType"]

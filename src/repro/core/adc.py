@@ -16,8 +16,10 @@ reaches. Two semantics are provided:
 Gradients flow through a straight-through estimator (STE), making the module
 usable inside any training step (paper MLPs *and* LM frontends).
 
-All functions are shape-polymorphic and `vmap`/`pjit` friendly; masks are
-ordinary arrays so the NSGA-II population axis can be vmapped.
+All functions are shape-polymorphic and `vmap`/`pjit` friendly; the LUT
+walk is natively batched over leading mask axes, so the NSGA-II population
+axis ((P, C, 2^N) masks) flows through without a per-individual loop
+(DESIGN.md §2).
 """
 from __future__ import annotations
 
@@ -49,25 +51,30 @@ def encode(x: jnp.ndarray, bits: int, vmin: float = 0.0, vmax: float = 1.0
 
 def tree_lut(mask: jnp.ndarray) -> jnp.ndarray:
     """Map every original code k to the kept level the pruned comparator tree
-    resolves to. ``mask``: (2^bits,) {0,1}. Returns (2^bits,) int32.
+    resolves to. ``mask``: (..., 2^bits) {0,1} — any leading batch axes
+    (per-channel (C, 2^N) or an NSGA-II population batch (P, C, 2^N)) are
+    carried through elementwise. Returns int32 of the same shape.
 
-    Vectorised tree walk: maintain per-code [lo, hi) interval; at each depth,
-    if both halves contain kept levels, branch on k < mid; otherwise take the
-    (only) live half — that is the bypassed comparator of the pruned circuit.
-    If the mask is all-zero the LUT degenerates to level 0 (callers must keep
-    >= 1 level; the GA repair step enforces >= 2).
+    Vectorised tree walk (DESIGN.md §2): maintain per-code [lo, hi)
+    interval; at each depth, if both halves contain kept levels, branch on
+    k < mid; otherwise take the (only) live half — that is the bypassed
+    comparator of the pruned circuit. If the mask is all-zero the LUT
+    degenerates to level 0 (callers must keep >= 1 level; the GA repair
+    step enforces >= 2).
     """
     n = mask.shape[-1]
     bits = n.bit_length() - 1
-    cs = jnp.concatenate([jnp.zeros(1, jnp.int32),
-                          jnp.cumsum(mask.astype(jnp.int32))])
-    k = jnp.arange(n, dtype=jnp.int32)
-    lo = jnp.zeros(n, jnp.int32)
-    hi = jnp.full((n,), n, jnp.int32)
+    m = mask.astype(jnp.int32)
+    cs = jnp.concatenate([jnp.zeros(m.shape[:-1] + (1,), jnp.int32),
+                          jnp.cumsum(m, axis=-1)], axis=-1)
+    take = lambda idx: jnp.take_along_axis(cs, idx, axis=-1)
+    k = jnp.broadcast_to(jnp.arange(n, dtype=jnp.int32), m.shape)
+    lo = jnp.zeros(m.shape, jnp.int32)
+    hi = jnp.full(m.shape, n, jnp.int32)
     for _ in range(bits):
         mid = (lo + hi) // 2
-        left_alive = (cs[mid] - cs[lo]) > 0
-        right_alive = (cs[hi] - cs[mid]) > 0
+        left_alive = (take(mid) - take(lo)) > 0
+        right_alive = (take(hi) - take(mid)) > 0
         go_left = jnp.where(left_alive & right_alive, k < mid, left_alive)
         lo = jnp.where(go_left, lo, mid)
         hi = jnp.where(go_left, mid, hi)
@@ -75,11 +82,12 @@ def tree_lut(mask: jnp.ndarray) -> jnp.ndarray:
 
 
 def _nearest_lut(mask: jnp.ndarray) -> jnp.ndarray:
-    """LUT variant of nearest-kept-level (for the idealized semantics)."""
+    """LUT variant of nearest-kept-level (for the idealized semantics).
+    Batched over leading axes like ``tree_lut``."""
     n = mask.shape[-1]
     idx = jnp.arange(n, dtype=jnp.int32)
     dist = jnp.abs(idx[:, None] - idx[None, :]).astype(jnp.float32)
-    dist = jnp.where(mask[None, :] > 0, dist, jnp.inf)
+    dist = jnp.where(mask[..., None, :] > 0, dist, jnp.inf)
     return jnp.argmin(dist, axis=-1).astype(jnp.int32)
 
 
@@ -94,7 +102,8 @@ def adc_quantize(x: jnp.ndarray,
     """Quantize ``x`` through a (possibly pruned) binary-search ADC.
 
     x: any shape. mask: None (full ADC) | (2^bits,) shared | (C, 2^bits)
-    per-channel, where C == x.shape[-1]. Returns same shape/dtype as x.
+    per-channel, where C == x.shape[-1] | (P, C, 2^bits) population batch,
+    where x is (P, ..., C). Returns same shape/dtype as x.
     """
     n = 2 ** bits
     values = level_values(bits, vmin, vmax).astype(jnp.float32)
@@ -114,12 +123,24 @@ def adc_quantize(x: jnp.ndarray,
             if mask.shape[0] != x.shape[-1]:
                 raise ValueError(
                     f"per-channel mask C={mask.shape[0]} != last dim {x.shape[-1]}")
-            lut = jax.vmap(lut_fn)(mask)            # (C, n)
+            lut = lut_fn(mask)                      # (C, n)
             flat = code.reshape(-1, x.shape[-1])    # (M, C)
             level = jnp.take_along_axis(lut, flat.T, axis=1).T.reshape(code.shape)
             xq = values[level]
+        elif mask.ndim == 3:
+            # population batch: mask (P, C, n), x (P, ..., C)
+            p, c = mask.shape[0], mask.shape[1]
+            if x.shape[0] != p or x.shape[-1] != c:
+                raise ValueError(
+                    f"population mask (P={p}, C={c}) needs x (P, ..., C); "
+                    f"got x {x.shape}")
+            lut = lut_fn(mask)                      # (P, C, n)
+            flat = code.reshape(p, -1, c)           # (P, M, C)
+            level = jnp.take_along_axis(
+                jnp.swapaxes(lut, 1, 2), flat, axis=1).reshape(code.shape)
+            xq = values[level]
         else:
-            raise ValueError(f"mask ndim must be 1 or 2, got {mask.ndim}")
+            raise ValueError(f"mask ndim must be 1, 2 or 3, got {mask.ndim}")
     xq = xq.astype(x.dtype)
     if ste:
         xq = x + jax.lax.stop_gradient(xq - x)
@@ -130,14 +151,19 @@ def adc_quantize(x: jnp.ndarray,
 def adc_codes(x: jnp.ndarray, mask: jnp.ndarray, *, bits: int,
               mode: str = "tree") -> jnp.ndarray:
     """Integer kept-level codes (circuit digital output) — used by tests and
-    the Pallas kernel oracle."""
+    the Pallas kernel oracle. Accepts the same mask ranks as
+    ``adc_quantize`` ((n,), (C, n) or population-batched (P, C, n))."""
     code = encode(x, bits)
     lut_fn = tree_lut if mode == "tree" else _nearest_lut
+    lut = lut_fn(mask.astype(jnp.int32))
     if mask.ndim == 1:
-        return lut_fn(mask.astype(jnp.int32))[code]
-    lut = jax.vmap(lut_fn)(mask.astype(jnp.int32))
-    flat = code.reshape(-1, x.shape[-1])
-    return jnp.take_along_axis(lut, flat.T, axis=1).T.reshape(code.shape)
+        return lut[code]
+    if mask.ndim == 2:
+        flat = code.reshape(-1, x.shape[-1])
+        return jnp.take_along_axis(lut, flat.T, axis=1).T.reshape(code.shape)
+    flat = code.reshape(mask.shape[0], -1, mask.shape[1])   # (P, M, C)
+    return jnp.take_along_axis(jnp.swapaxes(lut, 1, 2), flat,
+                               axis=1).reshape(code.shape)
 
 
 def init_full_mask(bits: int, channels: Optional[int] = None) -> jnp.ndarray:

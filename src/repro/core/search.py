@@ -3,11 +3,16 @@ level masks + weight decimal positions, with quantization-aware training in
 the inner loop, minimizing {1 - accuracy, normalized ADC area}.
 
 Beyond-paper systems contribution (DESIGN.md §2): the paper evaluates GA
-individuals one-by-one through pymoo. Here the *entire population's* QAT is
-one ``jax.vmap``-batched program (identical math, P× arithmetic intensity),
-optionally sharded over the mesh's ``data`` axis — evolutionary QAT as an
-SPMD workload. On a 256-chip pod a 256-individual generation trains in the
-wall-time of one individual.
+individuals one-by-one through pymoo. Here a *generation* is one compiled
+program: genomes decode to a (P, C, 2^N) mask batch, the shared sample
+batch is pushed through all P pruned ADC banks at once
+(kernels/ops.adc_quantize_population — the Pallas population kernel on
+TPU), and the P QAT loops run as a single ``jax.vmap``-batched
+train-and-score call whose initial parameter/optimizer buffers are donated
+(identical math, P× arithmetic intensity) — evolutionary QAT as an SPMD
+workload. ``evaluate_population_reference`` keeps the paper's sequential
+per-individual path alive as the parity oracle; tests assert both produce
+the same fitness matrix, hence the same Pareto front.
 
 Genome layout per individual (C input channels, N-bit ADC):
   [ C * 2^N mask bits | 4 bits decimal-point position (dp in [-8, 7]) ]
@@ -23,6 +28,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import adc, area, nsga2
+from repro.kernels import ops
 from repro.models import mlp as mlp_lib
 
 DP_BITS = 4
@@ -41,6 +47,7 @@ class SearchConfig:
     mode: str = "tree"            # circuit-faithful pruned-ADC semantics
     design: str = "ours"          # area model used in the fitness
     model: str = "mlp"            # 'mlp' | 'svm' (paper targets both)
+    engine: str = "batched"       # 'batched' SPMD engine | 'reference'
 
 
 def genome_len(channels: int, bits: int) -> int:
@@ -58,32 +65,52 @@ def decode_genome(genome: jnp.ndarray, channels: int, bits: int,
     return mask, dp.astype(jnp.float32)
 
 
-def _train_eval_one(genome, data, sizes, cfg: SearchConfig):
-    """QAT one individual: returns test accuracy (scalar). vmap target.
-    Trains the paper's MLP or, with cfg.model == 'svm', a linear SVM
-    (squared-hinge one-vs-rest) on the ADC-quantized inputs."""
+def decode_population(genomes: jnp.ndarray, channels: int, bits: int,
+                      min_levels: int = 2) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """(P, G) genomes -> (masks (P, C, 2^N) int32, dp (P,) float32).
+    Pure reshape/arithmetics — no per-individual loop; ``repair_mask`` and
+    the LUT walk downstream are batched over the population axis."""
+    p = genomes.shape[0]
+    n = 2 ** bits
+    masks = genomes[:, : channels * n].reshape(p, channels, n).astype(jnp.int32)
+    masks = adc.repair_mask(masks, min_levels)
+    dpb = genomes[:, channels * n: channels * n + DP_BITS].astype(jnp.int32)
+    dps = jnp.sum(dpb * (2 ** jnp.arange(DP_BITS))[None, :], axis=-1) - 8
+    return masks, dps.astype(jnp.float32)
+
+
+# ------------------------------------------------------------- QAT inner loop
+def _init_model(sizes, cfg: SearchConfig):
+    """Initial (params, opt) for one individual — every individual starts
+    from the same seed (the genome only controls the ADC + dp)."""
     from repro.models import svm as svm_lib
     from repro.optim import adamw
-    channels = sizes[0]
-    mask, dp = decode_genome(genome, channels, cfg.bits, cfg.min_levels)
-    xq_tr = adc.adc_quantize(data["x_train"], mask, bits=cfg.bits, mode=cfg.mode)
-    xq_te = adc.adc_quantize(data["x_test"], mask, bits=cfg.bits, mode=cfg.mode)
     if cfg.model == "svm":
-        params = svm_lib.init_svm(jax.random.PRNGKey(cfg.seed), channels,
+        params = svm_lib.init_svm(jax.random.PRNGKey(cfg.seed), sizes[0],
                                   sizes[-1])
-        loss_of = lambda p: svm_lib.svm_loss(p, xq_tr, data["y_train"], dp)
-        acc_of = lambda p: svm_lib.accuracy(p, xq_te, data["y_test"], dp)
     else:
         params = mlp_lib.init_mlp(jax.random.PRNGKey(cfg.seed), sizes)
+    return params, adamw.init(params)
 
+
+def _train_from_quantized(xq_tr, xq_te, y_tr, y_te, dp, params, opt,
+                          sizes, cfg: SearchConfig):
+    """QAT one individual from its already-quantized inputs: returns test
+    accuracy (scalar). vmap target — all operands carry the population
+    axis at the call site; ``dp`` may be traced per individual."""
+    from repro.models import svm as svm_lib
+    from repro.optim import adamw
+    if cfg.model == "svm":
+        loss_of = lambda p: svm_lib.svm_loss(p, xq_tr, y_tr, dp)
+        acc_of = lambda p: svm_lib.accuracy(p, xq_te, y_te, dp)
+    else:
         def loss_of(p):
             logits = mlp_lib.apply_mlp(p, xq_tr, dp, cfg.weight_bits)
             logp = jax.nn.log_softmax(logits)
-            onehot = jax.nn.one_hot(data["y_train"], sizes[-1])
+            onehot = jax.nn.one_hot(y_tr, sizes[-1])
             return -(onehot * logp).sum(-1).mean()
 
-        acc_of = lambda p: mlp_lib.accuracy(p, xq_te, data["y_test"], dp)
-    opt = adamw.init(params)
+        acc_of = lambda p: mlp_lib.accuracy(p, xq_te, y_te, dp)
 
     def step(carry, _):
         p, o = carry
@@ -95,29 +122,132 @@ def _train_eval_one(genome, data, sizes, cfg: SearchConfig):
     return acc_of(params)
 
 
-@functools.partial(jax.jit, static_argnames=("sizes", "cfg"))
-def evaluate_population_acc(genomes: jnp.ndarray, data: Dict, sizes: Tuple[int, ...],
-                            cfg: SearchConfig) -> jnp.ndarray:
-    """(P, G) genomes -> (P,) test accuracies. One vmapped QAT program."""
-    fn = lambda g: _train_eval_one(g, data, sizes, cfg)
-    return jax.vmap(fn)(genomes)
+def _train_eval_one(genome, data, sizes, cfg: SearchConfig):
+    """QAT one individual end-to-end (decode -> quantize -> train). The
+    paper-faithful sequential path; also the per-individual parity oracle
+    for the batched engine."""
+    channels = sizes[0]
+    mask, dp = decode_genome(genome, channels, cfg.bits, cfg.min_levels)
+    # ste=False: inputs are data, no gradient flows to them, and skipping
+    # the x + (xq - x) round-trip keeps the values bitwise-identical to the
+    # batched engine's value-table gather (parity tests rely on this).
+    xq_tr = adc.adc_quantize(data["x_train"], mask, bits=cfg.bits,
+                             mode=cfg.mode, ste=False)
+    xq_te = adc.adc_quantize(data["x_test"], mask, bits=cfg.bits,
+                             mode=cfg.mode, ste=False)
+    params, opt = _init_model(sizes, cfg)
+    return _train_from_quantized(xq_tr, xq_te, data["y_train"], data["y_test"],
+                                 dp, params, opt, sizes, cfg)
 
 
-def evaluate_population(genomes: np.ndarray, data: Dict, sizes, cfg: SearchConfig
-                        ) -> np.ndarray:
-    """Full fitness: [1 - accuracy, normalized ADC area] (both minimized)."""
-    dev_data = {k: jnp.asarray(v) for k, v in data.items()}
-    accs = np.asarray(evaluate_population_acc(
-        jnp.asarray(genomes, jnp.uint8), dev_data, tuple(sizes), cfg))
+def _train_and_score(genomes: jnp.ndarray, params0, opt0, data: Dict,
+                     sizes: Tuple[int, ...], cfg: SearchConfig) -> jnp.ndarray:
+    """(P, G) genomes -> (P,) test accuracies as ONE compiled program.
+
+    The population's initial parameter and optimizer buffers (``params0``,
+    ``opt0``, stacked over P) are donated: XLA reuses their memory for the
+    training-state carry instead of holding both generations live. The
+    input quantization runs through the population kernel path *before*
+    the vmap, so on TPU it is one (P, M/bm)-grid Pallas launch rather than
+    P gathers."""
+    masks, dps = decode_population(genomes, sizes[0], cfg.bits,
+                                   cfg.min_levels)
+    xq_tr = ops.adc_quantize_population(data["x_train"], masks,
+                                        bits=cfg.bits, mode=cfg.mode)
+    xq_te = ops.adc_quantize_population(data["x_test"], masks,
+                                        bits=cfg.bits, mode=cfg.mode)
+    fn = lambda xtr, xte, dp, p, o: _train_from_quantized(
+        xtr, xte, data["y_train"], data["y_test"], dp, p, o, sizes, cfg)
+    return jax.vmap(fn)(xq_tr, xq_te, dps, params0, opt0)
+
+
+@functools.lru_cache(maxsize=1)
+def _train_and_score_jit():
+    """Jitted generation step. Optimizer/parameter buffers are donated on
+    accelerator backends (XLA CPU cannot alias them and would warn)."""
+    donate = (1, 2) if jax.default_backend() != "cpu" else ()
+    return jax.jit(_train_and_score, static_argnames=("sizes", "cfg"),
+                   donate_argnums=donate)
+
+
+def _stacked_init(pop: int, sizes, cfg: SearchConfig):
+    """P copies of the shared initial (params, opt) pytrees, materialized
+    so the jit can donate them."""
+    params, opt = _init_model(sizes, cfg)
+    tile = lambda a: jnp.tile(a[None], (pop,) + (1,) * a.ndim)
+    return (jax.tree_util.tree_map(tile, params),
+            jax.tree_util.tree_map(tile, opt))
+
+
+def evaluate_population_acc(genomes: jnp.ndarray, data: Dict,
+                            sizes: Tuple[int, ...], cfg: SearchConfig
+                            ) -> jnp.ndarray:
+    """(P, G) genomes -> (P,) test accuracies. One vmapped QAT program —
+    convenience wrapper that builds the donated initial buffers itself."""
+    params0, opt0 = _stacked_init(genomes.shape[0], sizes, cfg)
+    return _train_and_score_jit()(jnp.asarray(genomes, jnp.uint8), params0,
+                                  opt0, data, tuple(sizes), cfg)
+
+
+# ------------------------------------------------------------------- fitness
+def population_areas(genomes: np.ndarray, channels: int, cfg: SearchConfig
+                     ) -> np.ndarray:
+    """(P, G) genomes -> (P,) normalized ADC areas (vs the full flash bank).
+    Mask decode + repair is one batched device call; the exact-integer
+    design-rule walk stays in numpy per mask (it is not the bottleneck)."""
     n = 2 ** cfg.bits
-    C = sizes[0]
-    flash_full = area.flash_full_tc(cfg.bits) * C
-    areas = np.empty(len(genomes))
-    for i, g in enumerate(genomes):
-        mask = np.asarray(g[: C * n].reshape(C, n))
-        mask = np.asarray(adc.repair_mask(jnp.asarray(mask), cfg.min_levels))
-        areas[i] = area.system_tc(mask, cfg.design) / max(flash_full, 1)
-    return np.stack([1.0 - accs, areas], axis=1)
+    masks = np.asarray(genomes)[:, : channels * n].reshape(-1, channels, n)
+    masks = np.asarray(adc.repair_mask(jnp.asarray(masks, jnp.int32),
+                                       cfg.min_levels))
+    flash_full = max(area.flash_full_tc(cfg.bits) * channels, 1)
+    return np.array([area.system_tc(m, cfg.design) for m in masks],
+                    np.float64) / flash_full
+
+
+def evaluate_population(genomes: np.ndarray, data: Dict, sizes,
+                        cfg: SearchConfig) -> np.ndarray:
+    """Batched engine. Full fitness: [1 - accuracy, normalized ADC area]
+    (both minimized) — one donated-buffer compiled call per generation."""
+    dev_data = {k: jnp.asarray(v) for k, v in data.items()}
+    params0, opt0 = _stacked_init(len(genomes), sizes, cfg)
+    accs = np.asarray(_train_and_score_jit()(
+        jnp.asarray(genomes, jnp.uint8), params0, opt0, dev_data,
+        tuple(sizes), cfg))
+    return np.stack([1.0 - accs, population_areas(genomes, sizes[0], cfg)],
+                    axis=1)
+
+
+@functools.partial(jax.jit, static_argnames=("sizes", "cfg"))
+def _eval_one_acc(genome, data, sizes, cfg: SearchConfig):
+    return _train_eval_one(genome, data, sizes, cfg)
+
+
+def evaluate_population_reference(genomes: np.ndarray, data: Dict, sizes,
+                                  cfg: SearchConfig) -> np.ndarray:
+    """Per-individual reference path (the paper's pymoo-style loop): same
+    fitness as ``evaluate_population``, one compiled QAT per individual."""
+    dev_data = {k: jnp.asarray(v) for k, v in data.items()}
+    accs = np.array([
+        float(_eval_one_acc(jnp.asarray(g, jnp.uint8), dev_data,
+                            tuple(sizes), cfg))
+        for g in genomes])
+    return np.stack([1.0 - accs, population_areas(genomes, sizes[0], cfg)],
+                    axis=1)
+
+
+def make_eval_fn(data: Dict, sizes, cfg: SearchConfig
+                 ) -> Callable[[np.ndarray], np.ndarray]:
+    """The (P, G) -> (P, 2) fitness function ``nsga2.evolve`` consumes,
+    dispatched on ``cfg.engine``. The dataset moves host->device once
+    here, not once per generation (``jnp.asarray`` downstream no-ops on
+    the device copies)."""
+    dev_data = {k: jnp.asarray(v) for k, v in data.items()}
+    if cfg.engine == "reference":
+        return lambda pop: evaluate_population_reference(pop, dev_data,
+                                                         sizes, cfg)
+    if cfg.engine != "batched":
+        raise ValueError(f"unknown engine {cfg.engine!r}")
+    return lambda pop: evaluate_population(pop, dev_data, sizes, cfg)
 
 
 def run_search(data: Dict, sizes, cfg: SearchConfig,
@@ -126,10 +256,9 @@ def run_search(data: Dict, sizes, cfg: SearchConfig,
     decode) where fit columns are [1-acc, normalized area]."""
     C = sizes[0]
     G = genome_len(C, cfg.bits)
-    eval_fn = lambda pop: evaluate_population(pop, data, sizes, cfg)
     pop, fit = nsga2.evolve(
-        eval_fn, G, pop_size=cfg.pop_size, generations=cfg.generations,
-        seed=cfg.seed, log=log)
+        make_eval_fn(data, sizes, cfg), G, pop_size=cfg.pop_size,
+        generations=cfg.generations, seed=cfg.seed, log=log)
     pg, pf = nsga2.pareto_front(pop, fit)
     decode = lambda g: decode_genome(jnp.asarray(g), C, cfg.bits, cfg.min_levels)
     return pg, pf, decode

@@ -1,4 +1,4 @@
-"""Pallas TPU kernel: batched binary-search-ADC quantization.
+"""Pallas TPU kernel: population-batched binary-search-ADC quantization.
 
 TPU adaptation of the paper's comparator tree (DESIGN.md §2): the pruned
 tree collapses to a per-channel code->value table (VALUES, built once per
@@ -9,9 +9,21 @@ held in VMEM. Arithmetic intensity is ~2^N flops/elem, so the kernel is
 HBM-bound and the tile pipeline (double-buffered via the grid) keeps it at
 streaming bandwidth.
 
-Layout: x (M, C) f32/bf16, VALUES (C, 2^N) f32 resident in VMEM per tile,
-out (M, C). Grid tiles M; C stays whole (sensor counts are small; ops.py
-falls back to the jnp path for C > 4096 or bits > 6).
+Two entry points share one kernel body:
+
+* ``adc_quantize_pallas`` — one ADC bank: x (M, C), VALUES (C, 2^N),
+  out (M, C). Grid tiles M.
+* ``adc_quantize_pallas_population`` — an entire NSGA-II generation in one
+  launch: shared x (M, C), per-individual VALUES (P, C, 2^N), out
+  (P, M, C). The grid is (P, M/block_m) with M innermost, so individual
+  p's (C, 2^N) table is fetched into VMEM once and stays resident while
+  every sample tile streams past it; x tiles re-use the same HBM stream
+  per individual. This is the compiled inner loop of the in-training
+  search engine (core/search.py).
+
+C stays whole per tile (sensor counts are small; ops.py falls back to the
+jnp path for C > 4096 or bits > 6). On TPU the kernels compile by default;
+interpret mode is the CPU/debug fallback selected in ops.py.
 """
 from __future__ import annotations
 
@@ -33,6 +45,22 @@ def _kernel(x_ref, table_ref, o_ref, *, bits: int, vmin: float, vmax: float):
     for k in range(n):                                  # static unroll
         out = out + jnp.where(code == float(k), table[:, k][None, :], 0.0)
     o_ref[...] = out.astype(o_ref.dtype)
+
+
+def _pop_kernel(x_ref, table_ref, o_ref, *, bits: int, vmin: float,
+                vmax: float):
+    """Population tile: x (bm, C) shared, table (1, C, n) for the current
+    individual, out (1, bm, C)."""
+    n = 2 ** bits
+    x = x_ref[...].astype(jnp.float32)                  # (bm, C)
+    scale = n / (vmax - vmin)
+    code = jnp.floor((x - vmin) * scale)
+    code = jnp.clip(code, 0.0, float(n - 1))
+    out = jnp.zeros_like(x)
+    table = table_ref[0]                                # (C, n) in VMEM
+    for k in range(n):                                  # static unroll
+        out = out + jnp.where(code == float(k), table[:, k][None, :], 0.0)
+    o_ref[0] = out.astype(o_ref.dtype)
 
 
 @functools.partial(jax.jit,
@@ -61,3 +89,38 @@ def adc_quantize_pallas(x: jnp.ndarray, table: jnp.ndarray, *, bits: int,
         interpret=interpret,
     )(x, table.astype(jnp.float32))
     return out[:m]
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("bits", "vmin", "vmax", "block_m",
+                                    "interpret"))
+def adc_quantize_pallas_population(x: jnp.ndarray, tables: jnp.ndarray, *,
+                                   bits: int, vmin: float = 0.0,
+                                   vmax: float = 1.0, block_m: int = 512,
+                                   interpret: bool = True) -> jnp.ndarray:
+    """Shared x: (M, C); per-individual tables: (P, C, 2^bits). Returns
+    (P, M, C) — the whole population's quantized views in one launch.
+
+    Grid (P, M/bm), M innermost: the (C, 2^N) table of individual p loads
+    into VMEM at the first M-tile and is re-used by every subsequent tile
+    (the index map is constant in the inner grid axis, so the pipeline
+    skips the re-fetch)."""
+    m, c = x.shape
+    p = tables.shape[0]
+    bm = min(block_m, m)
+    pad = (-m) % bm
+    if pad:
+        x = jnp.pad(x, ((0, pad), (0, 0)))
+    grid = (p, x.shape[0] // bm)
+    out = pl.pallas_call(
+        functools.partial(_pop_kernel, bits=bits, vmin=vmin, vmax=vmax),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, c), lambda pi, i: (i, 0)),
+            pl.BlockSpec((1, c, 2 ** bits), lambda pi, i: (pi, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bm, c), lambda pi, i: (pi, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((p, x.shape[0], c), x.dtype),
+        interpret=interpret,
+    )(x, tables.astype(jnp.float32))
+    return out[:, :m]

@@ -12,7 +12,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels import ref
-from repro.kernels.adc_quantize import adc_quantize_pallas
+from repro.kernels.adc_quantize import (adc_quantize_pallas,
+                                        adc_quantize_pallas_population)
 from repro.kernels.qmlp import bespoke_mlp_pallas
 
 _MAX_UNROLL_BITS = 6
@@ -20,6 +21,8 @@ _MAX_CHANNELS = 4096
 
 
 def _interpret_default() -> bool:
+    """Compiled (non-interpret) kernels are the default on TPU; everywhere
+    else the interpret path executes the kernel bodies on CPU."""
     return jax.default_backend() != "tpu"
 
 
@@ -35,6 +38,30 @@ def adc_quantize(x: jnp.ndarray, mask: jnp.ndarray, *, bits: int,
         interpret = _interpret_default()
     return adc_quantize_pallas(x, table, bits=bits, vmin=vmin, vmax=vmax,
                                interpret=interpret)
+
+
+def adc_quantize_population(x: jnp.ndarray, masks: jnp.ndarray, *, bits: int,
+                            vmin: float = 0.0, vmax: float = 1.0,
+                            mode: str = "tree",
+                            interpret: bool | None = None) -> jnp.ndarray:
+    """Quantize one shared (M, C) sample batch through an entire NSGA-II
+    population of pruned ADC banks. masks: (P, C, 2^bits). Returns
+    (P, M, C). Kernel when the static envelope applies (population grid,
+    per-individual value table resident in VMEM), batched jnp oracle
+    otherwise."""
+    tables = ref.value_table(masks, bits, vmin, vmax, mode)   # (P, C, n)
+    if bits > _MAX_UNROLL_BITS or x.shape[-1] > _MAX_CHANNELS:
+        return ref.adc_quantize_ref_population(x, tables, bits, vmin, vmax)
+    if interpret is None:
+        if _interpret_default():
+            # auto mode off-TPU: interpret-mode kernels run tile bodies in
+            # Python (P * M/bm tiles — minutes on CPU), so the batched
+            # oracle is the fallback; tests opt in to interpret explicitly.
+            return ref.adc_quantize_ref_population(x, tables, bits, vmin,
+                                                   vmax)
+        interpret = False
+    return adc_quantize_pallas_population(x, tables, bits=bits, vmin=vmin,
+                                          vmax=vmax, interpret=interpret)
 
 
 def bespoke_mlp(x, mask, w1, b1, w2, b2, *, bits: int, vmin: float = 0.0,

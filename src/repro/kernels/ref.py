@@ -11,12 +11,15 @@ from repro.core import adc
 
 def value_table(mask: jnp.ndarray, bits: int, vmin: float = 0.0,
                 vmax: float = 1.0, mode: str = "tree") -> jnp.ndarray:
-    """Per-channel code->reconstruction-value table: VALUES[c, k] is the
-    analog value the pruned ADC returns for raw code k on channel c.
-    mask: (C, 2^bits). Returns (C, 2^bits) f32."""
+    """Per-channel code->reconstruction-value table: VALUES[..., c, k] is
+    the analog value the pruned ADC returns for raw code k on channel c.
+    mask: (C, 2^bits) or population-batched (P, C, 2^bits) — the LUT walk
+    in ``adc`` is shape-polymorphic over leading axes (DESIGN.md §2), so a
+    whole NSGA-II generation's tables are built in one call. Returns a
+    float32 array of the mask's shape."""
     values = adc.level_values(bits, vmin, vmax)
     lut_fn = adc.tree_lut if mode == "tree" else adc._nearest_lut
-    lut = jax.vmap(lut_fn)(mask.astype(jnp.int32))        # (C, n)
+    lut = lut_fn(mask.astype(jnp.int32))                  # (..., C, n)
     return values[lut]
 
 
@@ -27,6 +30,19 @@ def adc_quantize_ref(x: jnp.ndarray, table: jnp.ndarray, bits: int,
     code = jnp.clip(jnp.floor((x - vmin) / (vmax - vmin) * n), 0, n - 1
                     ).astype(jnp.int32)                    # (M, C)
     return jnp.take_along_axis(table.T, code, axis=0).astype(x.dtype)
+
+
+def adc_quantize_ref_population(x: jnp.ndarray, tables: jnp.ndarray,
+                                bits: int, vmin: float = 0.0,
+                                vmax: float = 1.0) -> jnp.ndarray:
+    """Population-batched oracle: one shared sample batch through P pruned
+    ADC banks. x: (M, C); tables: (P, C, 2^bits). Returns (P, M, C) —
+    out[p, m, c] = tables[p, c, code(x[m, c])]."""
+    n = 2 ** bits
+    code = jnp.clip(jnp.floor((x - vmin) / (vmax - vmin) * n), 0, n - 1
+                    ).astype(jnp.int32)                    # (M, C)
+    taker = lambda t: jnp.take_along_axis(t.T, code, axis=0)
+    return jax.vmap(taker)(tables).astype(x.dtype)
 
 
 def bespoke_mlp_ref(x: jnp.ndarray, table: jnp.ndarray, bits: int,

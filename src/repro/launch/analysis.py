@@ -163,15 +163,24 @@ def _dot_flops(line: str, table: Dict[str, Tuple[str, Tuple[int, ...]]]
     cm = _CONTRACT_RE.search(line)
     if cm is None:
         return 2.0 * res_elems
-    # lhs operand: first name inside dot(...); shapes live in the table
-    operands = [o.strip().lstrip("%") for o in m.group(3).split(",")]
-    lhs = table.get(operands[0]) if operands else None
-    if lhs is None:
+    # lhs operand shape: older XLA text embeds it inline in the operand list
+    # ('dot(f32[64,128]{1,0} %a, ...)'); newer text prints bare names, so
+    # fall back to the computation's shape table.
+    lhs_dims: Optional[Tuple[int, ...]] = None
+    inline = _SHAPE_RE.findall(m.group(3))
+    if inline:
+        lhs_dims = tuple(int(d) for d in inline[0][1].split(",") if d)
+    else:
+        operands = [o.strip().lstrip("%") for o in m.group(3).split(",")]
+        lhs = table.get(operands[0]) if operands else None
+        if lhs is not None:
+            lhs_dims = lhs[1]
+    if lhs_dims is None:
         return 2.0 * res_elems
     k = 1
     for idx in (int(i) for i in cm.group(1).split(",") if i):
-        if idx < len(lhs[1]):
-            k *= lhs[1][idx]
+        if idx < len(lhs_dims):
+            k *= lhs_dims[idx]
     return 2.0 * res_elems * k
 
 

@@ -1,8 +1,17 @@
 """Training launcher: end-to-end driver usable both for CPU-scale runs
 (examples, CI) and as the entrypoint a pod job would exec.
 
+LM training:
+
   PYTHONPATH=src python -m repro.launch.train --arch gemma2-2b --smoke \
       --steps 50 --batch 8 --seq 128 --ckpt-dir /tmp/ckpt
+
+In-training ADC optimization (the paper's §3.2 search, population-batched
+engine of DESIGN.md §2 — reports per-generation wall time and
+individuals/sec):
+
+  PYTHONPATH=src python -m repro.launch.train --adc-search --dataset seeds \
+      --bits 3 --pop 16 --generations 4 --train-steps 100
 """
 from __future__ import annotations
 
@@ -10,6 +19,8 @@ import argparse
 import time
 
 import jax
+
+from repro import compat
 import jax.numpy as jnp
 import numpy as np
 
@@ -36,9 +47,54 @@ def build(arch: str, *, smoke: bool, seq: int, batch: int, microbatches: int,
     return cfg, mesh, train_step, data
 
 
+def run_adc_search(args):
+    """Drive the population-batched in-training ADC search: one compiled
+    train-and-score call per generation, timed via the evolve log hook."""
+    from repro.core import area, search
+    from repro.data import tabular
+
+    spec = tabular.SPECS[args.dataset]
+    data = tabular.make_dataset(args.dataset)
+    sizes = (spec.features, spec.hidden, spec.classes)
+    cfg = search.SearchConfig(bits=args.bits, pop_size=args.pop,
+                              generations=args.generations,
+                              train_steps=args.train_steps,
+                              engine=args.engine)
+    print(f"adc-search[{cfg.engine}] dataset={args.dataset} "
+          f"bits={cfg.bits} pop={cfg.pop_size} gens={cfg.generations} "
+          f"qat-steps={cfg.train_steps}")
+    marks = [time.perf_counter()]
+
+    def log(g, pop, fit):
+        marks.append(time.perf_counter())
+        dt = marks[-1] - marks[-2]
+        print(f"  gen {g:2d}: {dt:6.2f}s/gen "
+              f"{cfg.pop_size / dt:7.1f} individuals/s  "
+              f"best-acc {1 - fit[:, 0].min():.3f}  "
+              f"min-area {fit[:, 1].min():.3f}", flush=True)
+
+    pg, pf, decode = search.run_search(data, sizes, cfg, log=log)
+    gen_s = [b - a for a, b in zip(marks[:-1], marks[1:])]
+    if gen_s:
+        # first generation pays the XLA compile; steady state is the tail
+        steady = gen_s[1:] or gen_s
+        print(f"pareto points: {len(pf)}; per-generation "
+              f"{sum(steady) / len(steady):.2f}s steady "
+              f"({cfg.pop_size * len(steady) / sum(steady):.1f} "
+              f"individuals/s), {gen_s[0]:.2f}s first (incl. compile)")
+    else:
+        print(f"pareto points: {len(pf)} (initial population only — "
+              f"no generations evolved)")
+    flash = area.flash_full_tc(cfg.bits) * sizes[0]
+    for f in pf[np.argsort(pf[:, 0])]:
+        print(f"  acc={1 - f[0]:.3f}  area={f[1] * flash:.0f}T (norm {f[1]:.3f})")
+    return pf
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", required=True)
+    ap.add_argument("--arch", help="LM architecture (required unless "
+                                   "--adc-search)")
     ap.add_argument("--smoke", action="store_true",
                     help="reduced config (CPU-runnable)")
     ap.add_argument("--steps", type=int, default=50)
@@ -48,12 +104,27 @@ def main(argv=None):
     ap.add_argument("--ckpt-dir", default="/tmp/repro_ckpt")
     ap.add_argument("--ckpt-every", type=int, default=20)
     ap.add_argument("--log-every", type=int, default=10)
+    ap.add_argument("--adc-search", action="store_true",
+                    help="run the paper's in-training ADC optimization "
+                         "instead of LM training")
+    ap.add_argument("--dataset", default="seeds")
+    ap.add_argument("--bits", type=int, default=3)
+    ap.add_argument("--pop", type=int, default=16)
+    ap.add_argument("--generations", type=int, default=4)
+    ap.add_argument("--train-steps", type=int, default=100)
+    ap.add_argument("--engine", default="batched",
+                    choices=("batched", "reference"))
     args = ap.parse_args(argv)
+
+    if args.adc_search:
+        return run_adc_search(args)
+    if not args.arch:
+        ap.error("--arch is required unless --adc-search is given")
 
     cfg, mesh, train_step, data = build(
         args.arch, smoke=args.smoke, seq=args.seq, batch=args.batch,
         microbatches=args.microbatches, steps_total=args.steps)
-    with jax.set_mesh(mesh):
+    with compat.set_mesh(mesh):
         state = steps.init_state(jax.random.PRNGKey(0), cfg, mesh)
         jstep = jax.jit(train_step, donate_argnums=(0,))
         ckpt = CheckpointManager(args.ckpt_dir, keep=2)

@@ -24,7 +24,7 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 from jax.sharding import PartitionSpec as P
-from jax import shard_map
+from repro.compat import shard_map
 
 from repro.configs.base import MoEConfig
 

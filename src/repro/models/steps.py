@@ -19,7 +19,7 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 from jax.sharding import NamedSharding, PartitionSpec as P
-from jax import shard_map
+from repro.compat import shard_map
 
 from repro.configs.base import ArchConfig, ShapeConfig
 from repro.distributed import sharding as sh

@@ -1,7 +1,7 @@
 """Design-rule area model tests (paper §3.1-3.2 calibration anchors)."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from hypothesis_compat import given, settings, st
 
 from repro.core import area
 

@@ -36,11 +36,11 @@ _SUBPROC = textwrap.dedent("""
     os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
     import jax, jax.numpy as jnp, numpy as np
     from jax.sharding import PartitionSpec as P
-    from jax import shard_map
+    from repro.compat import AxisType, make_mesh, shard_map
     from repro.optim import compression
 
-    mesh = jax.make_mesh((8,), ("data",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    mesh = make_mesh((8,), ("data",),
+                     axis_types=(AxisType.Auto,))
     rng = np.random.default_rng(0)
     xs = rng.normal(size=(8, 1000)).astype(np.float32)
 

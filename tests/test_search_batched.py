@@ -1,0 +1,140 @@
+"""Population-batched search engine (DESIGN.md §2): kernel parity across
+the population axis and batched-vs-per-individual engine equivalence."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import adc, nsga2, search
+from repro.kernels import ops, ref
+from repro.kernels.adc_quantize import adc_quantize_pallas_population
+
+
+def _rand_masks(rng, p, c, n):
+    m = (rng.random((p, c, n)) < 0.6).astype(np.int32)
+    m[..., 0] = 1
+    m[..., -1] = 1                                 # >= 2 levels/channel
+    return jnp.asarray(m)
+
+
+# ------------------------------------------------------- population kernel
+@pytest.mark.parametrize("bits", [2, 4, 6])
+def test_population_kernel_matches_adc_codes(bits):
+    """Pallas (interpret) population kernel == the adc_codes digital oracle
+    for every individual in the batch."""
+    rng = np.random.default_rng(bits)
+    p, m, c = 6, 45, 5
+    n = 2 ** bits
+    x = jnp.asarray(rng.random((m, c)) * 1.2 - 0.1, jnp.float32)  # incl. OOR
+    masks = _rand_masks(rng, p, c, n)
+    tables = ref.value_table(masks, bits)
+    got = adc_quantize_pallas_population(x, tables, bits=bits, block_m=16,
+                                         interpret=True)
+    assert got.shape == (p, m, c)
+    codes = adc.adc_codes(jnp.broadcast_to(x, (p, m, c)), masks, bits=bits)
+    want = adc.level_values(bits)[codes]
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-6)
+
+
+@pytest.mark.parametrize("bits", [2, 3])
+def test_population_kernel_rows_match_single_kernel(bits):
+    """Row p of the population launch == the single-table kernel on mask p."""
+    rng = np.random.default_rng(7 + bits)
+    p, m, c = 4, 33, 9
+    x = jnp.asarray(rng.random((m, c)), jnp.float32)
+    masks = _rand_masks(rng, p, c, 2 ** bits)
+    tables = ref.value_table(masks, bits)
+    pop = adc_quantize_pallas_population(x, tables, bits=bits, block_m=8,
+                                         interpret=True)
+    for i in range(p):
+        one = ops.adc_quantize(x, masks[i], bits=bits, interpret=True)
+        np.testing.assert_allclose(np.asarray(pop[i]), np.asarray(one),
+                                   rtol=1e-6)
+
+
+def test_ops_population_wrapper_matches_oracle():
+    rng = np.random.default_rng(3)
+    p, m, c, bits = 5, 50, 4, 4
+    x = jnp.asarray(rng.random((m, c)), jnp.float32)
+    masks = _rand_masks(rng, p, c, 2 ** bits)
+    tables = ref.value_table(masks, bits)
+    want = ref.adc_quantize_ref_population(x, tables, bits)
+    got = ops.adc_quantize_population(x, masks, bits=bits)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-6)
+
+
+# ----------------------------------------------------- batched ADC semantics
+def test_batched_tree_lut_matches_per_mask():
+    rng = np.random.default_rng(11)
+    masks = _rand_masks(rng, 8, 3, 16)
+    batched = adc.tree_lut(masks)
+    per = jax.vmap(jax.vmap(adc.tree_lut))(masks)
+    np.testing.assert_array_equal(np.asarray(batched), np.asarray(per))
+
+
+def test_tree_vs_nearest_coincide_on_full_masks_population():
+    bits, p, c = 3, 4, 5
+    masks = jnp.ones((p, c, 2 ** bits), jnp.int32)
+    x = jnp.asarray(np.random.default_rng(0).random((p, 20, c)), jnp.float32)
+    a = adc.adc_quantize(x, masks, bits=bits, mode="tree", ste=False)
+    b = adc.adc_quantize(x, masks, bits=bits, mode="nearest", ste=False)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b))
+
+
+def test_repair_mask_population_batch():
+    m = jnp.zeros((6, 3, 8), jnp.int32)
+    r = np.asarray(adc.repair_mask(m, 2))
+    assert r.shape == (6, 3, 8)
+    assert (r.sum(-1) >= 2).all()
+
+
+def test_decode_population_matches_per_genome():
+    rng = np.random.default_rng(5)
+    c, bits = 4, 3
+    G = search.genome_len(c, bits)
+    genomes = jnp.asarray((rng.random((7, G)) < 0.5).astype(np.uint8))
+    masks, dps = search.decode_population(genomes, c, bits)
+    for i in range(genomes.shape[0]):
+        mask_i, dp_i = search.decode_genome(genomes[i], c, bits)
+        np.testing.assert_array_equal(np.asarray(masks[i]),
+                                      np.asarray(mask_i))
+        assert float(dps[i]) == float(dp_i)
+
+
+# ------------------------------------------------------------ engine parity
+def test_batched_engine_matches_reference_fitness_and_front():
+    """Acceptance: fixed seed -> the population-batched generation yields
+    the same fitness matrix (and hence the same Pareto front) as the
+    per-individual reference path."""
+    from repro.data import tabular
+    data = tabular.make_dataset("seeds")
+    sizes = (7, 4, 3)
+    cfg = search.SearchConfig(bits=3, pop_size=8, generations=1,
+                              train_steps=40)
+    rng = np.random.default_rng(0)
+    G = search.genome_len(sizes[0], cfg.bits)
+    pop = (rng.random((cfg.pop_size, G)) < 0.5).astype(np.uint8)
+    pop[0] = 1
+    fb = search.evaluate_population(pop, data, sizes, cfg)
+    fr = search.evaluate_population_reference(pop, data, sizes, cfg)
+    # areas are exact integers; accuracies may differ by reduction order
+    np.testing.assert_array_equal(fb[:, 1], fr[:, 1])
+    np.testing.assert_allclose(fb[:, 0], fr[:, 0], atol=1e-6)
+    rank_b = nsga2.fast_non_dominated_sort(fb)
+    rank_r = nsga2.fast_non_dominated_sort(fr)
+    np.testing.assert_array_equal(rank_b == 0, rank_r == 0)
+
+
+def test_run_search_engines_agree_on_front():
+    """A short full search produces identical Pareto genomes either way
+    (evolve's RNG stream is engine-independent given equal fitness)."""
+    from repro.data import tabular
+    data = tabular.make_dataset("seeds")
+    sizes = (7, 4, 3)
+    kw = dict(bits=2, pop_size=6, generations=2, train_steps=30)
+    pg_b, pf_b, _ = search.run_search(
+        data, sizes, search.SearchConfig(engine="batched", **kw))
+    pg_r, pf_r, _ = search.run_search(
+        data, sizes, search.SearchConfig(engine="reference", **kw))
+    np.testing.assert_array_equal(pg_b, pg_r)
+    np.testing.assert_allclose(pf_b, pf_r, atol=1e-6)
