@@ -4,10 +4,13 @@ system micro-benchmarks. Prints ``name,us_per_call,derived`` CSV rows
 
   PYTHONPATH=src python -m benchmarks.run            # fast pass
   PYTHONPATH=src python -m benchmarks.run --full     # paper-scale GA
+  PYTHONPATH=src python -m benchmarks.run --filter search_adc --smoke \
+      --json BENCH_ci.json                           # CI bench-smoke lane
 """
 from __future__ import annotations
 
 import argparse
+import json
 import time
 
 import jax
@@ -20,14 +23,13 @@ import numpy as np
 def _timeit(fn, *args, reps=3, warmup=1, **kw):
     r = None
     for _ in range(warmup):
-        r = fn(*args, **kw)
-        if hasattr(r, "block_until_ready"):
-            r.block_until_ready()
+        # block on the WHOLE result pytree: a dict/tuple return has no
+        # block_until_ready attribute, and skipping it would time async
+        # dispatch instead of execution.
+        r = jax.block_until_ready(fn(*args, **kw))
     t0 = time.perf_counter()
     for _ in range(reps):
-        r = fn(*args, **kw)
-        if hasattr(r, "block_until_ready"):
-            r.block_until_ready()
+        r = jax.block_until_ready(fn(*args, **kw))
     return (time.perf_counter() - t0) / reps * 1e6, r
 
 
@@ -93,7 +95,27 @@ def bench_ga_generation():
     return us, "pop=16 vmapped QAT"
 
 
-def bench_search_adc(pop=16):
+def _search_bench_base(pop, smoke):
+    """Shared search-bench config. --smoke is the CI lane: tiny,
+    fixed-seed (rng(0), SearchConfig.seed=0), single-rep — the search
+    *results* (fitness, speedup structure, JSON shape) are deterministic
+    run-to-run; the wall-clock fields still vary like any timing."""
+    if smoke:
+        return dict(bits=2, pop_size=min(pop, 8), generations=1,
+                    train_steps=30)
+    return dict(bits=3, pop_size=pop, generations=2, train_steps=60)
+
+
+def _search_genomes(pop, bits, channels=7):
+    from repro.core import search
+    G = search.genome_len(channels, bits)
+    rng = np.random.default_rng(0)
+    genomes = (rng.random((pop, G)) < 0.5).astype(np.uint8)
+    genomes[0] = 1
+    return genomes
+
+
+def bench_search_adc(pop=16, smoke=False):
     """Batched vs per-individual search engines (DESIGN.md §2): times one
     full population evaluation (== the per-generation work NSGA-II hands
     to the engine) on each path, plus steady-state per-generation wall
@@ -104,18 +126,17 @@ def bench_search_adc(pop=16):
     from repro.data import tabular
     data = tabular.make_dataset("seeds")
     sizes = (7, 4, 3)
-    base = dict(bits=3, pop_size=pop, generations=2, train_steps=60)
-    G = search.genome_len(sizes[0], base["bits"])
-    rng = np.random.default_rng(0)
-    genomes = (rng.random((pop, G)) < 0.5).astype(np.uint8)
-    genomes[0] = 1
+    base = _search_bench_base(pop, smoke)
+    pop = base["pop_size"]
+    genomes = _search_genomes(pop, base["bits"])
+    reps, warmup = (1, 1) if smoke else (2, 1)
     report = {"pop_size": pop, "qat_steps": base["train_steps"],
-              "bits": base["bits"], "dataset": "seeds",
+              "bits": base["bits"], "dataset": "seeds", "smoke": smoke,
               "backend": jax.default_backend()}
     for engine in ("batched", "reference"):
         cfg = search.SearchConfig(engine=engine, **base)
         eval_fn = search.make_eval_fn(data, sizes, cfg)
-        us_gen, _ = _timeit(eval_fn, genomes, reps=2, warmup=1)
+        us_gen, _ = _timeit(eval_fn, genomes, reps=reps, warmup=warmup)
         report[engine] = {"per_generation_s": us_gen / 1e6,
                           "individuals_per_s": pop / (us_gen / 1e6)}
     # steady-state check on a real (short) batched search
@@ -134,6 +155,44 @@ def bench_search_adc(pop=16):
     return (report["batched"]["per_generation_s"] * 1e6,
             f"pop={pop}: batched {bi:.1f} vs per-individual {ri:.1f} "
             f"individuals/s ({speedup:.1f}x)")
+
+
+def bench_search_adc_sharded(pop=16, smoke=False):
+    """Device-sharded vs single-device batched engine (DESIGN.md §7):
+    one population evaluation per path, individuals/sec vs device count.
+    On a 1-device host the shard is trivial (parity check + shard_map
+    overhead measurement); on a pod the population splits P/D per chip.
+    Writes search_adc_sharded.json."""
+    from benchmarks import paper_tables
+    from repro.core import search
+    from repro.data import tabular
+    data = tabular.make_dataset("seeds")
+    sizes = (7, 4, 3)
+    base = _search_bench_base(pop, smoke)
+    pop = base["pop_size"]
+    genomes = _search_genomes(pop, base["bits"])
+    mesh = search.default_search_mesh()
+    reps, warmup = (1, 1) if smoke else (2, 1)
+    report = {"pop_size": pop, "qat_steps": base["train_steps"],
+              "bits": base["bits"], "dataset": "seeds", "smoke": smoke,
+              "backend": jax.default_backend(),
+              "device_count": len(jax.devices()),
+              "mesh": dict(mesh.shape)}
+    for engine in ("sharded", "batched"):
+        cfg = search.SearchConfig(engine=engine, **base)
+        eval_fn = search.make_eval_fn(data, sizes, cfg, mesh=mesh)
+        us_gen, _ = _timeit(eval_fn, genomes, reps=reps, warmup=warmup)
+        report[engine] = {"per_generation_s": us_gen / 1e6,
+                          "individuals_per_s": pop / (us_gen / 1e6)}
+    report["speedup_sharded_over_batched"] = (
+        report["batched"]["per_generation_s"]
+        / report["sharded"]["per_generation_s"])
+    paper_tables.save("search_adc_sharded", report)
+    si = report["sharded"]["individuals_per_s"]
+    return (report["sharded"]["per_generation_s"] * 1e6,
+            f"pop={pop} devices={report['device_count']}: "
+            f"{si:.1f} individuals/s sharded "
+            f"({report['speedup_sharded_over_batched']:.2f}x vs batched)")
 
 
 def bench_lm_train_step():
@@ -166,9 +225,19 @@ def main() -> None:
     ap.add_argument("names", nargs="*",
                     help="run only the named benchmarks (substring match), "
                          "e.g. 'search_adc'")
+    ap.add_argument("--filter", action="append", default=[],
+                    help="same as positional names (CI-friendly spelling); "
+                         "repeatable")
     ap.add_argument("--full", action="store_true")
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny fixed-seed configs for the search benches: "
+                         "deterministic derived numbers, CI-stable")
+    ap.add_argument("--json", metavar="PATH",
+                    help="also write rows + environment to PATH as JSON "
+                         "(the CI bench-smoke artifact, e.g. BENCH_ci.json)")
     args = ap.parse_args()
     fast = not args.full
+    smoke = args.smoke
     benches = [
         ("table3_flash_split", bench_table3),
         ("table4_full_adcs", bench_table4),
@@ -176,24 +245,37 @@ def main() -> None:
         ("fig4_pareto", lambda: bench_fig4(fast)),
         ("kernel_adc_quantize", bench_adc_kernel),
         ("ga_generation_vmap_qat", bench_ga_generation),
-        ("search_adc", bench_search_adc),
+        ("search_adc", lambda: bench_search_adc(smoke=smoke)),
+        ("search_adc_sharded", lambda: bench_search_adc_sharded(smoke=smoke)),
         ("lm_train_step_smoke", bench_lm_train_step),
         ("roofline_summary", bench_roofline_summary),
     ]
-    if args.names:
+    queries = list(args.names) + list(args.filter)
+    if queries:
         benches = [(n, f) for n, f in benches
-                   if any(q in n for q in args.names)]
+                   if any(q in n for q in queries)]
         if not benches:
-            raise SystemExit(f"no benchmark matches {args.names}")
+            raise SystemExit(f"no benchmark matches {queries}")
     print("name,us_per_call,derived")
+    rows = []
     failures = 0
     for name, fn in benches:
         try:
             us, derived = fn()
+            rows.append({"name": name, "us_per_call": us,
+                         "derived": derived})
             print(f"{name},{us:.0f},{derived}", flush=True)
         except Exception as e:                     # noqa: BLE001
             failures += 1
+            rows.append({"name": name, "us_per_call": None,
+                         "derived": f"FAILED {type(e).__name__}: {e}"})
             print(f"{name},FAILED,{type(e).__name__}: {e}", flush=True)
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump({"backend": jax.default_backend(),
+                       "device_count": len(jax.devices()),
+                       "smoke": smoke, "failures": failures,
+                       "rows": rows}, f, indent=1)
     if failures:
         raise SystemExit(1)
 

@@ -30,6 +30,17 @@ import jax
 import numpy as np
 
 
+def pack_json(obj: Any) -> np.ndarray:
+    """JSON-serializable object -> uint8 array, so non-array state (e.g.
+    a numpy Generator's bit_generator state, whose PCG64 words exceed any
+    integer dtype) rides the same one-.npy-per-leaf format as arrays."""
+    return np.frombuffer(json.dumps(obj).encode("utf-8"), np.uint8).copy()
+
+
+def unpack_json(arr) -> Any:
+    return json.loads(bytes(np.asarray(arr, np.uint8)))
+
+
 def _flatten(tree) -> Dict[str, Any]:
     flat = {}
     for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
@@ -108,10 +119,15 @@ class CheckpointManager:
         steps = self.all_steps()
         return steps[-1] if steps else None
 
-    def restore(self, step: int, like, shardings=None):
+    def restore(self, step: int, like, shardings=None, host: bool = False):
         """Restore into the structure of ``like``. With ``shardings`` (a
         matching pytree of NamedSharding) arrays are placed sharded against
-        the *current* mesh — this is the elastic-restart path."""
+        the *current* mesh — this is the elastic-restart path.
+
+        ``host=True`` returns numpy arrays without device placement: jax
+        canonicalizes float64/int64 on device_put, which would corrupt
+        host-side state (NSGA-II fitness matrices, packed RNG state) whose
+        resume contract is bit-exactness."""
         d = self.dir / f"step_{step}"
         flat_like = _flatten(like)
         flat_sh = _flatten(shardings) if shardings is not None else {}
@@ -120,6 +136,9 @@ class CheckpointManager:
             if leaf is None:
                 continue
             arr = np.load(d / (k.replace("/", "__") + ".npy"))
+            if host:
+                vals[k] = arr
+                continue
             sh = flat_sh.get(k)
             vals[k] = (jax.device_put(arr, sh) if sh is not None
                        else jax.device_put(arr))

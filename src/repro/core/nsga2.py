@@ -8,9 +8,17 @@ rate pm_bit = pm / sqrt(G) by default, see DESIGN.md §6.3), elitist
 
 Vectorised numpy: populations are (P, G) uint8, fitnesses (P, M) float
 (all objectives MINIMIZED). Deterministic under a seeded Generator.
+
+The loop is factored into explicit state (``EvolveState``: population,
+fitness, completed-generation counter, RNG) plus a pure-ish transition
+(``evolve_step``), so a caller can checkpoint after every generation and
+resume a killed run bit-identically: the restored Generator replays the
+exact random stream the uninterrupted run would have drawn
+(core/search.run_search wires this through checkpoint/manager.py).
 """
 from __future__ import annotations
 
+from dataclasses import dataclass
 from typing import Callable, Optional, Tuple
 
 import numpy as np
@@ -66,6 +74,66 @@ def _tournament(rng, rank, dist, k=2):
     return best
 
 
+@dataclass
+class EvolveState:
+    """Everything needed to continue (or bit-identically resume) a run:
+    the current archive, how many generations are already done, and the
+    numpy Generator whose stream drives selection/crossover/mutation."""
+    pop: np.ndarray            # (P, G) uint8
+    fit: np.ndarray            # (P, M) float64
+    generation: int            # generations COMPLETED so far
+    rng: np.random.Generator
+
+
+def init_state(eval_fn: Callable[[np.ndarray], np.ndarray],
+               genome_len: int,
+               pop_size: int = 32,
+               seed: int = 0,
+               init: Optional[np.ndarray] = None) -> EvolveState:
+    """Draw (or adopt) the initial population and evaluate it."""
+    rng = np.random.default_rng(seed)
+    if init is None:
+        pop = (rng.random((pop_size, genome_len)) < 0.5).astype(np.uint8)
+        pop[0] = 1                                   # seed the full (unpruned) design
+    else:
+        pop = init.astype(np.uint8).copy()
+    fit = np.asarray(eval_fn(pop), np.float64)
+    return EvolveState(pop, fit, 0, rng)
+
+
+def evolve_step(state: EvolveState,
+                eval_fn: Callable[[np.ndarray], np.ndarray],
+                pc: float = 0.7,
+                pm: float = 0.2,
+                pm_bit: Optional[float] = None) -> EvolveState:
+    """One NSGA-II generation: selection -> variation -> evaluation ->
+    (mu + lambda) elitist survival. Mutates ``state.rng``'s stream and
+    returns the successor state."""
+    pop, fit, rng = state.pop, state.fit, state.rng
+    pop_size, glen = pop.shape
+    if pm_bit is None:
+        pm_bit = pm / max(np.sqrt(glen), 1.0)
+    rank = fast_non_dominated_sort(fit)
+    dist = crowding_distance(fit, rank)
+    parents_a = _tournament(rng, rank, dist)
+    parents_b = _tournament(rng, rank, dist)
+    xa, xb = pop[parents_a], pop[parents_b]
+    do_x = (rng.random((pop_size, 1)) < pc)
+    mix = rng.random((pop_size, glen)) < 0.5
+    child = np.where(do_x & mix, xb, xa)
+    flip = rng.random((pop_size, glen)) < pm_bit
+    child = np.where(flip, 1 - child, child).astype(np.uint8)
+    cfit = np.asarray(eval_fn(child), np.float64)
+    # (mu + lambda) elitist survival
+    allpop = np.concatenate([pop, child])
+    allfit = np.concatenate([fit, cfit])
+    r = fast_non_dominated_sort(allfit)
+    d = crowding_distance(allfit, r)
+    order = np.lexsort((-d, r))
+    keep = order[:pop_size]
+    return EvolveState(allpop[keep], allfit[keep], state.generation + 1, rng)
+
+
 def evolve(eval_fn: Callable[[np.ndarray], np.ndarray],
            genome_len: int,
            pop_size: int = 32,
@@ -76,43 +144,29 @@ def evolve(eval_fn: Callable[[np.ndarray], np.ndarray],
            seed: int = 0,
            init: Optional[np.ndarray] = None,
            log: Optional[Callable[[int, np.ndarray, np.ndarray], None]] = None,
+           state: Optional[EvolveState] = None,
+           on_generation: Optional[Callable[[EvolveState], None]] = None,
            ) -> Tuple[np.ndarray, np.ndarray]:
     """Run NSGA-II. ``eval_fn``: (P, G) uint8 -> (P, M) fitness (minimize).
     Returns (population, fitness) of the final archive (all evaluated, elitist).
+
+    ``state``: resume from a prior ``EvolveState`` (e.g. restored from a
+    checkpoint) instead of drawing a fresh initial population; generations
+    already recorded in it are not re-run. ``on_generation`` fires after
+    the initial evaluation and after every completed generation — the
+    checkpoint hook.
     """
-    rng = np.random.default_rng(seed)
-    if pm_bit is None:
-        pm_bit = pm / max(np.sqrt(genome_len), 1.0)
-    if init is None:
-        pop = (rng.random((pop_size, genome_len)) < 0.5).astype(np.uint8)
-        pop[0] = 1                                   # seed the full (unpruned) design
-    else:
-        pop = init.astype(np.uint8).copy()
-        pop_size = pop.shape[0]
-    fit = np.asarray(eval_fn(pop), np.float64)
-    for g in range(generations):
-        rank = fast_non_dominated_sort(fit)
-        dist = crowding_distance(fit, rank)
-        parents_a = _tournament(rng, rank, dist)
-        parents_b = _tournament(rng, rank, dist)
-        xa, xb = pop[parents_a], pop[parents_b]
-        do_x = (rng.random((pop_size, 1)) < pc)
-        mix = rng.random((pop_size, genome_len)) < 0.5
-        child = np.where(do_x & mix, xb, xa)
-        flip = rng.random((pop_size, genome_len)) < pm_bit
-        child = np.where(flip, 1 - child, child).astype(np.uint8)
-        cfit = np.asarray(eval_fn(child), np.float64)
-        # (mu + lambda) elitist survival
-        allpop = np.concatenate([pop, child])
-        allfit = np.concatenate([fit, cfit])
-        r = fast_non_dominated_sort(allfit)
-        d = crowding_distance(allfit, r)
-        order = np.lexsort((-d, r))
-        keep = order[:pop_size]
-        pop, fit = allpop[keep], allfit[keep]
+    if state is None:
+        state = init_state(eval_fn, genome_len, pop_size, seed, init)
+        if on_generation is not None:
+            on_generation(state)
+    for g in range(state.generation, generations):
+        state = evolve_step(state, eval_fn, pc, pm, pm_bit)
         if log is not None:
-            log(g, pop, fit)
-    return pop, fit
+            log(g, state.pop, state.fit)
+        if on_generation is not None:
+            on_generation(state)
+    return state.pop, state.fit
 
 
 def pareto_front(pop: np.ndarray, fit: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:

@@ -14,6 +14,16 @@ workload. ``evaluate_population_reference`` keeps the paper's sequential
 per-individual path alive as the parity oracle; tests assert both produce
 the same fitness matrix, hence the same Pareto front.
 
+The ``sharded`` engine (DESIGN.md §7) partitions the population axis over
+the device mesh via ``shard_map``: genomes, the stacked initial
+parameter/optimizer buffers, and hence the (P, C, 2^N) value-table batch
+and the vmapped QAT loops all split P/D-per-device (axis choice via
+distributed/sharding.population_axes, with divisibility-checked fallback
+to the batched single-device engine). Search state checkpoints through
+checkpoint/manager.py — genomes, fitness matrix, RNG state, generation
+counter — so a killed search resumes mid-run bit-identically
+(``run_search(..., ckpt=..., resume=True)``).
+
 Genome layout per individual (C input channels, N-bit ADC):
   [ C * 2^N mask bits | 4 bits decimal-point position (dp in [-8, 7]) ]
 """
@@ -26,8 +36,11 @@ from typing import Callable, Dict, Optional, Tuple
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.sharding import PartitionSpec
 
+from repro import compat
 from repro.core import adc, area, nsga2
+from repro.distributed import sharding as sharding_lib
 from repro.kernels import ops
 from repro.models import mlp as mlp_lib
 
@@ -47,7 +60,7 @@ class SearchConfig:
     mode: str = "tree"            # circuit-faithful pruned-ADC semantics
     design: str = "ours"          # area model used in the fitness
     model: str = "mlp"            # 'mlp' | 'svm' (paper targets both)
-    engine: str = "batched"       # 'batched' SPMD engine | 'reference'
+    engine: str = "batched"       # 'batched' | 'sharded' | 'reference'
 
 
 def genome_len(channels: int, bits: int) -> int:
@@ -217,6 +230,62 @@ def evaluate_population(genomes: np.ndarray, data: Dict, sizes,
                     axis=1)
 
 
+# ------------------------------------------------------------ sharded engine
+def default_search_mesh() -> jax.sharding.Mesh:
+    """All visible devices on a ('data', 'model') mesh, model=1 — GA
+    individuals are embarrassingly parallel, so every chip takes
+    population slices. (A caller with a real 2D mesh passes it in and
+    population_axes folds both axes into the population split.)"""
+    return compat.make_mesh((len(jax.devices()), 1), ("data", "model"),
+                            axis_types=(compat.AxisType.Auto,) * 2)
+
+
+@functools.lru_cache(maxsize=8)
+def _sharded_train_and_score(mesh, axes, sizes, cfg: SearchConfig):
+    """Jitted shard_map'd generation step: the population axis of the
+    genomes and the donated-style stacked train states splits over
+    ``axes``; the shared dataset replicates. Inside the body every device
+    runs the plain batched program on its P/D slice — decode, value
+    tables, the (P_local, M/bm) population-kernel grid, and the vmapped
+    QAT scan all stay local, so no cross-device traffic exists between
+    the initial scatter and the final fitness gather."""
+    pspec = PartitionSpec(axes)
+
+    def body(genomes, params0, opt0, data):
+        return _train_and_score(genomes, params0, opt0, data, sizes, cfg)
+
+    # mirror the batched engine: donate the stacked train states on
+    # accelerators so each device's initial buffers alias the scan carry
+    # (XLA CPU cannot alias and would warn)
+    donate = (1, 2) if jax.default_backend() != "cpu" else ()
+    return jax.jit(compat.shard_map(
+        body, mesh=mesh,
+        in_specs=(pspec, pspec, pspec, PartitionSpec()),
+        out_specs=pspec, check_vma=False), donate_argnums=donate)
+
+
+def evaluate_population_sharded(genomes: np.ndarray, data: Dict, sizes,
+                                cfg: SearchConfig,
+                                mesh: Optional[jax.sharding.Mesh] = None
+                                ) -> np.ndarray:
+    """Device-sharded engine: same fitness contract as
+    ``evaluate_population`` with the population partitioned P/D per
+    device. Falls back to the batched engine when no mesh axis set
+    divides P (the divisibility-checked fallback — results identical,
+    just unsharded)."""
+    mesh = default_search_mesh() if mesh is None else mesh
+    axes = sharding_lib.population_axes(mesh, len(genomes))
+    if axes is None:
+        return evaluate_population(genomes, data, sizes, cfg)
+    dev_data = {k: jnp.asarray(v) for k, v in data.items()}
+    params0, opt0 = _stacked_init(len(genomes), sizes, cfg)
+    fn = _sharded_train_and_score(mesh, axes, tuple(sizes), cfg)
+    accs = np.asarray(fn(jnp.asarray(genomes, jnp.uint8), params0, opt0,
+                         dev_data))
+    return np.stack([1.0 - accs, population_areas(genomes, sizes[0], cfg)],
+                    axis=1)
+
+
 @functools.partial(jax.jit, static_argnames=("sizes", "cfg"))
 def _eval_one_acc(genome, data, sizes, cfg: SearchConfig):
     return _train_eval_one(genome, data, sizes, cfg)
@@ -235,7 +304,8 @@ def evaluate_population_reference(genomes: np.ndarray, data: Dict, sizes,
                     axis=1)
 
 
-def make_eval_fn(data: Dict, sizes, cfg: SearchConfig
+def make_eval_fn(data: Dict, sizes, cfg: SearchConfig,
+                 mesh: Optional[jax.sharding.Mesh] = None
                  ) -> Callable[[np.ndarray], np.ndarray]:
     """The (P, G) -> (P, 2) fitness function ``nsga2.evolve`` consumes,
     dispatched on ``cfg.engine``. The dataset moves host->device once
@@ -245,20 +315,82 @@ def make_eval_fn(data: Dict, sizes, cfg: SearchConfig
     if cfg.engine == "reference":
         return lambda pop: evaluate_population_reference(pop, dev_data,
                                                          sizes, cfg)
+    if cfg.engine == "sharded":
+        m = default_search_mesh() if mesh is None else mesh
+        return lambda pop: evaluate_population_sharded(pop, dev_data, sizes,
+                                                       cfg, mesh=m)
     if cfg.engine != "batched":
         raise ValueError(f"unknown engine {cfg.engine!r}")
     return lambda pop: evaluate_population(pop, dev_data, sizes, cfg)
 
 
+# --------------------------------------------------- search-state checkpoint
+def search_state_tree(state: nsga2.EvolveState) -> Dict[str, np.ndarray]:
+    """EvolveState -> the flat array tree CheckpointManager persists
+    (DESIGN.md §7 format): genomes, fitness matrix, the numpy Generator's
+    bit_generator state (JSON packed to uint8 — PCG64 words exceed
+    int64), and the completed-generation counter."""
+    from repro.checkpoint import manager
+    return {
+        "genomes": np.asarray(state.pop, np.uint8),
+        "fitness": np.asarray(state.fit, np.float64),
+        "rng_state": manager.pack_json(state.rng.bit_generator.state),
+        "generation": np.asarray(state.generation, np.int64),
+    }
+
+
+def restore_search_state(ckpt, step: int, pop_size: int, glen: int
+                         ) -> nsga2.EvolveState:
+    """Inverse of ``search_state_tree``. host=True keeps float64 fitness
+    and the exact RNG words (device_put would canonicalize to f32)."""
+    from repro.checkpoint import manager
+    like = {"genomes": np.zeros((pop_size, glen), np.uint8),
+            "fitness": np.zeros((pop_size, 2), np.float64),
+            "rng_state": np.zeros(1, np.uint8),
+            "generation": np.zeros((), np.int64)}
+    tree = ckpt.restore(step, like, host=True)
+    if tuple(tree["genomes"].shape) != (pop_size, glen):
+        raise ValueError(
+            f"checkpoint at step {step} holds genomes of shape "
+            f"{tree['genomes'].shape}, but the current config expects "
+            f"({pop_size}, {glen}) — resuming with changed --pop/--bits/"
+            f"dataset would silently corrupt the search")
+    rng = np.random.default_rng()
+    rng.bit_generator.state = manager.unpack_json(tree["rng_state"])
+    return nsga2.EvolveState(np.asarray(tree["genomes"], np.uint8),
+                             np.asarray(tree["fitness"], np.float64),
+                             int(tree["generation"]), rng)
+
+
 def run_search(data: Dict, sizes, cfg: SearchConfig,
-               log: Optional[Callable] = None):
+               log: Optional[Callable] = None,
+               ckpt=None, resume: bool = False,
+               mesh: Optional[jax.sharding.Mesh] = None):
     """Full in-training optimization. Returns (pareto_genomes, pareto_fit,
-    decode) where fit columns are [1-acc, normalized area]."""
+    decode) where fit columns are [1-acc, normalized area].
+
+    ``ckpt`` (a checkpoint.manager.CheckpointManager) snapshots the search
+    state after the initial evaluation and every generation; with
+    ``resume=True`` the latest snapshot restarts the run bit-identically —
+    a killed-and-resumed search matches an uninterrupted one
+    generation-for-generation. ``mesh`` feeds the 'sharded' engine."""
     C = sizes[0]
     G = genome_len(C, cfg.bits)
+    state = None
+    if ckpt is not None and resume:
+        step = ckpt.latest_step()
+        if step is not None:
+            state = restore_search_state(ckpt, step, cfg.pop_size, G)
+    on_gen = None
+    if ckpt is not None:
+        # blocking: the state is a few KB and the atomic-commit rename must
+        # land before the next generation can be declared done.
+        on_gen = lambda st: ckpt.save(st.generation, search_state_tree(st),
+                                      blocking=True)
     pop, fit = nsga2.evolve(
-        make_eval_fn(data, sizes, cfg), G, pop_size=cfg.pop_size,
-        generations=cfg.generations, seed=cfg.seed, log=log)
+        make_eval_fn(data, sizes, cfg, mesh=mesh), G, pop_size=cfg.pop_size,
+        generations=cfg.generations, seed=cfg.seed, log=log,
+        state=state, on_generation=on_gen)
     pg, pf = nsga2.pareto_front(pop, fit)
     decode = lambda g: decode_genome(jnp.asarray(g), C, cfg.bits, cfg.min_levels)
     return pg, pf, decode

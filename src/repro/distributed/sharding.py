@@ -187,6 +187,34 @@ def dp_axes(mesh: Mesh) -> Tuple[str, ...]:
     return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
 
 
+# GA individuals are embarrassingly parallel, so the population axis of the
+# in-training ADC search (core/search.py, engine='sharded') may take EVERY
+# mesh axis — candidates tried in preference order, same contract as the
+# parameter rules above: all axes present and the dim divides evenly.
+RULES_POPULATION: Tuple[Tuple[str, ...], ...] = (
+    ("pod", "data", "model"), ("data", "model"), ("pod", "data"),
+    ("data",), ("model",))
+
+
+def population_axes(mesh: Mesh, p: int) -> Optional[Tuple[str, ...]]:
+    """Mesh axes the (P,)-leading population batch shards over: the
+    divisible candidate from RULES_POPULATION covering the most devices.
+    A size-1 winner is legal (trivial shard — the shard_map engine still
+    runs, each device holding the full population). None means no
+    candidate divides P: the caller must fall back to the single-device
+    batched engine."""
+    best: Optional[Tuple[str, ...]] = None
+    best_size = 0
+    for cand in RULES_POPULATION:
+        axes = tuple(a for a in cand if a in mesh.axis_names)
+        if len(axes) != len(cand):
+            continue
+        size = math.prod(mesh.shape[a] for a in axes)
+        if p % size == 0 and size > best_size:
+            best, best_size = axes, size
+    return best
+
+
 def batch_axes(mesh: Mesh, cfg, b: int) -> Optional[Tuple[str, ...]]:
     """Mesh axes the batch dim shards over (first divisible candidate)."""
     for cand in rules_for(cfg)["batch"]:

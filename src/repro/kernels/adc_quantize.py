@@ -21,6 +21,15 @@ Two entry points share one kernel body:
   per individual. This is the compiled inner loop of the in-training
   search engine (core/search.py).
 
+Under the device-sharded engine (DESIGN.md §7) the population entry runs
+*inside* a ``shard_map`` body: P is then the LOCAL population slice, the
+grid is the per-shard (P_local, M/block_m), and only that shard's value
+tables ever exist on the device (ops.adc_quantize_population_sharded
+builds them from the local masks). ``block_m=None`` (the default) sizes
+the M-tile from the per-core VMEM budget instead of a fixed 512, so both
+the full-population and per-shard launches pipeline at the same depth
+regardless of how many individuals landed on the device.
+
 C stays whole per tile (sensor counts are small; ops.py falls back to the
 jnp path for C > 4096 or bits > 6). On TPU the kernels compile by default;
 interpret mode is the CPU/debug fallback selected in ops.py.
@@ -32,6 +41,22 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+
+
+# ~2 MB of f32 VMEM for x + out tiles and the resident table: half a
+# conservative 4 MB working budget, leaving room for the double-buffered
+# next tile the grid pipeline prefetches.
+_VMEM_BUDGET_F32 = (1 << 21) // 4
+
+
+def _auto_block_m(m: int, c: int, n: int) -> int:
+    """Largest M-tile (f32-sublane aligned, <= 4096) such that the
+    (bm, C) x-tile + (bm, C) out-tile + the resident (C, 2^N) table fit
+    the VMEM budget. Clamped to m (a single tile covers small batches)."""
+    avail = max(_VMEM_BUDGET_F32 - c * n, 0)
+    bm = max(avail // (2 * c), 8)
+    bm = max((bm // 8) * 8, 8)
+    return min(bm, 4096, m)
 
 
 def _kernel(x_ref, table_ref, o_ref, *, bits: int, vmin: float, vmax: float):
@@ -68,11 +93,12 @@ def _pop_kernel(x_ref, table_ref, o_ref, *, bits: int, vmin: float,
                                     "interpret"))
 def adc_quantize_pallas(x: jnp.ndarray, table: jnp.ndarray, *, bits: int,
                         vmin: float = 0.0, vmax: float = 1.0,
-                        block_m: int = 512, interpret: bool = True
+                        block_m: int | None = None, interpret: bool = True
                         ) -> jnp.ndarray:
-    """x: (M, C); table: (C, 2^bits). Returns quantized (M, C)."""
+    """x: (M, C); table: (C, 2^bits). Returns quantized (M, C).
+    ``block_m=None`` auto-sizes the tile from the VMEM budget."""
     m, c = x.shape
-    bm = min(block_m, m)
+    bm = min(block_m, m) if block_m else _auto_block_m(m, c, 2 ** bits)
     pad = (-m) % bm
     if pad:
         x = jnp.pad(x, ((0, pad), (0, 0)))
@@ -96,7 +122,8 @@ def adc_quantize_pallas(x: jnp.ndarray, table: jnp.ndarray, *, bits: int,
                                     "interpret"))
 def adc_quantize_pallas_population(x: jnp.ndarray, tables: jnp.ndarray, *,
                                    bits: int, vmin: float = 0.0,
-                                   vmax: float = 1.0, block_m: int = 512,
+                                   vmax: float = 1.0,
+                                   block_m: int | None = None,
                                    interpret: bool = True) -> jnp.ndarray:
     """Shared x: (M, C); per-individual tables: (P, C, 2^bits). Returns
     (P, M, C) — the whole population's quantized views in one launch.
@@ -104,10 +131,11 @@ def adc_quantize_pallas_population(x: jnp.ndarray, tables: jnp.ndarray, *,
     Grid (P, M/bm), M innermost: the (C, 2^N) table of individual p loads
     into VMEM at the first M-tile and is re-used by every subsequent tile
     (the index map is constant in the inner grid axis, so the pipeline
-    skips the re-fetch)."""
+    skips the re-fetch). Under the sharded engine P is the local
+    population slice, making this the per-shard grid."""
     m, c = x.shape
     p = tables.shape[0]
-    bm = min(block_m, m)
+    bm = min(block_m, m) if block_m else _auto_block_m(m, c, 2 ** bits)
     pad = (-m) % bm
     if pad:
         x = jnp.pad(x, ((0, pad), (0, 0)))

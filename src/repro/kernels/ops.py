@@ -64,6 +64,42 @@ def adc_quantize_population(x: jnp.ndarray, masks: jnp.ndarray, *, bits: int,
                                           vmax=vmax, interpret=interpret)
 
 
+def adc_quantize_population_sharded(x: jnp.ndarray, masks: jnp.ndarray, *,
+                                    mesh, bits: int, axes=None,
+                                    vmin: float = 0.0, vmax: float = 1.0,
+                                    mode: str = "tree",
+                                    interpret: bool | None = None
+                                    ) -> jnp.ndarray:
+    """``adc_quantize_population`` with the population axis partitioned
+    over ``mesh``: each device receives only its (P/D, C, 2^bits) mask
+    slice, builds value tables for *that slice alone*, and launches the
+    per-shard (P_local, M/block_m) population grid; x replicates (it is
+    one shared sample batch). ``axes`` defaults to the first divisible
+    candidate from distributed/sharding.RULES_POPULATION; when nothing
+    divides P the single-device path runs unsharded (same results)."""
+    from jax.sharding import PartitionSpec as P
+
+    from repro.compat import shard_map
+    from repro.distributed import sharding as sharding_lib
+
+    p = masks.shape[0]
+    if axes is None:
+        axes = sharding_lib.population_axes(mesh, p)
+    if axes is None:
+        return adc_quantize_population(x, masks, bits=bits, vmin=vmin,
+                                       vmax=vmax, mode=mode,
+                                       interpret=interpret)
+    pspec = P(axes)
+
+    def body(xs, ms):
+        return adc_quantize_population(xs, ms, bits=bits, vmin=vmin,
+                                       vmax=vmax, mode=mode,
+                                       interpret=interpret)
+
+    return shard_map(body, mesh=mesh, in_specs=(P(), pspec),
+                     out_specs=pspec, check_vma=False)(x, masks)
+
+
 def bespoke_mlp(x, mask, w1, b1, w2, b2, *, bits: int, vmin: float = 0.0,
                 vmax: float = 1.0, mode: str = "tree",
                 interpret: bool | None = None):

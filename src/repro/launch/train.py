@@ -48,8 +48,13 @@ def build(arch: str, *, smoke: bool, seq: int, batch: int, microbatches: int,
 
 
 def run_adc_search(args):
-    """Drive the population-batched in-training ADC search: one compiled
-    train-and-score call per generation, timed via the evolve log hook."""
+    """Drive the population-batched/sharded in-training ADC search: one
+    compiled train-and-score call per generation, timed via the evolve log
+    hook. Search state checkpoints every generation under
+    <ckpt-dir>/adc_search; --resume restarts a killed run bit-identically
+    from the latest snapshot."""
+    from pathlib import Path
+
     from repro.core import area, search
     from repro.data import tabular
 
@@ -60,9 +65,21 @@ def run_adc_search(args):
                               generations=args.generations,
                               train_steps=args.train_steps,
                               engine=args.engine)
+    mesh = search.default_search_mesh() if cfg.engine == "sharded" else None
+    ckpt_dir = Path(args.ckpt_dir) / "adc_search"
+    if not args.resume and ckpt_dir.exists():
+        # fresh start: stale higher-numbered snapshots would otherwise
+        # out-survive this run's in the keep-N GC and hijack a later
+        # --resume with a previous run's state
+        import shutil
+        shutil.rmtree(ckpt_dir)
+    ckpt = CheckpointManager(ckpt_dir, keep=2)
+    if args.resume and ckpt.latest_step() is not None:
+        print(f"resuming from generation {ckpt.latest_step()} "
+              f"({ckpt.dir})")
     print(f"adc-search[{cfg.engine}] dataset={args.dataset} "
           f"bits={cfg.bits} pop={cfg.pop_size} gens={cfg.generations} "
-          f"qat-steps={cfg.train_steps}")
+          f"qat-steps={cfg.train_steps} devices={len(jax.devices())}")
     marks = [time.perf_counter()]
 
     def log(g, pop, fit):
@@ -73,7 +90,9 @@ def run_adc_search(args):
               f"best-acc {1 - fit[:, 0].min():.3f}  "
               f"min-area {fit[:, 1].min():.3f}", flush=True)
 
-    pg, pf, decode = search.run_search(data, sizes, cfg, log=log)
+    pg, pf, decode = search.run_search(data, sizes, cfg, log=log,
+                                       ckpt=ckpt, resume=args.resume,
+                                       mesh=mesh)
     gen_s = [b - a for a, b in zip(marks[:-1], marks[1:])]
     if gen_s:
         # first generation pays the XLA compile; steady state is the tail
@@ -113,7 +132,11 @@ def main(argv=None):
     ap.add_argument("--generations", type=int, default=4)
     ap.add_argument("--train-steps", type=int, default=100)
     ap.add_argument("--engine", default="batched",
-                    choices=("batched", "reference"))
+                    choices=("batched", "sharded", "reference"))
+    ap.add_argument("--resume", action="store_true",
+                    help="restart the ADC search from its latest "
+                         "checkpoint under <ckpt-dir>/adc_search "
+                         "(bit-identical continuation)")
     args = ap.parse_args(argv)
 
     if args.adc_search:
