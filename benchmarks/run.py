@@ -195,6 +195,65 @@ def bench_search_adc_sharded(pop=16, smoke=False):
             f"({report['speedup_sharded_over_batched']:.2f}x vs batched)")
 
 
+def bench_serve_classifier(smoke=False):
+    """Fused multi-design serving engine (DESIGN.md §8): searches + exports
+    a small Pareto front, then measures (a) raw fused-bank throughput vs
+    bank size D and microbatch M and (b) the continuous-batching driver's
+    requests/sec — with each design's exact transistor-count area and
+    exported accuracy in the same artifact, so the accuracy/area/throughput
+    trade-off is one JSON (serve_classifier.json). Also asserts the
+    round-trip parity contract (served == exported accuracy, bit-for-bit)."""
+    from benchmarks import paper_tables
+    from repro.core import deploy, search
+    from repro.data import tabular
+    from repro.launch import serve_classifier as sc
+    data = tabular.make_dataset("seeds")
+    sizes = (7, 4, 3)
+    base = _search_bench_base(8, smoke)
+    cfg = search.SearchConfig(**base)
+    pg, _, _ = search.run_search(data, sizes, cfg)
+    front = deploy.export_front(pg, data, sizes, cfg)
+    report = {"dataset": "seeds", "smoke": smoke,
+              "backend": jax.default_backend(),
+              "device_count": len(jax.devices()),
+              "kind": front[0].kind, "bits": front[0].bits,
+              "front": [{"area_tc": d.area_tc, "accuracy": d.accuracy,
+                         "dp": d.dp, "kept_levels": int(d.mask.sum())}
+                        for d in front]}
+    reps, warmup = (1, 1) if smoke else (3, 1)
+    batches = (32, 128) if smoke else (64, 256, 1024)
+    x = data["x_test"].astype(np.float32)
+    bank = {}
+    for d_sz in sorted({1, len(front)}):
+        fn = deploy.make_bank_fn(front[:d_sz])
+        for m in batches:
+            xb = jnp.asarray(np.resize(x, (m, x.shape[1])))
+            us, _ = _timeit(fn, xb, reps=reps, warmup=warmup)
+            bank[f"D={d_sz},M={m}"] = {
+                "us_per_batch": us,
+                "samples_per_s": m / (us / 1e6),
+                "design_evals_per_s": d_sz * m / (us / 1e6)}
+    report["bank"] = bank
+    n_req, req_sz = (16, 4) if smoke else (128, 8)
+    drv = sc.serve(front, sc.make_request_stream(x, n_req, req_sz),
+                   batches[0])
+    report["driver"] = {k: drv[k] for k in
+                        ("requests", "samples", "batches", "pad_fraction",
+                         "wall_s", "requests_per_s", "samples_per_s")}
+    served = deploy.served_accuracies(front, data["x_test"], data["y_test"])
+    report["parity_ok"] = bool(np.array_equal(
+        served, np.array([d.accuracy for d in front])))
+    assert report["parity_ok"], "served accuracy diverged from export"
+    paper_tables.save("serve_classifier", report)
+    top = bank[f"D={len(front)},M={batches[-1]}"]
+    areas = [d["area_tc"] for d in report["front"]]
+    return (top["us_per_batch"],
+            f"D={len(front)} M={batches[-1]}: "
+            f"{top['design_evals_per_s']:.0f} design-evals/s; driver "
+            f"{drv['requests_per_s']:.0f} req/s; areas={areas}T "
+            f"parity_ok={report['parity_ok']}")
+
+
 def bench_lm_train_step():
     from repro.launch.train import build
     import repro.models.steps as steps
@@ -247,6 +306,7 @@ def main() -> None:
         ("ga_generation_vmap_qat", bench_ga_generation),
         ("search_adc", lambda: bench_search_adc(smoke=smoke)),
         ("search_adc_sharded", lambda: bench_search_adc_sharded(smoke=smoke)),
+        ("serve_classifier", lambda: bench_serve_classifier(smoke=smoke)),
         ("lm_train_step_smoke", bench_lm_train_step),
         ("roofline_summary", bench_roofline_summary),
     ]

@@ -1,8 +1,13 @@
-"""End-to-end driver for the paper's methodology (§3.2):
+"""End-to-end driver for the paper's methodology (§3.2) through to
+deployment (DESIGN.md §8):
 
   sensor dataset -> NSGA-II over {per-channel ADC level masks, weight
   decimal positions} with population-vmapped QAT inner loop -> pareto of
-  bespoke pruned ADCs -> transistor-count report (Table-5 style).
+  bespoke pruned ADCs -> transistor-count report (Table-5 style)
+  -> export the front as frozen DeployedClassifiers (baked value tables +
+  po2-quantized weights) -> reload from disk -> serve a sample batch
+  through the fused multi-design bank kernel and verify the served
+  accuracies reproduce the search-time fitness bit-for-bit.
 
   PYTHONPATH=src python examples/train_mlp_adc.py --dataset seeds --bits 3
 """
@@ -10,7 +15,7 @@ import argparse
 
 import numpy as np
 
-from repro.core import area, search
+from repro.core import area, deploy, search
 from repro.data import tabular
 
 
@@ -22,6 +27,9 @@ def main():
     ap.add_argument("--pop", type=int, default=24)
     ap.add_argument("--generations", type=int, default=10)
     ap.add_argument("--train-steps", type=int, default=300)
+    ap.add_argument("--model", default="mlp", choices=("mlp", "svm"))
+    ap.add_argument("--export-dir", default="/tmp/adc_front",
+                    help="where the deployed front artifact lands")
     args = ap.parse_args()
 
     spec = tabular.SPECS[args.dataset]
@@ -29,11 +37,12 @@ def main():
     sizes = (spec.features, spec.hidden, spec.classes)
     cfg = search.SearchConfig(bits=args.bits, pop_size=args.pop,
                               generations=args.generations,
-                              train_steps=args.train_steps)
+                              train_steps=args.train_steps,
+                              model=args.model)
 
     base = search.full_adc_baseline(data, sizes, cfg)
     print(f"dataset={args.dataset} features={spec.features} "
-          f"classes={spec.classes} MLP={sizes}")
+          f"classes={spec.classes} model={args.model} sizes={sizes}")
     print(f"full-ADC QAT baseline: acc={base['accuracy']:.3f}  "
           f"flash={base['area_flash_tc']}T  "
           f"binary(ours)={base['area_binary_ours_tc']}T")
@@ -60,6 +69,34 @@ def main():
     print(f"\nheadline: {base['area_flash_tc'] / max(best[1] * flash_full, 1):.1f}x"
           f" smaller than flash at acc {1 - best[0]:.3f} "
           f"(full-ADC acc {base['accuracy']:.3f})")
+
+    # ---- search -> deployment artifact -> fused serving (DESIGN.md §8)
+    designs = deploy.export_front(pg, data, sizes, cfg)
+    deploy.save_front(args.export_dir, designs,
+                      extra_meta={"dataset": args.dataset,
+                                  "sizes": list(sizes)})
+    print(f"\nexported {len(designs)} deployed design(s) -> "
+          f"{args.export_dir}")
+
+    reloaded = deploy.load_front(args.export_dir)      # fresh from disk
+    batch = data["x_test"][:8]
+    logits = deploy.serve_bank(reloaded, batch)        # fused bank kernel
+    print(f"served a {batch.shape[0]}-sample batch through the "
+          f"{len(reloaded)}-design fused bank: logits {logits.shape}")
+    print("per-design predicted classes for sample 0:",
+          np.argmax(logits[:, 0], -1).tolist())
+
+    served = deploy.served_accuracies(reloaded, data["x_test"],
+                                      data["y_test"])
+    exported = np.array([d.accuracy for d in reloaded])
+    assert np.array_equal(served, exported), (served, exported)
+    print("round-trip parity OK: served == search-time accuracy "
+          "bit-for-bit for every design")
+    for i, d in enumerate(reloaded):
+        print(f"  design {i}: acc={served[i]:.3f}  area={d.area_tc}T  "
+              f"dp={int(d.dp)}")
+    print(f"\nserve it at scale:  PYTHONPATH=src python -m "
+          f"repro.launch.serve_classifier --front-dir {args.export_dir}")
 
 
 if __name__ == "__main__":

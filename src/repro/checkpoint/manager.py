@@ -119,6 +119,19 @@ class CheckpointManager:
         steps = self.all_steps()
         return steps[-1] if steps else None
 
+    def restore_flat(self, step: int) -> Dict[str, np.ndarray]:
+        """Load every leaf saved at ``step`` as host numpy arrays, keyed by
+        the flattened tree path — no ``like`` tree required. The format is
+        self-describing (metadata.json enumerates the leaves), so artifact
+        trees whose structure is data-dependent — e.g. a deployed Pareto
+        front of K designs (core/deploy.py) — restore without the caller
+        pre-knowing K or any shapes. Host-side only: artifact leaves carry
+        the same bit-exactness contract as ``restore(host=True)``."""
+        d = self.dir / f"step_{step}"
+        meta = json.loads((d / "metadata.json").read_text())
+        return {k: np.load(d / (k.replace("/", "__") + ".npy"))
+                for k in meta["leaves"]}
+
     def restore(self, step: int, like, shardings=None, host: bool = False):
         """Restore into the structure of ``like``. With ``shardings`` (a
         matching pytree of NamedSharding) arrays are placed sharded against

@@ -1,0 +1,262 @@
+"""Deployment artifacts: the searched front as runnable mixed-signal
+inference designs (DESIGN.md §8).
+
+The paper's end product is a *deployed* ADC+classifier pair on a flexible
+substrate; the search (core/search.py) finds it but used to throw the
+trained state away with the last generation. This module freezes each
+Pareto individual into a ``DeployedClassifier``:
+
+* the **baked value table** (C, 2^N) — the pruned comparator tree collapsed
+  to its code->value map, exactly what the fused serving kernels consume
+  (no mask decode / tree walk at serve time);
+* **po2-quantized weights** — ``qat.quantize_po2`` / ``quantize_fixed``
+  applied once at export with the genome's decimal position ``dp``, so
+  inference is a plain forward pass over the same numbers QAT measured;
+* the genome's ``dp``, the provenance ``mask``, and the **exact
+  transistor-count area report** (core/area.system_tc);
+* the export-time test ``accuracy`` — bit-for-bit the search-time fitness
+  (every QAT lane is a pure function of (genome, data, cfg);
+  ``search.train_pareto_front`` re-derives it deterministically).
+
+Fronts save/load through checkpoint/manager.py (atomic commit, one .npy
+per leaf, JSON-packed metadata via ``pack_json`` — the structure is
+data-dependent in the design count, so loading goes through
+``CheckpointManager.restore_flat``). Serving routes every design — single
+or the whole front at once — through the fused bank kernels
+(kernels/ops.classifier_bank, optionally sharded over the mesh).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+
+from repro.checkpoint.manager import CheckpointManager, pack_json, unpack_json
+from repro.core import area, qat
+from repro.core.search import SearchConfig, train_pareto_front
+from repro.kernels import ops, ref
+
+FORMAT_VERSION = 1
+
+# weight leaf names per classifier family, in ops.classifier_bank order
+_WEIGHT_LEAVES = {"mlp": ("w1", "b1", "w2", "b2"), "svm": ("w", "b")}
+
+
+@dataclass(frozen=True)
+class DeployedClassifier:
+    """One frozen ADC+classifier design, ready to serve."""
+    kind: str                      # 'mlp' | 'svm'
+    bits: int
+    mode: str                      # pruned-ADC semantics the table was baked with
+    vmin: float
+    vmax: float
+    dp: float                      # genome decimal-point position
+    mask: np.ndarray               # (C, 2^N) int32 — provenance, not used to serve
+    table: np.ndarray              # (C, 2^N) float32 baked value table
+    weights: Tuple[np.ndarray, ...]  # po2-quantized, _WEIGHT_LEAVES order
+    area_tc: int                   # exact ADC transistor count (area model)
+    accuracy: float                # export-time test accuracy (== search fitness)
+
+    def logits(self, x, interpret: Optional[bool] = None) -> np.ndarray:
+        """(M, C) samples -> (M, O) logits, served as a size-1 bank through
+        the fused kernel envelope."""
+        out = ops.classifier_bank(
+            np.asarray(x, np.float32), self.table[None],
+            tuple(w[None] for w in self.weights), kind=self.kind,
+            bits=self.bits, vmin=self.vmin, vmax=self.vmax,
+            interpret=interpret)
+        return np.asarray(out)[0]
+
+    def predict(self, x, interpret: Optional[bool] = None) -> np.ndarray:
+        return np.argmax(self.logits(x, interpret=interpret), axis=-1)
+
+    def accuracy_on(self, x, y, interpret: Optional[bool] = None) -> float:
+        return float(_jnp_mean_acc(
+            self.predict(x, interpret=interpret)[None] == np.asarray(y))[0])
+
+
+# -------------------------------------------------------- search -> artifact
+def export_front(genomes: np.ndarray, data: Dict, sizes: Sequence[int],
+                 cfg: SearchConfig,
+                 trained=None) -> List[DeployedClassifier]:
+    """Freeze (typically Pareto-front) genomes into deployable designs:
+    deterministic QAT re-train (``search.train_pareto_front``), bake value
+    tables, quantize the trained weights once with each genome's dp, and
+    attach the exact transistor-count area report.
+
+    ``trained`` short-circuits the re-train: pass the (accs, params,
+    masks, dps) tuple already produced by ``train_pareto_front`` /
+    ``run_search(..., return_trained=True)`` for these same genomes so
+    the front's vmapped QAT runs once, not twice."""
+    if cfg.model == "mlp" and len(sizes) != 3:
+        raise ValueError(
+            f"the fused serving kernels cover the paper's 1-hidden-layer "
+            f"printed-MLP topology; got sizes={tuple(sizes)}")
+    accs, params, masks, dps = (train_pareto_front(genomes, data, sizes, cfg)
+                                if trained is None else trained)
+    if len(accs) != len(genomes):
+        raise ValueError(f"trained tuple covers {len(accs)} individuals, "
+                         f"got {len(genomes)} genomes")
+    designs = []
+    for k in range(len(accs)):
+        dp = float(dps[k])
+        if cfg.model == "svm":
+            w, b = jax.tree_util.tree_map(lambda a: a[k], params)
+            weights = (_po2(w, dp, cfg.weight_bits),
+                       _fixed(b, dp, cfg.weight_bits))
+        else:
+            (w1, b1), (w2, b2) = [
+                (layer[0][k], layer[1][k]) for layer in params]
+            weights = (_po2(w1, dp, cfg.weight_bits),
+                       _fixed(b1, dp, cfg.weight_bits),
+                       _po2(w2, dp, cfg.weight_bits),
+                       _fixed(b2, dp, cfg.weight_bits))
+        mask = np.asarray(masks[k], np.int32)
+        designs.append(DeployedClassifier(
+            kind=cfg.model, bits=cfg.bits, mode=cfg.mode, vmin=0.0, vmax=1.0,
+            dp=dp, mask=mask,
+            table=np.asarray(ref.value_table(mask, cfg.bits, 0.0, 1.0,
+                                             cfg.mode), np.float32),
+            weights=weights,
+            area_tc=area.system_tc(mask, cfg.design),
+            accuracy=float(accs[k])))
+    return designs
+
+
+def _po2(w, dp: float, weight_bits: int) -> np.ndarray:
+    return np.asarray(qat.quantize_po2(np.asarray(w), dp, weight_bits),
+                      np.float32)
+
+
+def _fixed(b, dp: float, weight_bits: int) -> np.ndarray:
+    return np.asarray(qat.quantize_fixed(np.asarray(b), dp, weight_bits),
+                      np.float32)
+
+
+# ----------------------------------------------------------------- save/load
+def save_front(directory, designs: Sequence[DeployedClassifier],
+               extra_meta: Optional[Dict] = None) -> None:
+    """Persist a deployed front under ``directory`` (CheckpointManager
+    step 0: atomic commit, one .npy per leaf)."""
+    if not designs:
+        raise ValueError("refusing to save an empty front")
+    kinds = {d.kind for d in designs}
+    bitss = {d.bits for d in designs}
+    if len(kinds) != 1 or len(bitss) != 1:
+        raise ValueError(f"mixed fronts unsupported: kinds={kinds} bits={bitss}")
+    meta = {"format": FORMAT_VERSION, "kind": designs[0].kind,
+            "bits": designs[0].bits, "mode": designs[0].mode,
+            "vmin": designs[0].vmin, "vmax": designs[0].vmax,
+            "num_designs": len(designs), **(extra_meta or {})}
+    tree = {"meta": pack_json(meta)}
+    for i, d in enumerate(designs):
+        leaf = {"mask": d.mask.astype(np.int32), "table": d.table,
+                "dp": np.float32(d.dp), "acc": np.float64(d.accuracy),
+                "area_tc": np.int64(d.area_tc)}
+        leaf.update(zip(_WEIGHT_LEAVES[d.kind], d.weights))
+        tree[f"design_{i:03d}"] = leaf
+    CheckpointManager(directory, keep=1).save(0, tree, blocking=True)
+
+
+def front_meta(directory) -> Dict:
+    """The metadata ``save_front`` persisted (format/kind/bits plus any
+    ``extra_meta`` provenance such as the training dataset) — so serving
+    can validate a front against the traffic it is asked to serve."""
+    flat = CheckpointManager(directory, keep=1).restore_flat(0)
+    return unpack_json(flat["meta"])
+
+
+def load_front(directory) -> List[DeployedClassifier]:
+    """Inverse of ``save_front`` — reconstructs every design from the
+    self-describing leaf set (no shape/count foreknowledge needed)."""
+    flat = CheckpointManager(directory, keep=1).restore_flat(0)
+    meta = unpack_json(flat["meta"])
+    if meta["format"] != FORMAT_VERSION:
+        raise ValueError(f"unknown front format {meta['format']}")
+    designs = []
+    for i in range(meta["num_designs"]):
+        p = f"design_{i:03d}/"
+        designs.append(DeployedClassifier(
+            kind=meta["kind"], bits=meta["bits"], mode=meta["mode"],
+            vmin=meta["vmin"], vmax=meta["vmax"],
+            dp=float(flat[p + "dp"]), mask=flat[p + "mask"],
+            table=flat[p + "table"],
+            weights=tuple(flat[p + n] for n in _WEIGHT_LEAVES[meta["kind"]]),
+            area_tc=int(flat[p + "area_tc"]),
+            accuracy=float(flat[p + "acc"])))
+    return designs
+
+
+# -------------------------------------------------------------- bank serving
+def bank_arrays(designs: Sequence[DeployedClassifier]
+                ) -> Tuple[np.ndarray, Tuple[np.ndarray, ...]]:
+    """Stack a front into the fused bank kernel's operands:
+    (tables (D, C, 2^N), weights each (D, ...)). Designs from one search
+    share (kind, bits, shapes) by construction; mixed banks are rejected."""
+    kinds = {d.kind for d in designs}
+    if len(kinds) != 1:
+        raise ValueError(f"bank needs one classifier kind, got {kinds}")
+    tables = np.stack([d.table for d in designs])
+    weights = tuple(np.stack([d.weights[j] for d in designs])
+                    for j in range(len(designs[0].weights)))
+    return tables, weights
+
+
+def make_bank_fn(designs: Sequence[DeployedClassifier], *, mesh=None,
+                 interpret: Optional[bool] = None):
+    """One jitted bank call closed over device-resident tables and weights
+    (host->device once, not once per microbatch) — the serving hot path
+    the continuous-batching driver (launch/serve_classifier) and the
+    benchmarks dispatch. The jit matters off-TPU too, where auto mode
+    serves the jnp bank oracle: unjitted it would re-dispatch every op
+    eagerly per microbatch. With ``mesh`` the design axis shards D/device
+    (ops.classifier_bank_sharded)."""
+    import jax.numpy as jnp
+    tables, weights = bank_arrays(designs)
+    tables = jnp.asarray(tables)
+    weights = tuple(jnp.asarray(w) for w in weights)
+    d0 = designs[0]
+    kw = dict(kind=d0.kind, bits=d0.bits, vmin=d0.vmin, vmax=d0.vmax,
+              interpret=interpret)
+    if mesh is not None:
+        return jax.jit(lambda xb: ops.classifier_bank_sharded(
+            xb, tables, weights, mesh=mesh, **kw))
+    return jax.jit(lambda xb: ops.classifier_bank(xb, tables, weights, **kw))
+
+
+def serve_bank(designs: Sequence[DeployedClassifier], x, *,
+               mesh=None, interpret: Optional[bool] = None) -> np.ndarray:
+    """One shared (M, C) sample batch through the whole deployed front:
+    (D, M, O) logits via the fused multi-design kernel — with ``mesh``,
+    the design axis shards D/device (ops.classifier_bank_sharded)."""
+    tables, weights = bank_arrays(designs)
+    d0 = designs[0]
+    kw = dict(kind=d0.kind, bits=d0.bits, vmin=d0.vmin, vmax=d0.vmax,
+              interpret=interpret)
+    x = np.asarray(x, np.float32)
+    if mesh is not None:
+        out = ops.classifier_bank_sharded(x, tables, weights, mesh=mesh, **kw)
+    else:
+        out = ops.classifier_bank(x, tables, weights, **kw)
+    return np.asarray(out)
+
+
+def served_accuracies(designs: Sequence[DeployedClassifier], x, y, *,
+                      mesh=None, interpret: Optional[bool] = None
+                      ) -> np.ndarray:
+    """(D,) test accuracies of the whole served front — the round-trip
+    parity check against each design's exported ``accuracy``."""
+    logits = serve_bank(designs, x, mesh=mesh, interpret=interpret)
+    return _jnp_mean_acc(np.argmax(logits, -1) == np.asarray(y)[None, :])
+
+
+def _jnp_mean_acc(correct: np.ndarray) -> np.ndarray:
+    """(D, M) correctness bools -> (D,) f32 accuracies via ``jnp.mean`` —
+    the *same op* the search-time fitness uses (models.{mlp,svm}.accuracy).
+    XLA lowers the mean to ``sum * reciprocal(M)`` in f32; a host-side
+    ``np.mean`` (f64, true division) differs in the last ulp and would
+    break the bit-for-bit round-trip contract."""
+    import jax.numpy as jnp
+    return np.asarray(jnp.mean(jnp.asarray(correct), axis=-1))

@@ -107,15 +107,25 @@ def _init_model(sizes, cfg: SearchConfig):
 
 
 def _train_from_quantized(xq_tr, xq_te, y_tr, y_te, dp, params, opt,
-                          sizes, cfg: SearchConfig):
+                          sizes, cfg: SearchConfig,
+                          return_params: bool = False):
     """QAT one individual from its already-quantized inputs: returns test
-    accuracy (scalar). vmap target — all operands carry the population
-    axis at the call site; ``dp`` may be traced per individual."""
+    accuracy (scalar), or ``(accuracy, trained params)`` with
+    ``return_params`` — the export path keeps the parameters the fitness
+    was measured on instead of throwing them away. vmap target — all
+    operands carry the population axis at the call site; ``dp`` may be
+    traced per individual."""
     from repro.models import svm as svm_lib
     from repro.optim import adamw
+    # cfg.weight_bits flows into BOTH the loss and the accuracy: the
+    # fitness must be measured on the same quantized forward the deployed
+    # artifact bakes (deploy.export_front), or the bit-for-bit round-trip
+    # contract would only hold at the 8-bit default
     if cfg.model == "svm":
-        loss_of = lambda p: svm_lib.svm_loss(p, xq_tr, y_tr, dp)
-        acc_of = lambda p: svm_lib.accuracy(p, xq_te, y_te, dp)
+        loss_of = lambda p: svm_lib.svm_loss(p, xq_tr, y_tr, dp,
+                                             weight_bits=cfg.weight_bits)
+        acc_of = lambda p: svm_lib.accuracy(p, xq_te, y_te, dp,
+                                            cfg.weight_bits)
     else:
         def loss_of(p):
             logits = mlp_lib.apply_mlp(p, xq_tr, dp, cfg.weight_bits)
@@ -123,7 +133,8 @@ def _train_from_quantized(xq_tr, xq_te, y_tr, y_te, dp, params, opt,
             onehot = jax.nn.one_hot(y_tr, sizes[-1])
             return -(onehot * logp).sum(-1).mean()
 
-        acc_of = lambda p: mlp_lib.accuracy(p, xq_te, y_te, dp)
+        acc_of = lambda p: mlp_lib.accuracy(p, xq_te, y_te, dp,
+                                            cfg.weight_bits)
 
     def step(carry, _):
         p, o = carry
@@ -132,6 +143,8 @@ def _train_from_quantized(xq_tr, xq_te, y_tr, y_te, dp, params, opt,
         return (p, o), ()
 
     (params, _), _ = jax.lax.scan(step, (params, opt), length=cfg.train_steps)
+    if return_params:
+        return acc_of(params), params
     return acc_of(params)
 
 
@@ -154,8 +167,12 @@ def _train_eval_one(genome, data, sizes, cfg: SearchConfig):
 
 
 def _train_and_score(genomes: jnp.ndarray, params0, opt0, data: Dict,
-                     sizes: Tuple[int, ...], cfg: SearchConfig) -> jnp.ndarray:
-    """(P, G) genomes -> (P,) test accuracies as ONE compiled program.
+                     sizes: Tuple[int, ...], cfg: SearchConfig,
+                     return_params: bool = False) -> jnp.ndarray:
+    """(P, G) genomes -> (P,) test accuracies as ONE compiled program
+    (``return_params=True`` additionally yields the trained parameter
+    stacks, each leaf (P, ...) — the raw material of a deployment export,
+    core/deploy.py).
 
     The population's initial parameter and optimizer buffers (``params0``,
     ``opt0``, stacked over P) are donated: XLA reuses their memory for the
@@ -170,7 +187,8 @@ def _train_and_score(genomes: jnp.ndarray, params0, opt0, data: Dict,
     xq_te = ops.adc_quantize_population(data["x_test"], masks,
                                         bits=cfg.bits, mode=cfg.mode)
     fn = lambda xtr, xte, dp, p, o: _train_from_quantized(
-        xtr, xte, data["y_train"], data["y_test"], dp, p, o, sizes, cfg)
+        xtr, xte, data["y_train"], data["y_test"], dp, p, o, sizes, cfg,
+        return_params)
     return jax.vmap(fn)(xq_tr, xq_te, dps, params0, opt0)
 
 
@@ -179,7 +197,8 @@ def _train_and_score_jit():
     """Jitted generation step. Optimizer/parameter buffers are donated on
     accelerator backends (XLA CPU cannot alias them and would warn)."""
     donate = (1, 2) if jax.default_backend() != "cpu" else ()
-    return jax.jit(_train_and_score, static_argnames=("sizes", "cfg"),
+    return jax.jit(_train_and_score,
+                   static_argnames=("sizes", "cfg", "return_params"),
                    donate_argnums=donate)
 
 
@@ -200,6 +219,31 @@ def evaluate_population_acc(genomes: jnp.ndarray, data: Dict,
     params0, opt0 = _stacked_init(genomes.shape[0], sizes, cfg)
     return _train_and_score_jit()(jnp.asarray(genomes, jnp.uint8), params0,
                                   opt0, data, tuple(sizes), cfg)
+
+
+def train_pareto_front(genomes: np.ndarray, data: Dict,
+                       sizes: Tuple[int, ...], cfg: SearchConfig):
+    """Re-train the given (typically Pareto-front) genomes and keep what
+    the search-time fitness threw away: the trained parameter stacks.
+
+    Returns ``(accs (K,) f64, params, masks (K, C, 2^N) i32, dps (K,) f32)``
+    with every ``params`` leaf stacked over K. Each individual's QAT is a
+    pure function of (genome, data, cfg) — every lane of the vmapped
+    program is independent — so the accuracies reproduce the search-time
+    fitness *bit-for-bit* regardless of which generation (or population
+    size) originally evaluated the genome; tests/test_deploy_serve.py
+    pins that contract. This is the search -> deployment-artifact bridge
+    (core/deploy.export_front)."""
+    genomes = np.asarray(genomes, np.uint8)
+    dev_data = {k: jnp.asarray(v) for k, v in data.items()}
+    params0, opt0 = _stacked_init(len(genomes), sizes, cfg)
+    accs, params = _train_and_score_jit()(
+        jnp.asarray(genomes), params0, opt0, dev_data, tuple(sizes), cfg,
+        return_params=True)
+    masks, dps = decode_population(jnp.asarray(genomes), sizes[0], cfg.bits,
+                                   cfg.min_levels)
+    return (np.asarray(accs, np.float64), jax.device_get(params),
+            np.asarray(masks), np.asarray(dps))
 
 
 # ------------------------------------------------------------------- fitness
@@ -365,9 +409,15 @@ def restore_search_state(ckpt, step: int, pop_size: int, glen: int
 def run_search(data: Dict, sizes, cfg: SearchConfig,
                log: Optional[Callable] = None,
                ckpt=None, resume: bool = False,
-               mesh: Optional[jax.sharding.Mesh] = None):
+               mesh: Optional[jax.sharding.Mesh] = None,
+               return_trained: bool = False):
     """Full in-training optimization. Returns (pareto_genomes, pareto_fit,
-    decode) where fit columns are [1-acc, normalized area].
+    decode) where fit columns are [1-acc, normalized area]; with
+    ``return_trained=True`` a fourth element carries the final front's
+    trained state — ``train_pareto_front``'s (accs, params, masks, dps) —
+    so the searched designs can become deployment artifacts instead of
+    being thrown away with the last generation (core/deploy.export_front
+    consumes exactly this tuple).
 
     ``ckpt`` (a checkpoint.manager.CheckpointManager) snapshots the search
     state after the initial evaluation and every generation; with
@@ -393,6 +443,8 @@ def run_search(data: Dict, sizes, cfg: SearchConfig,
         state=state, on_generation=on_gen)
     pg, pf = nsga2.pareto_front(pop, fit)
     decode = lambda g: decode_genome(jnp.asarray(g), C, cfg.bits, cfg.min_levels)
+    if return_trained:
+        return pg, pf, decode, train_pareto_front(pg, data, sizes, cfg)
     return pg, pf, decode
 
 

@@ -215,6 +215,16 @@ def population_axes(mesh: Mesh, p: int) -> Optional[Tuple[str, ...]]:
     return best
 
 
+def design_bank_axes(mesh: Mesh, d: int) -> Optional[Tuple[str, ...]]:
+    """Mesh axes the (D,)-leading deployed-design bank shards over for
+    serving (ops.classifier_bank_sharded / launch/serve_classifier). A
+    Pareto front's designs are embarrassingly parallel exactly like GA
+    individuals — one shared sample batch, independent per-design tables
+    and weights — so the candidate set and the divisibility/fallback
+    contract are the population rules verbatim."""
+    return population_axes(mesh, d)
+
+
 def batch_axes(mesh: Mesh, cfg, b: int) -> Optional[Tuple[str, ...]]:
     """Mesh axes the batch dim shards over (first divisible candidate)."""
     for cand in rules_for(cfg)["batch"]:

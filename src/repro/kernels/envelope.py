@@ -1,0 +1,31 @@
+"""Shared kernel-dispatch policy for every fused classifier kernel.
+
+One place answers the two questions every ``ops.py`` wrapper asks:
+
+* ``interpret_default()`` — compiled (non-interpret) Pallas kernels are the
+  default on TPU; everywhere else interpret mode executes the kernel bodies
+  in Python (correct but slow — per-tile Python, so population/bank-grid
+  launches additionally fall back to the jnp oracles in auto mode).
+* the static envelope the kernels were written for: the one-hot selection
+  sum unrolls 2^bits compare/select/fma steps (``MAX_UNROLL_BITS``) and a
+  (C, 2^N) table plus a (block_m, C) tile must fit a VMEM budget
+  (``MAX_CHANNELS``). Outside the envelope the wrappers route to the jnp
+  oracles (kernels/ref.py) — same math, no tiling assumptions.
+"""
+from __future__ import annotations
+
+import jax
+
+MAX_UNROLL_BITS = 6
+MAX_CHANNELS = 4096
+
+
+def interpret_default() -> bool:
+    """True when Pallas should run in interpret mode (any non-TPU backend)."""
+    return jax.default_backend() != "tpu"
+
+
+def outside_envelope(bits: int, channels: int) -> bool:
+    """True when (bits, C) exceeds what the fused kernels statically
+    unroll/tile — callers then use the jnp oracle instead."""
+    return bits > MAX_UNROLL_BITS or channels > MAX_CHANNELS

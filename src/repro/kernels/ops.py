@@ -4,7 +4,9 @@ the jnp reference when the kernel's static envelope doesn't apply
 
 On this CPU container the kernels run in interpret mode (the kernel body
 executes in Python per tile); on TPU set interpret=False (default when a
-TPU backend is detected).
+TPU backend is detected). The envelope/backend policy lives in
+kernels/envelope.py so every entry — search-side (mask-based) and
+deployment-side (baked-table banks) — dispatches identically.
 """
 from __future__ import annotations
 
@@ -14,16 +16,15 @@ import jax.numpy as jnp
 from repro.kernels import ref
 from repro.kernels.adc_quantize import (adc_quantize_pallas,
                                         adc_quantize_pallas_population)
-from repro.kernels.qmlp import bespoke_mlp_pallas
+from repro.kernels.envelope import (MAX_CHANNELS, MAX_UNROLL_BITS,
+                                    interpret_default, outside_envelope)
+from repro.kernels.qmlp import (bespoke_mlp_bank_pallas, bespoke_mlp_pallas,
+                                bespoke_svm_bank_pallas, bespoke_svm_pallas)
 
-_MAX_UNROLL_BITS = 6
-_MAX_CHANNELS = 4096
-
-
-def _interpret_default() -> bool:
-    """Compiled (non-interpret) kernels are the default on TPU; everywhere
-    else the interpret path executes the kernel bodies on CPU."""
-    return jax.default_backend() != "tpu"
+# retained spellings: pre-envelope callers import these from ops
+_MAX_UNROLL_BITS = MAX_UNROLL_BITS
+_MAX_CHANNELS = MAX_CHANNELS
+_interpret_default = interpret_default
 
 
 def adc_quantize(x: jnp.ndarray, mask: jnp.ndarray, *, bits: int,
@@ -32,10 +33,10 @@ def adc_quantize(x: jnp.ndarray, mask: jnp.ndarray, *, bits: int,
     """Quantize (M, C) samples through per-channel pruned binary-search ADCs
     (kernel when applicable, jnp oracle otherwise)."""
     table = ref.value_table(mask, bits, vmin, vmax, mode)
-    if bits > _MAX_UNROLL_BITS or x.shape[-1] > _MAX_CHANNELS:
+    if outside_envelope(bits, x.shape[-1]):
         return ref.adc_quantize_ref(x, table, bits, vmin, vmax)
     if interpret is None:
-        interpret = _interpret_default()
+        interpret = interpret_default()
     return adc_quantize_pallas(x, table, bits=bits, vmin=vmin, vmax=vmax,
                                interpret=interpret)
 
@@ -50,10 +51,10 @@ def adc_quantize_population(x: jnp.ndarray, masks: jnp.ndarray, *, bits: int,
     per-individual value table resident in VMEM), batched jnp oracle
     otherwise."""
     tables = ref.value_table(masks, bits, vmin, vmax, mode)   # (P, C, n)
-    if bits > _MAX_UNROLL_BITS or x.shape[-1] > _MAX_CHANNELS:
+    if outside_envelope(bits, x.shape[-1]):
         return ref.adc_quantize_ref_population(x, tables, bits, vmin, vmax)
     if interpret is None:
-        if _interpret_default():
+        if interpret_default():
             # auto mode off-TPU: interpret-mode kernels run tile bodies in
             # Python (P * M/bm tiles — minutes on CPU), so the batched
             # oracle is the fallback; tests opt in to interpret explicitly.
@@ -100,14 +101,94 @@ def adc_quantize_population_sharded(x: jnp.ndarray, masks: jnp.ndarray, *,
                      out_specs=pspec, check_vma=False)(x, masks)
 
 
+# ------------------------------------------------ fused classifier serving
 def bespoke_mlp(x, mask, w1, b1, w2, b2, *, bits: int, vmin: float = 0.0,
                 vmax: float = 1.0, mode: str = "tree",
                 interpret: bool | None = None):
-    """Fused ADC + 1-hidden-layer printed MLP inference."""
+    """Fused ADC + 1-hidden-layer printed MLP inference (mask-based: the
+    value table is built here; deployment passes baked tables through
+    ``classifier_bank``)."""
     table = ref.value_table(mask, bits, vmin, vmax, mode)
-    if bits > _MAX_UNROLL_BITS or x.shape[-1] > _MAX_CHANNELS:
+    if outside_envelope(bits, x.shape[-1]):
         return ref.bespoke_mlp_ref(x, table, bits, w1, b1, w2, b2, vmin, vmax)
     if interpret is None:
-        interpret = _interpret_default()
+        interpret = interpret_default()
     return bespoke_mlp_pallas(x, table, w1, b1, w2, b2, bits=bits,
                               vmin=vmin, vmax=vmax, interpret=interpret)
+
+
+def bespoke_svm(x, mask, w, b, *, bits: int, vmin: float = 0.0,
+                vmax: float = 1.0, mode: str = "tree",
+                interpret: bool | None = None):
+    """Fused ADC + linear-SVM inference (the paper's second model family),
+    same envelope contract as ``bespoke_mlp``."""
+    table = ref.value_table(mask, bits, vmin, vmax, mode)
+    if outside_envelope(bits, x.shape[-1]):
+        return ref.bespoke_svm_ref(x, table, bits, w, b, vmin, vmax)
+    if interpret is None:
+        interpret = interpret_default()
+    return bespoke_svm_pallas(x, table, w, b, bits=bits, vmin=vmin,
+                              vmax=vmax, interpret=interpret)
+
+
+def classifier_bank(x, tables, weights, *, kind: str, bits: int,
+                    vmin: float = 0.0, vmax: float = 1.0,
+                    interpret: bool | None = None):
+    """One shared (M, C) sample batch through a deployed multi-design bank.
+
+    tables: (D, C, 2^bits) *baked* value tables (the deployment artifact —
+    no mask decode at serve time); weights: stacked po2-quantized
+    parameters, ``(w1, b1, w2, b2)`` for kind='mlp' or ``(w, b)`` for
+    kind='svm'. Returns (D, M, O) logits.
+
+    Kernel when the static envelope applies ((D, M/block_m) grid,
+    per-design table+weights resident in VMEM); bank jnp oracle otherwise.
+    Auto mode off-TPU routes to the oracle like the population quantizer
+    (interpret bank grids run D * M/bm tile bodies in Python)."""
+    if kind == "mlp":
+        kernel, oracle = bespoke_mlp_bank_pallas, ref.bespoke_mlp_bank_ref
+    elif kind == "svm":
+        kernel, oracle = bespoke_svm_bank_pallas, ref.bespoke_svm_bank_ref
+    else:
+        raise ValueError(f"unknown classifier kind {kind!r}")
+    if outside_envelope(bits, x.shape[-1]):
+        return oracle(x, tables, bits, *weights, vmin, vmax)
+    if interpret is None:
+        if interpret_default():
+            return oracle(x, tables, bits, *weights, vmin, vmax)
+        interpret = False
+    return kernel(x, tables, *weights, bits=bits, vmin=vmin, vmax=vmax,
+                  interpret=interpret)
+
+
+def classifier_bank_sharded(x, tables, weights, *, mesh, kind: str,
+                            bits: int, axes=None, vmin: float = 0.0,
+                            vmax: float = 1.0,
+                            interpret: bool | None = None):
+    """``classifier_bank`` with the design axis partitioned over ``mesh``:
+    each device holds only its (D/Dev, ...) slice of tables and weights
+    and serves the shared sample batch against it — Pareto designs are
+    embarrassingly parallel exactly like GA individuals, so the axis
+    choice reuses the population rules
+    (distributed/sharding.design_bank_axes). When nothing divides D the
+    single-device bank runs unsharded (same results)."""
+    from jax.sharding import PartitionSpec as P
+
+    from repro.compat import shard_map
+    from repro.distributed import sharding as sharding_lib
+
+    d = tables.shape[0]
+    if axes is None:
+        axes = sharding_lib.design_bank_axes(mesh, d)
+    if axes is None:
+        return classifier_bank(x, tables, weights, kind=kind, bits=bits,
+                               vmin=vmin, vmax=vmax, interpret=interpret)
+    pspec = P(axes)
+
+    def body(xs, ts, *ws):
+        return classifier_bank(xs, ts, ws, kind=kind, bits=bits, vmin=vmin,
+                               vmax=vmax, interpret=interpret)
+
+    return shard_map(body, mesh=mesh,
+                     in_specs=(P(),) + (pspec,) * (1 + len(weights)),
+                     out_specs=pspec, check_vma=False)(x, tables, *weights)

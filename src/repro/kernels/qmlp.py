@@ -1,13 +1,29 @@
-"""Pallas TPU kernel: fused analog-frontend + bespoke printed-MLP forward.
+"""Pallas TPU kernels: the fused analog-frontend + classifier family.
 
-One kernel invocation per batch tile performs
-    ADC-quantize (one-hot selection sum, as in adc_quantize.py)
- -> x @ W1 + b1 (MXU)  -> ReLU  -> h @ W2 + b2 (MXU)
-with W1/W2/b1/b2 and the ADC table fully VMEM-resident (printed MLPs are
-tiny: F, H, O <= a few hundred). Fusing removes two HBM round-trips for the
-xq/h intermediates — the serving hot path of the paper's classifier system.
+One kernel body quantizes a (block_m, F) sample tile through a baked
+code->value table (the one-hot selection sum of adc_quantize.py) and runs
+the classifier forward without the xq/h intermediates ever touching HBM —
+the serving hot path of the paper's deployed ADC+classifier pairs. Printed
+classifiers are tiny (F, H, O <= a few hundred), so tables and weights are
+fully VMEM-resident. fp32 accumulation; fp32 logits out.
 
-fp32 accumulation; output fp32 logits.
+Four entries share the body:
+
+* ``bespoke_mlp_pallas``  — one design, 1-hidden-layer MLP:
+      ADC-quantize -> x @ W1 + b1 (MXU) -> ReLU -> h @ W2 + b2 (MXU).
+* ``bespoke_svm_pallas``  — one design, linear SVM: ADC-quantize -> x @ W + b.
+* ``bespoke_mlp_bank_pallas`` / ``bespoke_svm_bank_pallas`` — an entire
+  deployed Pareto front (D designs) against one shared sample batch: the
+  grid is (D, M/block_m) with M innermost, mirroring
+  ``adc_quantize_pallas_population`` — design d's table *and* weights load
+  into VMEM once and stay resident while every sample tile streams past
+  (index maps constant in the inner grid axis), out (D, M, O). This is the
+  fused multi-design serving engine (core/deploy.py, launch/
+  serve_classifier.py); under a sharded bank D is the local design slice.
+
+``interpret=None`` (default) autodetects the backend via
+``envelope.interpret_default`` — compiled on TPU, interpret elsewhere —
+the same convention as ``adc_quantize_pallas`` callers get through ops.py.
 """
 from __future__ import annotations
 
@@ -17,21 +33,73 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels import envelope
 
-def _kernel(x_ref, table_ref, w1_ref, b1_ref, w2_ref, b2_ref, o_ref, *,
-            bits: int, vmin: float, vmax: float):
+
+def _dequant(x, table, *, bits: int, vmin: float, vmax: float):
+    """(bm, F) tile + (F, 2^bits) table -> quantized tile, as the one-hot
+    selection sum (gathers are weak on the TPU VPU; N<=6 unrolls to pure
+    compare/select/fma)."""
     n = 2 ** bits
-    x = x_ref[...].astype(jnp.float32)                  # (bm, F)
     scale = n / (vmax - vmin)
     code = jnp.clip(jnp.floor((x - vmin) * scale), 0.0, float(n - 1))
     xq = jnp.zeros_like(x)
-    table = table_ref[...]
-    for k in range(n):
+    for k in range(n):                                  # static unroll
         xq = xq + jnp.where(code == float(k), table[:, k][None, :], 0.0)
-    h = jnp.dot(xq, w1_ref[...], preferred_element_type=jnp.float32)
-    h = jnp.maximum(h + b1_ref[...][None, :], 0.0)
-    o = jnp.dot(h, w2_ref[...], preferred_element_type=jnp.float32)
-    o_ref[...] = o + b2_ref[...][None, :]
+    return xq
+
+
+def _mlp_forward(xq, w1, b1, w2, b2):
+    h = jnp.dot(xq, w1, preferred_element_type=jnp.float32)
+    h = jnp.maximum(h + b1[None, :], 0.0)
+    o = jnp.dot(h, w2, preferred_element_type=jnp.float32)
+    return o + b2[None, :]
+
+
+def _mlp_kernel(x_ref, table_ref, w1_ref, b1_ref, w2_ref, b2_ref, o_ref, *,
+                bits: int, vmin: float, vmax: float):
+    xq = _dequant(x_ref[...].astype(jnp.float32), table_ref[...],
+                  bits=bits, vmin=vmin, vmax=vmax)
+    o_ref[...] = _mlp_forward(xq, w1_ref[...], b1_ref[...], w2_ref[...],
+                              b2_ref[...])
+
+
+def _svm_kernel(x_ref, table_ref, w_ref, b_ref, o_ref, *,
+                bits: int, vmin: float, vmax: float):
+    xq = _dequant(x_ref[...].astype(jnp.float32), table_ref[...],
+                  bits=bits, vmin=vmin, vmax=vmax)
+    o = jnp.dot(xq, w_ref[...], preferred_element_type=jnp.float32)
+    o_ref[...] = o + b_ref[...][None, :]
+
+
+def _mlp_bank_kernel(x_ref, table_ref, w1_ref, b1_ref, w2_ref, b2_ref,
+                     o_ref, *, bits: int, vmin: float, vmax: float):
+    """Bank tile: x (bm, F) shared, per-design operands carry a leading
+    1-axis (the current design), out (1, bm, O)."""
+    xq = _dequant(x_ref[...].astype(jnp.float32), table_ref[0],
+                  bits=bits, vmin=vmin, vmax=vmax)
+    o_ref[0] = _mlp_forward(xq, w1_ref[0], b1_ref[0], w2_ref[0], b2_ref[0])
+
+
+def _svm_bank_kernel(x_ref, table_ref, w_ref, b_ref, o_ref, *,
+                     bits: int, vmin: float, vmax: float):
+    xq = _dequant(x_ref[...].astype(jnp.float32), table_ref[0],
+                  bits=bits, vmin=vmin, vmax=vmax)
+    o = jnp.dot(xq, w_ref[0], preferred_element_type=jnp.float32)
+    o_ref[0] = o + b_ref[0][None, :]
+
+
+def _pad_batch(x, block_m: int):
+    m = x.shape[0]
+    bm = min(block_m, m)
+    pad = (-m) % bm
+    if pad:
+        x = jnp.pad(x, ((0, pad), (0, 0)))
+    return x, bm
+
+
+def _f32(*arrays):
+    return tuple(a.astype(jnp.float32) for a in arrays)
 
 
 @functools.partial(jax.jit,
@@ -39,17 +107,17 @@ def _kernel(x_ref, table_ref, w1_ref, b1_ref, w2_ref, b2_ref, o_ref, *,
                                     "interpret"))
 def bespoke_mlp_pallas(x, table, w1, b1, w2, b2, *, bits: int,
                        vmin: float = 0.0, vmax: float = 1.0,
-                       block_m: int = 256, interpret: bool = True):
+                       block_m: int = 256, interpret: bool | None = None):
+    """x (M, F), table (F, 2^bits), 1-hidden-layer weights -> (M, O) logits."""
+    if interpret is None:
+        interpret = envelope.interpret_default()
     m, f = x.shape
     h = w1.shape[1]
     o = w2.shape[1]
-    bm = min(block_m, m)
-    pad = (-m) % bm
-    if pad:
-        x = jnp.pad(x, ((0, pad), (0, 0)))
+    x, bm = _pad_batch(x, block_m)
     grid = (x.shape[0] // bm,)
     out = pl.pallas_call(
-        functools.partial(_kernel, bits=bits, vmin=vmin, vmax=vmax),
+        functools.partial(_mlp_kernel, bits=bits, vmin=vmin, vmax=vmax),
         grid=grid,
         in_specs=[
             pl.BlockSpec((bm, f), lambda i: (i, 0)),
@@ -62,6 +130,103 @@ def bespoke_mlp_pallas(x, table, w1, b1, w2, b2, *, bits: int,
         out_specs=pl.BlockSpec((bm, o), lambda i: (i, 0)),
         out_shape=jax.ShapeDtypeStruct((x.shape[0], o), jnp.float32),
         interpret=interpret,
-    )(x, table.astype(jnp.float32), w1.astype(jnp.float32),
-      b1.astype(jnp.float32), w2.astype(jnp.float32), b2.astype(jnp.float32))
+    )(x, *_f32(table, w1, b1, w2, b2))
     return out[:m]
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("bits", "vmin", "vmax", "block_m",
+                                    "interpret"))
+def bespoke_svm_pallas(x, table, w, b, *, bits: int,
+                       vmin: float = 0.0, vmax: float = 1.0,
+                       block_m: int = 256, interpret: bool | None = None):
+    """x (M, F), table (F, 2^bits), SVM weights (F, O)/(O,) -> (M, O)."""
+    if interpret is None:
+        interpret = envelope.interpret_default()
+    m, f = x.shape
+    o = w.shape[1]
+    x, bm = _pad_batch(x, block_m)
+    grid = (x.shape[0] // bm,)
+    out = pl.pallas_call(
+        functools.partial(_svm_kernel, bits=bits, vmin=vmin, vmax=vmax),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, f), lambda i: (i, 0)),
+            pl.BlockSpec((f, 2 ** bits), lambda i: (0, 0)),
+            pl.BlockSpec((f, o), lambda i: (0, 0)),
+            pl.BlockSpec((o,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((bm, o), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((x.shape[0], o), jnp.float32),
+        interpret=interpret,
+    )(x, *_f32(table, w, b))
+    return out[:m]
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("bits", "vmin", "vmax", "block_m",
+                                    "interpret"))
+def bespoke_mlp_bank_pallas(x, tables, w1, b1, w2, b2, *, bits: int,
+                            vmin: float = 0.0, vmax: float = 1.0,
+                            block_m: int = 256,
+                            interpret: bool | None = None):
+    """Shared x (M, F); per-design tables (D, F, 2^bits) and weights
+    (D, F, H)/(D, H)/(D, H, O)/(D, O). Returns (D, M, O) — the whole
+    deployed front's logits in one launch, design operands VMEM-resident
+    across the inner M axis."""
+    if interpret is None:
+        interpret = envelope.interpret_default()
+    m, f = x.shape
+    d = tables.shape[0]
+    h = w1.shape[2]
+    o = w2.shape[2]
+    x, bm = _pad_batch(x, block_m)
+    grid = (d, x.shape[0] // bm)
+    out = pl.pallas_call(
+        functools.partial(_mlp_bank_kernel, bits=bits, vmin=vmin, vmax=vmax),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, f), lambda di, i: (i, 0)),
+            pl.BlockSpec((1, f, 2 ** bits), lambda di, i: (di, 0, 0)),
+            pl.BlockSpec((1, f, h), lambda di, i: (di, 0, 0)),
+            pl.BlockSpec((1, h), lambda di, i: (di, 0)),
+            pl.BlockSpec((1, h, o), lambda di, i: (di, 0, 0)),
+            pl.BlockSpec((1, o), lambda di, i: (di, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bm, o), lambda di, i: (di, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((d, x.shape[0], o), jnp.float32),
+        interpret=interpret,
+    )(x, *_f32(tables, w1, b1, w2, b2))
+    return out[:, :m]
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("bits", "vmin", "vmax", "block_m",
+                                    "interpret"))
+def bespoke_svm_bank_pallas(x, tables, w, b, *, bits: int,
+                            vmin: float = 0.0, vmax: float = 1.0,
+                            block_m: int = 256,
+                            interpret: bool | None = None):
+    """Shared x (M, F); per-design tables (D, F, 2^bits), w (D, F, O),
+    b (D, O). Returns (D, M, O)."""
+    if interpret is None:
+        interpret = envelope.interpret_default()
+    m, f = x.shape
+    d = tables.shape[0]
+    o = w.shape[2]
+    x, bm = _pad_batch(x, block_m)
+    grid = (d, x.shape[0] // bm)
+    out = pl.pallas_call(
+        functools.partial(_svm_bank_kernel, bits=bits, vmin=vmin, vmax=vmax),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, f), lambda di, i: (i, 0)),
+            pl.BlockSpec((1, f, 2 ** bits), lambda di, i: (di, 0, 0)),
+            pl.BlockSpec((1, f, o), lambda di, i: (di, 0, 0)),
+            pl.BlockSpec((1, o), lambda di, i: (di, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bm, o), lambda di, i: (di, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((d, x.shape[0], o), jnp.float32),
+        interpret=interpret,
+    )(x, *_f32(tables, w, b))
+    return out[:, :m]

@@ -54,3 +54,31 @@ def bespoke_mlp_ref(x: jnp.ndarray, table: jnp.ndarray, bits: int,
     xq = adc_quantize_ref(x, table, bits, vmin, vmax)
     h = jax.nn.relu(xq @ w1 + b1)
     return h @ w2 + b2
+
+
+def bespoke_svm_ref(x: jnp.ndarray, table: jnp.ndarray, bits: int,
+                    w: jnp.ndarray, b: jnp.ndarray,
+                    vmin: float = 0.0, vmax: float = 1.0) -> jnp.ndarray:
+    """Fused analog-frontend + linear-SVM forward: scores = ADC(x) @ w + b."""
+    xq = adc_quantize_ref(x, table, bits, vmin, vmax)
+    return xq @ w + b
+
+
+def bespoke_mlp_bank_ref(x: jnp.ndarray, tables: jnp.ndarray, bits: int,
+                         w1: jnp.ndarray, b1: jnp.ndarray,
+                         w2: jnp.ndarray, b2: jnp.ndarray,
+                         vmin: float = 0.0, vmax: float = 1.0) -> jnp.ndarray:
+    """Multi-design bank oracle: one shared sample batch through D deployed
+    MLP designs. x (M, F); tables (D, F, 2^bits); weights stacked over D.
+    Returns (D, M, O) — row d == ``bespoke_mlp_ref`` on design d."""
+    fn = lambda t, a1, c1, a2, c2: bespoke_mlp_ref(x, t, bits, a1, c1, a2,
+                                                   c2, vmin, vmax)
+    return jax.vmap(fn)(tables, w1, b1, w2, b2)
+
+
+def bespoke_svm_bank_ref(x: jnp.ndarray, tables: jnp.ndarray, bits: int,
+                         w: jnp.ndarray, b: jnp.ndarray,
+                         vmin: float = 0.0, vmax: float = 1.0) -> jnp.ndarray:
+    """Multi-design bank oracle for SVM designs: (D, M, O)."""
+    fn = lambda t, a, c: bespoke_svm_ref(x, t, bits, a, c, vmin, vmax)
+    return jax.vmap(fn)(tables, w, b)

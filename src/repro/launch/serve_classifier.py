@@ -1,0 +1,198 @@
+"""Serving launcher for deployed ADC+classifier fronts (DESIGN.md §8): a
+continuous-batching driver over the fused multi-design bank kernel.
+
+A request is a small batch of sensor samples; the server drains a request
+queue into fixed-size microbatches (one compiled program — a microbatch
+may span many small requests or a slice of one large request, tail padded),
+pushes each microbatch through the *whole* deployed front in one fused
+bank launch (every response carries all D designs' predictions, so the
+accuracy/area trade-off is selectable per response), and reports
+requests/sec + samples/sec. With ``--sharded`` the design bank partitions
+D/device over the mesh (ops.classifier_bank_sharded via
+distributed/sharding.design_bank_axes).
+
+  # search + export first:
+  PYTHONPATH=src python -m repro.launch.train --adc-search --dataset seeds \
+      --bits 3 --pop 16 --generations 4 --ckpt-dir /tmp/adc --export-front
+  # then serve the exported front:
+  PYTHONPATH=src python -m repro.launch.serve_classifier \
+      --front-dir /tmp/adc/front --requests 64 --batch 128
+
+``--smoke`` (no --front-dir needed) searches a tiny fixed-seed front
+inline and serves it — the CI lane; every derived field except wall-clock
+is deterministic.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+from collections import deque
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import deploy
+
+
+def make_request_stream(x: np.ndarray, num_requests: int, request_size: int,
+                        seed: int = 0) -> List[Tuple[int, np.ndarray]]:
+    """Synthetic client traffic: ``num_requests`` requests of
+    ``request_size`` sample rows each, drawn (with replacement) from the
+    dataset — deterministic under ``seed``."""
+    rng = np.random.default_rng(seed)
+    idx = rng.integers(0, len(x), size=(num_requests, request_size))
+    return [(rid, np.asarray(x[idx[rid]], np.float32))
+            for rid in range(num_requests)]
+
+
+def serve(designs: Sequence[deploy.DeployedClassifier],
+          requests: Sequence[Tuple[int, np.ndarray]], batch: int, *,
+          mesh=None, interpret: Optional[bool] = None) -> Dict:
+    """Drain ``requests`` through the fused bank in fixed ``batch``-row
+    microbatches (continuous batching: the row stream ignores request
+    boundaries; the tail pads to keep one compiled shape). Returns the
+    throughput report plus per-request responses
+    ``{rid: (D, n_rows) predicted classes}``."""
+    fn = deploy.make_bank_fn(designs, mesh=mesh, interpret=interpret)
+    channels = designs[0].table.shape[0]
+    queue = deque(requests)
+    carry: Optional[Tuple[int, np.ndarray]] = None
+    responses: Dict[int, List[np.ndarray]] = {rid: [] for rid, _ in requests}
+    total_rows = sum(len(x) for _, x in requests)
+    batches = padded_rows = 0
+    # warmup on a dummy batch so the report times serving, not compilation
+    jax.block_until_ready(fn(jnp.zeros((batch, channels), jnp.float32)))
+    t0 = time.perf_counter()
+    while queue or carry:
+        rows, meta, filled = [], [], 0
+        while filled < batch and (queue or carry):
+            rid, x = carry if carry is not None else queue.popleft()
+            carry = None
+            take = min(batch - filled, len(x))
+            rows.append(x[:take])
+            meta.append((rid, take))
+            filled += take
+            if take < len(x):
+                carry = (rid, x[take:])
+        xb = np.concatenate(rows, axis=0)
+        pad = batch - len(xb)
+        if pad:
+            xb = np.pad(xb, ((0, pad), (0, 0)))
+            padded_rows += pad
+        logits = np.asarray(jax.block_until_ready(fn(jnp.asarray(xb))))
+        preds = np.argmax(logits, axis=-1)            # (D, batch)
+        off = 0
+        for rid, take in meta:
+            responses[rid].append(preds[:, off:off + take])
+            off += take
+        batches += 1
+    wall_s = time.perf_counter() - t0
+    out = {rid: np.concatenate(chunks, axis=1)
+           for rid, chunks in responses.items()}
+    return {
+        "num_designs": len(designs),
+        "kind": designs[0].kind,
+        "bits": designs[0].bits,
+        "batch": batch,
+        "requests": len(requests),
+        "samples": total_rows,
+        "batches": batches,
+        "pad_fraction": padded_rows / max(batches * batch, 1),
+        "wall_s": wall_s,
+        "requests_per_s": len(requests) / wall_s,
+        "samples_per_s": total_rows / wall_s,
+        "responses": out,
+    }
+
+
+def _smoke_front(dataset: str):
+    """Tiny fixed-seed search + export (the CI lane needs no pre-exported
+    front on disk): same config family as benchmarks' --smoke search."""
+    from repro.core import search
+    from repro.data import tabular
+    spec = tabular.SPECS[dataset]
+    data = tabular.make_dataset(dataset)
+    sizes = (spec.features, spec.hidden, spec.classes)
+    cfg = search.SearchConfig(bits=2, pop_size=6, generations=1,
+                              train_steps=30)
+    pg, _, _ = search.run_search(data, sizes, cfg)
+    return deploy.export_front(pg, data, sizes, cfg), data
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--front-dir",
+                    help="exported front (launch.train --export-front); "
+                         "omit with --smoke to search one inline")
+    ap.add_argument("--dataset", default="seeds",
+                    help="sample stream + labels for the parity check")
+    ap.add_argument("--requests", type=int, default=64)
+    ap.add_argument("--request-size", type=int, default=8)
+    ap.add_argument("--batch", type=int, default=128,
+                    help="compiled microbatch rows (continuous batching)")
+    ap.add_argument("--sharded", action="store_true",
+                    help="shard the design bank D/device over the mesh")
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny fixed-seed front + traffic (CI lane)")
+    args = ap.parse_args(argv)
+
+    from repro.data import tabular
+    if args.smoke:
+        args.requests, args.request_size = 16, 4
+        args.batch = min(args.batch, 32)
+    if args.front_dir:
+        designs = deploy.load_front(args.front_dir)
+        data = tabular.make_dataset(args.dataset)
+        meta = deploy.front_meta(args.front_dir)
+        trained_on = meta.get("dataset")
+        if trained_on is not None and trained_on != args.dataset:
+            ap.error(f"front at {args.front_dir} was exported from dataset "
+                     f"{trained_on!r}; serving {args.dataset!r} traffic "
+                     f"through it would be wrong-domain (pass --dataset "
+                     f"{trained_on})")
+        channels = designs[0].table.shape[0]
+        if channels != data["x_test"].shape[1]:
+            ap.error(f"front expects {channels} sensor channels but "
+                     f"dataset {args.dataset!r} has "
+                     f"{data['x_test'].shape[1]}")
+    elif args.smoke:
+        designs, data = _smoke_front(args.dataset)
+    else:
+        ap.error("--front-dir is required unless --smoke is given")
+
+    mesh = None
+    if args.sharded:
+        from repro.core import search
+        mesh = search.default_search_mesh()
+    print(f"serve_classifier[D={len(designs)} {designs[0].kind} "
+          f"bits={designs[0].bits}] dataset={args.dataset} "
+          f"devices={len(jax.devices())} sharded={args.sharded}")
+
+    requests = make_request_stream(data["x_test"], args.requests,
+                                   args.request_size)
+    rep = serve(designs, requests, args.batch, mesh=mesh)
+    print(f"  {rep['requests']} requests ({rep['samples']} samples) in "
+          f"{rep['wall_s']:.3f}s: {rep['requests_per_s']:.1f} req/s, "
+          f"{rep['samples_per_s']:.0f} samples/s "
+          f"({rep['batches']} batches of {rep['batch']}, "
+          f"{rep['pad_fraction'] * 100:.1f}% pad)")
+
+    # round-trip parity: the served front must reproduce each design's
+    # export-time accuracy bit-for-bit (the deployment contract)
+    served = deploy.served_accuracies(designs, data["x_test"],
+                                      data["y_test"], mesh=mesh)
+    exported = np.array([d.accuracy for d in designs])
+    for i, d in enumerate(designs):
+        print(f"  design {i}: area={d.area_tc:4d}T  dp={int(d.dp):+d}  "
+              f"acc exported={d.accuracy:.3f} served={served[i]:.3f}")
+    if not np.array_equal(served, exported):
+        raise SystemExit(f"served accuracies diverge from the exported "
+                         f"front: {served} != {exported}")
+    print("  parity OK: served == exported accuracy for every design")
+    return rep
+
+
+if __name__ == "__main__":
+    main()

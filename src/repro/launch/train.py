@@ -12,6 +12,10 @@ individuals/sec):
 
   PYTHONPATH=src python -m repro.launch.train --adc-search --dataset seeds \
       --bits 3 --pop 16 --generations 4 --train-steps 100
+
+Add ``--export-front`` to freeze the searched Pareto front into deployable
+classifier artifacts (core/deploy.py) under <ckpt-dir>/front, servable by
+``repro.launch.serve_classifier``.
 """
 from __future__ import annotations
 
@@ -90,9 +94,13 @@ def run_adc_search(args):
               f"best-acc {1 - fit[:, 0].min():.3f}  "
               f"min-area {fit[:, 1].min():.3f}", flush=True)
 
-    pg, pf, decode = search.run_search(data, sizes, cfg, log=log,
-                                       ckpt=ckpt, resume=args.resume,
-                                       mesh=mesh)
+    # return_trained: with --export-front the final front's vmapped QAT
+    # runs once here and its trained stacks feed the export directly
+    out = search.run_search(data, sizes, cfg, log=log, ckpt=ckpt,
+                            resume=args.resume, mesh=mesh,
+                            return_trained=args.export_front)
+    (pg, pf, decode), trained = out[:3], (out[3] if args.export_front
+                                          else None)
     gen_s = [b - a for a, b in zip(marks[:-1], marks[1:])]
     if gen_s:
         # first generation pays the XLA compile; steady state is the tail
@@ -107,6 +115,20 @@ def run_adc_search(args):
     flash = area.flash_full_tc(cfg.bits) * sizes[0]
     for f in pf[np.argsort(pf[:, 0])]:
         print(f"  acc={1 - f[0]:.3f}  area={f[1] * flash:.0f}T (norm {f[1]:.3f})")
+    if args.export_front:
+        from repro.core import deploy
+        front_dir = Path(args.ckpt_dir) / "front"
+        designs = deploy.export_front(pg, data, sizes, cfg, trained=trained)
+        deploy.save_front(front_dir, designs,
+                          extra_meta={"dataset": args.dataset,
+                                      "sizes": list(sizes)})
+        print(f"exported {len(designs)} deployed design(s) -> {front_dir}")
+        for i, d in enumerate(designs):
+            print(f"  design {i}: acc={d.accuracy:.3f}  area={d.area_tc}T  "
+                  f"dp={int(d.dp)}  kept-levels="
+                  f"{int(d.mask.sum())}/{d.mask.size}")
+        print(f"serve it:  PYTHONPATH=src python -m repro.launch."
+              f"serve_classifier --front-dir {front_dir}")
     return pf
 
 
@@ -137,6 +159,12 @@ def main(argv=None):
                     help="restart the ADC search from its latest "
                          "checkpoint under <ckpt-dir>/adc_search "
                          "(bit-identical continuation)")
+    ap.add_argument("--export-front", action="store_true",
+                    help="after --adc-search, freeze the Pareto front "
+                         "into deployable classifiers (baked value "
+                         "tables + po2-quantized weights + area report) "
+                         "under <ckpt-dir>/front — servable via "
+                         "repro.launch.serve_classifier")
     args = ap.parse_args(argv)
 
     if args.adc_search:

@@ -44,6 +44,6 @@ def apply_mlp(params: Params, x: jnp.ndarray, dp: Optional[jnp.ndarray] = None,
     return h
 
 
-def accuracy(params: Params, x, y, dp=None) -> jnp.ndarray:
-    logits = apply_mlp(params, x, dp)
+def accuracy(params: Params, x, y, dp=None, weight_bits: int = 8) -> jnp.ndarray:
+    logits = apply_mlp(params, x, dp, weight_bits)
     return (jnp.argmax(logits, -1) == y).mean()

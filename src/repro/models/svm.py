@@ -30,14 +30,15 @@ def apply_svm(params: Params, x: jnp.ndarray,
 
 
 def svm_loss(params: Params, x, y, dp=None, margin: float = 1.0,
-             l2: float = 1e-3) -> jnp.ndarray:
+             l2: float = 1e-3, weight_bits: int = 8) -> jnp.ndarray:
     """Multiclass squared hinge (Crammer-Singer style one-vs-rest)."""
-    scores = apply_svm(params, x, dp)
+    scores = apply_svm(params, x, dp, weight_bits)
     C = scores.shape[-1]
     tgt = jax.nn.one_hot(y, C) * 2.0 - 1.0          # +-1 per class
     hinge = jnp.maximum(0.0, margin - tgt * scores)
     return (hinge ** 2).mean() + l2 * jnp.sum(params[0] ** 2)
 
 
-def accuracy(params: Params, x, y, dp=None) -> jnp.ndarray:
-    return (jnp.argmax(apply_svm(params, x, dp), -1) == y).mean()
+def accuracy(params: Params, x, y, dp=None, weight_bits: int = 8
+             ) -> jnp.ndarray:
+    return (jnp.argmax(apply_svm(params, x, dp, weight_bits), -1) == y).mean()

@@ -9,7 +9,8 @@ from hypothesis_compat import given, settings, st
 from repro.core import adc
 from repro.kernels import ops, ref
 from repro.kernels.adc_quantize import adc_quantize_pallas
-from repro.kernels.qmlp import bespoke_mlp_pallas
+from repro.kernels.qmlp import (bespoke_mlp_bank_pallas, bespoke_mlp_pallas,
+                                bespoke_svm_bank_pallas, bespoke_svm_pallas)
 
 
 def _rand_mask(rng, c, n):
@@ -17,6 +18,21 @@ def _rand_mask(rng, c, n):
     m[:, 0] = 1
     m[:, -1] = 1                                   # >= 2 levels/channel
     return jnp.asarray(m)
+
+
+def _min_mask(rng, c, n):
+    """Heavily pruned: exactly 2 kept levels per channel (the legal
+    minimum), at random positions — the far edge of the pruning space."""
+    m = np.zeros((c, n), np.int32)
+    for ch in range(c):
+        keep = rng.choice(n, size=2, replace=False)
+        m[ch, keep] = 1
+    return jnp.asarray(m)
+
+
+def _mlp_weights(rng, f, h, o, lead=()):
+    mk = lambda *s: jnp.asarray(rng.normal(size=lead + s), jnp.float32)
+    return mk(f, h), mk(h), mk(h, o), mk(o)
 
 
 @pytest.mark.parametrize("bits", [2, 3, 4])
@@ -84,6 +100,155 @@ def test_adc_kernel_property(bits, m, c, seed):
     for ch in range(c):
         kept = set(np.asarray(vals)[np.asarray(mask[ch]) == 1].tolist())
         assert set(np.asarray(got[:, ch]).tolist()) <= kept
+
+
+@pytest.mark.parametrize("bits", [2, 4])
+def test_bespoke_mlp_kernel_min_kept_levels(bits):
+    """Pruned (non-full) masks through the fused kernel: the minimum-legal
+    2-kept-levels-per-channel masks still match the oracle exactly."""
+    rng = np.random.default_rng(17 + bits)
+    m, f, h, o = 41, 9, 5, 3
+    x = jnp.asarray(rng.random((m, f)), jnp.float32)
+    mask = _min_mask(rng, f, 2 ** bits)
+    table = ref.value_table(mask, bits)
+    w1, b1, w2, b2 = _mlp_weights(rng, f, h, o)
+    want = ref.bespoke_mlp_ref(x, table, bits, w1, b1, w2, b2)
+    got = bespoke_mlp_pallas(x, table, w1, b1, w2, b2, bits=bits,
+                             block_m=16, interpret=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_bespoke_mlp_interpret_autodetects_backend():
+    """interpret=None (the default) resolves via envelope.interpret_default:
+    off-TPU the kernel body runs in interpret mode rather than attempting a
+    TPU compile — direct callers no longer need to pass interpret."""
+    from repro.kernels import envelope
+    assert envelope.interpret_default() == (jax.default_backend() != "tpu")
+    rng = np.random.default_rng(23)
+    m, f, h, o, bits = 19, 5, 4, 3, 3
+    x = jnp.asarray(rng.random((m, f)), jnp.float32)
+    mask = _rand_mask(rng, f, 2 ** bits)
+    table = ref.value_table(mask, bits)
+    w1, b1, w2, b2 = _mlp_weights(rng, f, h, o)
+    got = bespoke_mlp_pallas(x, table, w1, b1, w2, b2, bits=bits)  # no kwarg
+    want = ref.bespoke_mlp_ref(x, table, bits, w1, b1, w2, b2)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("bits,c", [
+    (7, 9),        # bits > MAX_UNROLL_BITS: unroll envelope exceeded
+    (2, 4100),     # C > MAX_CHANNELS: VMEM tile envelope exceeded
+])
+def test_ops_bespoke_mlp_fallback_outside_envelope(bits, c):
+    """ops.bespoke_mlp routes to ref.bespoke_mlp_ref outside the kernel
+    envelope — bit-identical to calling the oracle directly, and
+    consistent with the core.adc modelling semantics."""
+    rng = np.random.default_rng(bits * 10 + 1)
+    m, h, o = 13, 4, 3
+    x = jnp.asarray(rng.random((m, c)), jnp.float32)
+    mask = _rand_mask(rng, c, 2 ** bits)
+    w1, b1, w2, b2 = _mlp_weights(rng, c, h, o)
+    got = ops.bespoke_mlp(x, mask, w1, b1, w2, b2, bits=bits)
+    table = ref.value_table(mask, bits)
+    want = ref.bespoke_mlp_ref(x, table, bits, w1, b1, w2, b2)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    xq = adc.adc_quantize(x, mask, bits=bits, ste=False)
+    via_core = jax.nn.relu(xq @ w1 + b1) @ w2 + b2
+    np.testing.assert_allclose(np.asarray(got), np.asarray(via_core),
+                               rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("bits", [2, 3])
+def test_bespoke_svm_kernel_matches_ref(bits):
+    rng = np.random.default_rng(5 + bits)
+    m, f, o = 37, 11, 4
+    x = jnp.asarray(rng.random((m, f)), jnp.float32)
+    mask = _rand_mask(rng, f, 2 ** bits)
+    table = ref.value_table(mask, bits)
+    w = jnp.asarray(rng.normal(size=(f, o)), jnp.float32)
+    b = jnp.asarray(rng.normal(size=(o,)), jnp.float32)
+    want = ref.bespoke_svm_ref(x, table, bits, w, b)
+    got = bespoke_svm_pallas(x, table, w, b, bits=bits, block_m=16,
+                             interpret=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+    via_ops = ops.bespoke_svm(x, mask, w, b, bits=bits, interpret=True)
+    np.testing.assert_allclose(np.asarray(via_ops), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+# ------------------------------------------------------ multi-design banks
+@pytest.mark.parametrize("bits", [2, 3])
+def test_mlp_bank_kernel_rows_match_single_kernel(bits):
+    """Row d of the (D, M/bm)-grid bank launch == the single-design fused
+    kernel on design d (mixed pruned masks, incl. a minimum one)."""
+    rng = np.random.default_rng(31 + bits)
+    d, m, f, h, o = 4, 29, 7, 4, 3
+    n = 2 ** bits
+    x = jnp.asarray(rng.random((m, f)), jnp.float32)
+    masks = jnp.stack([_min_mask(rng, f, n)] +
+                      [_rand_mask(rng, f, n) for _ in range(d - 1)])
+    tables = ref.value_table(masks, bits)
+    w1, b1, w2, b2 = _mlp_weights(rng, f, h, o, lead=(d,))
+    got = bespoke_mlp_bank_pallas(x, tables, w1, b1, w2, b2, bits=bits,
+                                  block_m=8, interpret=True)
+    assert got.shape == (d, m, o)
+    want = ref.bespoke_mlp_bank_ref(x, tables, bits, w1, b1, w2, b2)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+    for i in range(d):
+        one = bespoke_mlp_pallas(x, tables[i], w1[i], b1[i], w2[i], b2[i],
+                                 bits=bits, block_m=8, interpret=True)
+        np.testing.assert_allclose(np.asarray(got[i]), np.asarray(one),
+                                   rtol=1e-5, atol=1e-5)
+
+
+def test_svm_bank_kernel_matches_ref():
+    rng = np.random.default_rng(41)
+    d, m, f, o, bits = 3, 50, 6, 2, 3
+    x = jnp.asarray(rng.random((m, f)), jnp.float32)
+    masks = jnp.stack([_rand_mask(rng, f, 2 ** bits) for _ in range(d)])
+    tables = ref.value_table(masks, bits)
+    w = jnp.asarray(rng.normal(size=(d, f, o)), jnp.float32)
+    b = jnp.asarray(rng.normal(size=(d, o)), jnp.float32)
+    want = ref.bespoke_svm_bank_ref(x, tables, bits, w, b)
+    got = bespoke_svm_bank_pallas(x, tables, w, b, bits=bits, block_m=16,
+                                  interpret=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("kind", ["mlp", "svm"])
+def test_ops_classifier_bank_envelope(kind):
+    """classifier_bank: auto mode off-TPU serves the jnp bank oracle
+    bit-identically; explicit interpret=True runs the fused bank kernel;
+    outside the envelope (bits > 6) it falls back to the oracle."""
+    rng = np.random.default_rng(53)
+    d, m, f, h, o = 3, 26, 5, 4, 3
+    x = jnp.asarray(rng.random((m, f)), jnp.float32)
+    for bits in (3, 7):
+        n = 2 ** bits
+        masks = jnp.stack([_rand_mask(rng, f, n) for _ in range(d)])
+        tables = ref.value_table(masks, bits)
+        if kind == "mlp":
+            weights = _mlp_weights(rng, f, h, o, lead=(d,))
+            want = ref.bespoke_mlp_bank_ref(x, tables, bits, *weights)
+        else:
+            weights = (jnp.asarray(rng.normal(size=(d, f, o)), jnp.float32),
+                       jnp.asarray(rng.normal(size=(d, o)), jnp.float32))
+            want = ref.bespoke_svm_bank_ref(x, tables, bits, *weights)
+        got = ops.classifier_bank(x, tables, weights, kind=kind, bits=bits)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+        if bits <= 6:
+            via_kernel = ops.classifier_bank(x, tables, weights, kind=kind,
+                                             bits=bits, interpret=True)
+            np.testing.assert_allclose(np.asarray(via_kernel),
+                                       np.asarray(want), rtol=1e-5,
+                                       atol=1e-5)
+    with pytest.raises(ValueError):
+        ops.classifier_bank(x, tables, weights, kind="tree", bits=3)
 
 
 # ---------------------------------------------------------- flash attention
