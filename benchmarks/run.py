@@ -20,6 +20,17 @@ import jax.numpy as jnp
 import numpy as np
 
 
+def _dispatch_record(entry, spec, channels, interpret=None, sharded=False):
+    """The resolved kernel-dispatch path (oracle/kernel, interpret flag,
+    sharded, reason) for one registry entry, resolved from the ACTUAL
+    AdcSpec the benchmark runs — stamped into every JSON artifact so a
+    perf regression is attributable to the path actually taken rather
+    than guessed from the backend."""
+    from repro.kernels import dispatch
+    return dispatch.resolve(entry, spec, channels, interpret=interpret,
+                            sharded=sharded).as_dict()
+
+
 def _timeit(fn, *args, reps=3, warmup=1, **kw):
     r = None
     for _ in range(warmup):
@@ -70,16 +81,25 @@ def bench_fig4(fast=True):
 
 
 def bench_adc_kernel():
-    from repro.kernels import ops, ref
+    from repro.core.spec import AdcSpec
+    from repro.kernels import envelope, ops, ref
     rng = np.random.default_rng(0)
     x = jnp.asarray(rng.random((4096, 21)), jnp.float32)
     mask = jnp.asarray((rng.random((21, 16)) < 0.6).astype(np.int32))
     mask = mask.at[:, 0].set(1).at[:, -1].set(1)
-    us_k, _ = _timeit(ops.adc_quantize, x, mask, bits=4, reps=5)
+    spec = AdcSpec(bits=4)
+    # force the kernel path (interpret off-TPU, compiled on TPU) — the
+    # registry's auto policy would serve the oracle here and never time
+    # the Pallas kernel on the CPU CI lane
+    interp = envelope.interpret_default()
+    us_k, _ = _timeit(ops.adc_quantize, x, mask, spec=spec,
+                      interpret=interp, reps=5)
     table = ref.value_table(mask, 4)
     us_r, _ = _timeit(jax.jit(
         lambda x: ref.adc_quantize_ref(x, table, 4)), x, reps=5)
-    return us_k, f"ref_us={us_r:.0f} (interpret-mode kernel; TPU target)"
+    d = _dispatch_record("adc_quantize", spec, 21, interpret=interp)
+    return us_k, (f"ref_us={us_r:.0f} dispatch={d['path']}"
+                  f"[interpret={d['interpret']}] (TPU target)")
 
 
 def bench_ga_generation():
@@ -132,7 +152,10 @@ def bench_search_adc(pop=16, smoke=False):
     reps, warmup = (1, 1) if smoke else (2, 1)
     report = {"pop_size": pop, "qat_steps": base["train_steps"],
               "bits": base["bits"], "dataset": "seeds", "smoke": smoke,
-              "backend": jax.default_backend()}
+              "backend": jax.default_backend(),
+              "dispatch": _dispatch_record(
+                  "adc_quantize_population",
+                  search.SearchConfig(**base).adc_spec, sizes[0])}
     for engine in ("batched", "reference"):
         cfg = search.SearchConfig(engine=engine, **base)
         eval_fn = search.make_eval_fn(data, sizes, cfg)
@@ -166,6 +189,7 @@ def bench_search_adc_sharded(pop=16, smoke=False):
     from benchmarks import paper_tables
     from repro.core import search
     from repro.data import tabular
+    from repro.distributed import sharding as sharding_lib
     data = tabular.make_dataset("seeds")
     sizes = (7, 4, 3)
     base = _search_bench_base(pop, smoke)
@@ -177,7 +201,12 @@ def bench_search_adc_sharded(pop=16, smoke=False):
               "bits": base["bits"], "dataset": "seeds", "smoke": smoke,
               "backend": jax.default_backend(),
               "device_count": len(jax.devices()),
-              "mesh": dict(mesh.shape)}
+              "mesh": dict(mesh.shape),
+              "dispatch": _dispatch_record(
+                  "adc_quantize_population",
+                  search.SearchConfig(**base).adc_spec, sizes[0],
+                  sharded=sharding_lib.population_axes(mesh, pop)
+                  is not None)}
     for engine in ("sharded", "batched"):
         cfg = search.SearchConfig(engine=engine, **base)
         eval_fn = search.make_eval_fn(data, sizes, cfg, mesh=mesh)
@@ -217,6 +246,9 @@ def bench_serve_classifier(smoke=False):
               "backend": jax.default_backend(),
               "device_count": len(jax.devices()),
               "kind": front[0].kind, "bits": front[0].bits,
+              "dispatch": _dispatch_record(
+                  f"classifier_bank_{front[0].kind}", front[0].spec,
+                  sizes[0]),
               "front": [{"area_tc": d.area_tc, "accuracy": d.accuracy,
                          "dp": d.dp, "kept_levels": int(d.mask.sum())}
                         for d in front]}
@@ -331,9 +363,12 @@ def main() -> None:
                          "derived": f"FAILED {type(e).__name__}: {e}"})
             print(f"{name},FAILED,{type(e).__name__}: {e}", flush=True)
     if args.json:
+        from repro.kernels import dispatch, envelope
         with open(args.json, "w") as f:
             json.dump({"backend": jax.default_backend(),
                        "device_count": len(jax.devices()),
+                       "interpret_default": envelope.interpret_default(),
+                       "dispatch_entries": list(dispatch.entries()),
                        "smoke": smoke, "failures": failures,
                        "rows": rows}, f, indent=1)
     if failures:

@@ -1,12 +1,13 @@
-"""Quickstart: the paper's objects in ~40 lines.
+"""Quickstart: the paper's objects in ~50 lines, through the repro.api
+facade (AdcSpec -> quantize -> search -> deploy -> serve).
 
   PYTHONPATH=src python examples/quickstart.py
 """
 import jax.numpy as jnp
 import numpy as np
 
+from repro import api
 from repro.core import adc, area
-from repro.kernels import ops
 
 BITS = 3
 
@@ -28,8 +29,24 @@ print(f"area: pruned ADC              = {area.pruned_binary_tc(np.asarray(mask))
 print(f"area: baseline binary (Fig2a) = {area.baseline_binary_tc(BITS)} T")
 print(f"area: flash + encoder         = {area.flash_full_tc(BITS)} T")
 
-# 4. the same quantizer as the Pallas TPU kernel (interpret mode on CPU)
+# 4. one AdcSpec describes the whole design point — here with PER-CHANNEL
+#    analog ranges (four heterogeneous sensors), routed through the same
+#    Pallas kernel registry (jnp oracle on CPU, compiled kernel on TPU)
+spec = api.AdcSpec(bits=BITS, vmin=(0.0, -1.0, 0.0, 0.2),
+                   vmax=(1.0, 1.0, 2.0, 0.8))
 xs = jnp.asarray(np.random.default_rng(0).random((8, 4)), jnp.float32)
 masks = jnp.stack([mask, full, mask, full])           # per-channel ADCs
-print("\nkernel output:\n", np.asarray(
-    ops.adc_quantize(xs, masks, bits=BITS)).round(3))
+print(f"\n{spec.describe()} ->\n",
+      np.asarray(api.quantize(xs, masks, spec)).round(3))
+
+# 5. the full pipeline behind four verbs (tiny config; see
+#    examples/train_mlp_adc.py for the paper-scale driver)
+from repro.data import tabular                              # noqa: E402
+data = tabular.make_dataset("seeds")
+front = api.search(api.AdcSpec(bits=2), data, (7, 4, 3), pop_size=6,
+                   generations=1, train_steps=30)
+bank = api.deploy(front)
+served = bank.accuracies(data["x_test"], data["y_test"])
+print(f"\nsearched {len(front)} Pareto designs; served accuracies "
+      f"{served.round(3)} == search fitness "
+      f"{np.array_equal(np.sort(served), np.sort(front.accuracies))}")

@@ -10,12 +10,18 @@ deployment (DESIGN.md §8):
   accuracies reproduce the search-time fitness bit-for-bit.
 
   PYTHONPATH=src python examples/train_mlp_adc.py --dataset seeds --bits 3
+
+Per-channel analog ranges (heterogeneous sensors) thread end-to-end:
+
+  PYTHONPATH=src python examples/train_mlp_adc.py --dataset seeds \
+      --vmin 0,0,0,0,0,0,0 --vmax 1,1,1,2,1,1,1
 """
 import argparse
 
 import numpy as np
 
 from repro.core import area, deploy, search
+from repro.core.spec import AdcSpec, parse_range
 from repro.data import tabular
 
 
@@ -24,6 +30,10 @@ def main():
     ap.add_argument("--dataset", default="seeds",
                     choices=sorted(tabular.SPECS))
     ap.add_argument("--bits", type=int, default=3)
+    ap.add_argument("--vmin", default="0.0",
+                    help="analog range min: scalar or comma-separated "
+                         "per-channel list")
+    ap.add_argument("--vmax", default="1.0")
     ap.add_argument("--pop", type=int, default=24)
     ap.add_argument("--generations", type=int, default=10)
     ap.add_argument("--train-steps", type=int, default=300)
@@ -35,10 +45,13 @@ def main():
     spec = tabular.SPECS[args.dataset]
     data = tabular.make_dataset(args.dataset)
     sizes = (spec.features, spec.hidden, spec.classes)
-    cfg = search.SearchConfig(bits=args.bits, pop_size=args.pop,
-                              generations=args.generations,
-                              train_steps=args.train_steps,
-                              model=args.model)
+    adc_spec = AdcSpec(bits=args.bits, vmin=parse_range(args.vmin),
+                       vmax=parse_range(args.vmax))
+    adc_spec.validate_channels(spec.features)
+    cfg = search.SearchConfig.for_spec(adc_spec, pop_size=args.pop,
+                                       generations=args.generations,
+                                       train_steps=args.train_steps,
+                                       model=args.model)
 
     base = search.full_adc_baseline(data, sizes, cfg)
     print(f"dataset={args.dataset} features={spec.features} "

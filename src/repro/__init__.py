@@ -1,4 +1,6 @@
 """flexadc — in-training Binary-Search-ADC optimization (ASPDAC'25) as a
-production multi-pod JAX framework. See DESIGN.md for the system map."""
+production multi-pod JAX framework. See DESIGN.md for the system map;
+``repro.api`` is the stable pipeline facade (AdcSpec -> search -> deploy
+-> serve)."""
 
-__version__ = "1.0.0"
+__version__ = "1.1.0"

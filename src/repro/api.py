@@ -1,0 +1,187 @@
+"""repro.api — the paper's pipeline as one facade (DESIGN.md §9).
+
+The whole flow — pruned binary-search-ADC co-search, QAT, Pareto export,
+fused multi-design serving — behind four verbs and one spec object::
+
+    from repro import api
+
+    spec = api.AdcSpec(bits=3, vmin=(0.0, -1.0, 0.2), vmax=(1.0, 1.0, 4.7))
+    front = api.search(spec, data, sizes=(3, 4, 2), pop_size=16,
+                       generations=8)                # NSGA-II x vmapped QAT
+    bank = api.deploy(front)                          # frozen classifiers
+    logits = api.serve(bank, x)                       # fused bank kernel
+    api.save_front("/tmp/front", bank)
+    bank = api.load_front("/tmp/front")               # bit-for-bit restore
+
+Everything here is a thin composition of the subsystem modules
+(core/search, core/deploy, kernels/dispatch) — no logic of its own — so
+the bit-for-bit search -> export -> load -> serve parity contract
+(DESIGN.md §8) holds through the facade by construction:
+``bank.accuracies(x_test, y_test)`` equals the search-time fitness
+exactly, for scalar and per-channel analog ranges alike.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Sequence, Tuple, Union
+
+import numpy as np
+
+from repro.core import deploy as _deploy
+from repro.core import search as _search
+from repro.core.deploy import DeployedClassifier
+from repro.core.search import SearchConfig
+from repro.core.spec import AdcSpec
+
+__all__ = [
+    "AdcSpec",
+    "Bank",
+    "DeployedClassifier",
+    "Front",
+    "SearchConfig",
+    "deploy",
+    "load_front",
+    "quantize",
+    "save_front",
+    "search",
+    "serve",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class Front:
+    """A searched Pareto front, still in genome form: everything
+    ``deploy`` needs to freeze it into servable artifacts without
+    re-running QAT (the trained parameter stacks ride along)."""
+    spec: AdcSpec
+    config: SearchConfig
+    sizes: Tuple[int, ...]
+    genomes: np.ndarray            # (K, G) uint8 Pareto genomes
+    fitness: np.ndarray            # (K, 2) [1-acc, normalized area]
+    trained: tuple                 # train_pareto_front's (accs, params,
+                                   # masks, dps) — the export short-circuit
+
+    def __len__(self) -> int:
+        return len(self.genomes)
+
+    @property
+    def accuracies(self) -> np.ndarray:
+        return 1.0 - self.fitness[:, 0]
+
+    @property
+    def areas(self) -> np.ndarray:
+        """Normalized ADC areas (vs the full flash bank)."""
+        return self.fitness[:, 1]
+
+
+@dataclasses.dataclass(frozen=True)
+class Bank:
+    """A deployed front: frozen classifiers + the fused serving entry."""
+    designs: Tuple[DeployedClassifier, ...]
+
+    def __len__(self) -> int:
+        return len(self.designs)
+
+    @property
+    def spec(self) -> AdcSpec:
+        return self.designs[0].spec
+
+    def logits(self, x, *, mesh=None,
+               interpret: Optional[bool] = None) -> np.ndarray:
+        """(M, C) samples -> (D, M, O) logits through the fused
+        multi-design bank kernel (optionally design-sharded over a mesh)."""
+        return _deploy.serve_bank(self.designs, x, mesh=mesh,
+                                  interpret=interpret)
+
+    def predict(self, x, **kw) -> np.ndarray:
+        return np.argmax(self.logits(x, **kw), axis=-1)
+
+    def accuracies(self, x, y, *, mesh=None,
+                   interpret: Optional[bool] = None) -> np.ndarray:
+        """(D,) served accuracies — bit-for-bit the exported (== search
+        fitness) accuracies (the DESIGN.md §8 contract)."""
+        return _deploy.served_accuracies(self.designs, x, y, mesh=mesh,
+                                         interpret=interpret)
+
+
+def search(spec: AdcSpec, data: Dict, sizes: Optional[Sequence[int]] = None,
+           *, model: str = "mlp", pop_size: int = 32, generations: int = 16,
+           train_steps: int = 300, engine: str = "batched", seed: int = 0,
+           weight_bits: int = 8, hidden: int = 4, mesh=None, log=None,
+           ckpt=None, resume: bool = False, **cfg_kw) -> Front:
+    """Run the paper's in-training ADC optimization around ``spec``.
+
+    data: dict with x_train/y_train/x_test/y_test (repro.data.tabular
+    layout). sizes: (features, hidden, classes); inferred from the data
+    (with ``hidden`` hidden units) when omitted. Remaining kwargs mirror
+    core/search.SearchConfig; ``engine`` picks batched | sharded |
+    reference, ``ckpt``/``resume`` thread through to the checkpointable
+    engine. Returns a ``Front`` carrying the Pareto genomes, their
+    fitness, and the trained parameter stacks ``deploy`` reuses."""
+    if sizes is None:
+        features = int(np.asarray(data["x_train"]).shape[-1])
+        classes = int(np.asarray(data["y_train"]).max()) + 1
+        sizes = (features, hidden, classes)
+    sizes = tuple(int(s) for s in sizes)
+    spec.validate_channels(sizes[0])
+    cfg = SearchConfig.for_spec(spec, model=model, pop_size=pop_size,
+                                generations=generations,
+                                train_steps=train_steps, engine=engine,
+                                seed=seed, weight_bits=weight_bits,
+                                **cfg_kw)
+    pg, pf, _, trained = _search.run_search(data, sizes, cfg, log=log,
+                                            ckpt=ckpt, resume=resume,
+                                            mesh=mesh, return_trained=True)
+    return Front(spec=spec, config=cfg, sizes=sizes,
+                 genomes=np.asarray(pg, np.uint8),
+                 fitness=np.asarray(pf, np.float64), trained=trained)
+
+
+def deploy(front: Front, data: Optional[Dict] = None) -> Bank:
+    """Freeze a searched ``Front`` into a servable ``Bank``: baked value
+    tables (per-channel ranges included), po2-quantized weights, exact
+    transistor-count area, export accuracy == search fitness bit-for-bit.
+    The front's trained stacks short-circuit the QAT re-train; ``data`` is
+    only needed for a ``Front`` reconstructed without them."""
+    if front.trained is None and data is None:
+        raise ValueError("this Front carries no trained stacks; pass the "
+                         "training data so deploy() can re-derive them")
+    designs = _deploy.export_front(front.genomes, data, front.sizes,
+                                   front.config, trained=front.trained)
+    return Bank(designs=tuple(designs))
+
+
+def serve(bank: Union[Bank, Sequence[DeployedClassifier]], x, *, mesh=None,
+          interpret: Optional[bool] = None) -> np.ndarray:
+    """One shared (M, C) sample batch through the whole deployed bank:
+    (D, M, O) logits via the fused multi-design kernel (the dispatch
+    registry routes oracle/kernel/sharded)."""
+    designs = bank.designs if isinstance(bank, Bank) else tuple(bank)
+    return _deploy.serve_bank(designs, x, mesh=mesh, interpret=interpret)
+
+
+def save_front(directory, bank: Union[Bank, Sequence[DeployedClassifier]],
+               extra_meta: Optional[Dict] = None) -> None:
+    """Persist a deployed bank (atomic commit, one .npy per leaf; the
+    AdcSpec — per-channel ranges included — rides in the JSON meta)."""
+    designs = bank.designs if isinstance(bank, Bank) else tuple(bank)
+    _deploy.save_front(directory, list(designs), extra_meta=extra_meta)
+
+
+def load_front(directory) -> Bank:
+    """Inverse of ``save_front`` — the reloaded bank serves bit-for-bit
+    identically to the one exported."""
+    return Bank(designs=tuple(_deploy.load_front(directory)))
+
+
+def quantize(x, mask, spec: AdcSpec, *, interpret: Optional[bool] = None):
+    """Quantize (M, C) samples through per-channel pruned ADCs described
+    by ``spec`` — the raw analog-frontend op, routed through the kernel
+    dispatch registry (mask (C, 2^bits), or (P, C, 2^bits) for a whole
+    population at once)."""
+    from repro.kernels import ops
+    mask = np.asarray(mask) if not hasattr(mask, "shape") else mask
+    if mask.ndim == 3:
+        return ops.adc_quantize_population(x, mask, spec=spec,
+                                           interpret=interpret)
+    return ops.adc_quantize(x, mask, spec=spec, interpret=interpret)

@@ -1,3 +1,5 @@
 """The paper's primary contribution: binary-search ADC design + in-training
-level-pruning optimization (NSGA-II x QAT). See DESIGN.md §1-2."""
-from repro.core import adc, area, nsga2, qat, search  # noqa: F401
+level-pruning optimization (NSGA-II x QAT). See DESIGN.md §1-2; the
+``spec.AdcSpec`` design-point object and the ``repro.api`` facade are
+DESIGN.md §9."""
+from repro.core import adc, area, nsga2, qat, search, spec  # noqa: F401

@@ -28,25 +28,75 @@ from typing import Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 
-def level_values(bits: int, vmin: float = 0.0, vmax: float = 1.0) -> jnp.ndarray:
+def _is_scalar_range(v) -> bool:
+    return not (isinstance(v, (list, tuple))
+                or (hasattr(v, "ndim") and getattr(v, "ndim", 0) > 0))
+
+
+def range_rows(bits: int, vmin, vmax, channels: int):
+    """Canonical per-channel code-math constants: f32 numpy rows
+    ``(vmin_row (1, C), scale_row (1, C))``, ``scale = 2^bits /
+    (vmax - vmin)`` computed in f64 then cast. Scalar endpoints broadcast
+    across channels. Every code-deriving path (this module, the jnp
+    oracles in kernels/ref.py, the Pallas kernels) uses these exact
+    constants with ``clip(floor((x - vmin_row) * scale_row), 0, 2^N-1)``,
+    so kernel-vs-oracle parity is bitwise even for per-channel ranges
+    (spec.AdcSpec.range_rows is the public entry)."""
+    n = 2 ** bits
+    lo = np.broadcast_to(np.asarray(vmin, np.float64), (channels,))
+    hi = np.broadcast_to(np.asarray(vmax, np.float64), (channels,))
+    if np.any(hi <= lo):
+        raise ValueError(f"vmax must exceed vmin elementwise "
+                         f"(vmin={vmin}, vmax={vmax})")
+    scale = n / (hi - lo)
+    return (lo.astype(np.float32)[None, :],
+            scale.astype(np.float32)[None, :])
+
+
+def level_values(bits: int, vmin=0.0, vmax=1.0) -> jnp.ndarray:
     """Representative (reconstruction) value of each of the 2^bits levels.
 
     Level k covers the interval [k, k+1) / 2^bits of the range; its
     representative is the interval midpoint (what the digital classifier
-    consumes after the ADC).
+    consumes after the ADC). Scalar ``vmin``/``vmax`` give the shared
+    (2^bits,) ladder; per-channel ranges (length-C sequences/arrays,
+    spec.AdcSpec) give a (C, 2^bits) ladder — one analog span per sensor.
     """
     n = 2 ** bits
-    return vmin + (jnp.arange(n, dtype=jnp.float32) + 0.5) * (vmax - vmin) / n
+    mid = jnp.arange(n, dtype=jnp.float32) + 0.5
+    if _is_scalar_range(vmin) and _is_scalar_range(vmax):
+        return vmin + mid * (vmax - vmin) / n
+    lo = jnp.asarray(np.asarray(vmin, np.float32).reshape(-1))
+    hi = jnp.asarray(np.asarray(vmax, np.float32).reshape(-1))
+    lo, hi = jnp.broadcast_arrays(lo, hi)
+    return lo[:, None] + mid[None, :] * (hi - lo)[:, None] / n
 
 
-def encode(x: jnp.ndarray, bits: int, vmin: float = 0.0, vmax: float = 1.0
-           ) -> jnp.ndarray:
-    """Full (unpruned) ADC transfer function: analog -> integer code."""
+def encode(x: jnp.ndarray, bits: int, vmin=0.0, vmax=1.0) -> jnp.ndarray:
+    """Full (unpruned) ADC transfer function: analog -> integer code.
+    Per-channel ranges apply along the trailing (channel) axis of x."""
     n = 2 ** bits
-    k = jnp.floor((x - vmin) / (vmax - vmin) * n).astype(jnp.int32)
+    if _is_scalar_range(vmin) and _is_scalar_range(vmax):
+        scale = float(n) / (float(vmax) - float(vmin))
+        k = jnp.floor((x - vmin) * scale).astype(jnp.int32)
+    else:
+        lo, scale = range_rows(bits, vmin, vmax, x.shape[-1])
+        k = jnp.floor((x - lo[0]) * scale[0]).astype(jnp.int32)
     return jnp.clip(k, 0, n - 1)
+
+
+def _gather_values(values: jnp.ndarray, level: jnp.ndarray) -> jnp.ndarray:
+    """values (2^N,) shared or (C, 2^N) per-channel; level (..., C) int32
+    codes -> reconstruction values of level's shape."""
+    if values.ndim == 1:
+        return values[level]
+    c = values.shape[0]
+    flat = level.reshape(-1, c)
+    out = jnp.take_along_axis(values.T, flat, axis=0)     # (M, C)
+    return out.reshape(level.shape)
 
 
 def tree_lut(mask: jnp.ndarray) -> jnp.ndarray:
@@ -95,30 +145,29 @@ def adc_quantize(x: jnp.ndarray,
                  mask: Optional[jnp.ndarray] = None,
                  *,
                  bits: int,
-                 vmin: float = 0.0,
-                 vmax: float = 1.0,
+                 vmin=0.0,
+                 vmax=1.0,
                  mode: str = "tree",
                  ste: bool = True) -> jnp.ndarray:
     """Quantize ``x`` through a (possibly pruned) binary-search ADC.
 
     x: any shape. mask: None (full ADC) | (2^bits,) shared | (C, 2^bits)
     per-channel, where C == x.shape[-1] | (P, C, 2^bits) population batch,
-    where x is (P, ..., C). Returns same shape/dtype as x.
+    where x is (P, ..., C). ``vmin``/``vmax`` may be per-channel (length-C)
+    — heterogeneous sensor spans (spec.AdcSpec). Returns same shape/dtype
+    as x.
     """
-    n = 2 ** bits
     values = level_values(bits, vmin, vmax).astype(jnp.float32)
     xf = x.astype(jnp.float32)
     code = encode(xf, bits, vmin, vmax)
     if mask is None:
         level = code
-        xq = values[level]
     else:
         mask = mask.astype(jnp.int32)
         lut_fn = tree_lut if mode == "tree" else _nearest_lut
         if mask.ndim == 1:
             lut = lut_fn(mask)                      # (n,)
             level = lut[code]
-            xq = values[level]
         elif mask.ndim == 2:
             if mask.shape[0] != x.shape[-1]:
                 raise ValueError(
@@ -126,7 +175,6 @@ def adc_quantize(x: jnp.ndarray,
             lut = lut_fn(mask)                      # (C, n)
             flat = code.reshape(-1, x.shape[-1])    # (M, C)
             level = jnp.take_along_axis(lut, flat.T, axis=1).T.reshape(code.shape)
-            xq = values[level]
         elif mask.ndim == 3:
             # population batch: mask (P, C, n), x (P, ..., C)
             p, c = mask.shape[0], mask.shape[1]
@@ -138,22 +186,23 @@ def adc_quantize(x: jnp.ndarray,
             flat = code.reshape(p, -1, c)           # (P, M, C)
             level = jnp.take_along_axis(
                 jnp.swapaxes(lut, 1, 2), flat, axis=1).reshape(code.shape)
-            xq = values[level]
         else:
             raise ValueError(f"mask ndim must be 1, 2 or 3, got {mask.ndim}")
+    xq = _gather_values(values, level)
     xq = xq.astype(x.dtype)
     if ste:
         xq = x + jax.lax.stop_gradient(xq - x)
     return xq
 
 
-@functools.partial(jax.jit, static_argnames=("bits", "mode"))
+@functools.partial(jax.jit, static_argnames=("bits", "mode", "vmin", "vmax"))
 def adc_codes(x: jnp.ndarray, mask: jnp.ndarray, *, bits: int,
-              mode: str = "tree") -> jnp.ndarray:
+              mode: str = "tree", vmin=0.0, vmax=1.0) -> jnp.ndarray:
     """Integer kept-level codes (circuit digital output) — used by tests and
     the Pallas kernel oracle. Accepts the same mask ranks as
-    ``adc_quantize`` ((n,), (C, n) or population-batched (P, C, n))."""
-    code = encode(x, bits)
+    ``adc_quantize`` ((n,), (C, n) or population-batched (P, C, n)).
+    ``vmin``/``vmax`` must be hashable (float or per-channel tuple)."""
+    code = encode(x, bits, vmin, vmax)
     lut_fn = tree_lut if mode == "tree" else _nearest_lut
     lut = lut_fn(mask.astype(jnp.int32))
     if mask.ndim == 1:

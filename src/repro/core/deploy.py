@@ -35,8 +35,9 @@ import numpy as np
 
 from repro.checkpoint.manager import CheckpointManager, pack_json, unpack_json
 from repro.core import area, qat
+from repro.core.spec import AdcSpec, Range
 from repro.core.search import SearchConfig, train_pareto_front
-from repro.kernels import ops, ref
+from repro.kernels import ops
 
 FORMAT_VERSION = 1
 
@@ -50,8 +51,8 @@ class DeployedClassifier:
     kind: str                      # 'mlp' | 'svm'
     bits: int
     mode: str                      # pruned-ADC semantics the table was baked with
-    vmin: float
-    vmax: float
+    vmin: Range                    # analog range: float or per-channel tuple
+    vmax: Range
     dp: float                      # genome decimal-point position
     mask: np.ndarray               # (C, 2^N) int32 — provenance, not used to serve
     table: np.ndarray              # (C, 2^N) float32 baked value table
@@ -59,14 +60,19 @@ class DeployedClassifier:
     area_tc: int                   # exact ADC transistor count (area model)
     accuracy: float                # export-time test accuracy (== search fitness)
 
+    @property
+    def spec(self) -> AdcSpec:
+        """The ADC design point this classifier was exported against."""
+        return AdcSpec(bits=self.bits, mode=self.mode, vmin=self.vmin,
+                       vmax=self.vmax)
+
     def logits(self, x, interpret: Optional[bool] = None) -> np.ndarray:
         """(M, C) samples -> (M, O) logits, served as a size-1 bank through
-        the fused kernel envelope."""
+        the fused kernel registry."""
         out = ops.classifier_bank(
             np.asarray(x, np.float32), self.table[None],
             tuple(w[None] for w in self.weights), kind=self.kind,
-            bits=self.bits, vmin=self.vmin, vmax=self.vmax,
-            interpret=interpret)
+            spec=self.spec, interpret=interpret)
         return np.asarray(out)[0]
 
     def predict(self, x, interpret: Optional[bool] = None) -> np.ndarray:
@@ -99,6 +105,7 @@ def export_front(genomes: np.ndarray, data: Dict, sizes: Sequence[int],
     if len(accs) != len(genomes):
         raise ValueError(f"trained tuple covers {len(accs)} individuals, "
                          f"got {len(genomes)} genomes")
+    spec = cfg.adc_spec.validate_channels(sizes[0])
     designs = []
     for k in range(len(accs)):
         dp = float(dps[k])
@@ -115,10 +122,9 @@ def export_front(genomes: np.ndarray, data: Dict, sizes: Sequence[int],
                        _fixed(b2, dp, cfg.weight_bits))
         mask = np.asarray(masks[k], np.int32)
         designs.append(DeployedClassifier(
-            kind=cfg.model, bits=cfg.bits, mode=cfg.mode, vmin=0.0, vmax=1.0,
-            dp=dp, mask=mask,
-            table=np.asarray(ref.value_table(mask, cfg.bits, 0.0, 1.0,
-                                             cfg.mode), np.float32),
+            kind=cfg.model, bits=spec.bits, mode=spec.mode,
+            vmin=spec.vmin, vmax=spec.vmax, dp=dp, mask=mask,
+            table=np.asarray(spec.value_table(mask), np.float32),
             weights=weights,
             area_tc=area.system_tc(mask, cfg.design),
             accuracy=float(accs[k])))
@@ -143,12 +149,14 @@ def save_front(directory, designs: Sequence[DeployedClassifier],
     if not designs:
         raise ValueError("refusing to save an empty front")
     kinds = {d.kind for d in designs}
-    bitss = {d.bits for d in designs}
-    if len(kinds) != 1 or len(bitss) != 1:
-        raise ValueError(f"mixed fronts unsupported: kinds={kinds} bits={bitss}")
+    specs = {d.spec for d in designs}
+    if len(kinds) != 1 or len(specs) != 1:
+        raise ValueError(f"mixed fronts unsupported: kinds={kinds} "
+                         f"specs={specs}")
+    # spec fields serialize through AdcSpec.to_meta (per-channel tuples
+    # become JSON lists; load_front restores the canonical tuples)
     meta = {"format": FORMAT_VERSION, "kind": designs[0].kind,
-            "bits": designs[0].bits, "mode": designs[0].mode,
-            "vmin": designs[0].vmin, "vmax": designs[0].vmax,
+            **designs[0].spec.to_meta(),
             "num_designs": len(designs), **(extra_meta or {})}
     tree = {"meta": pack_json(meta)}
     for i, d in enumerate(designs):
@@ -175,12 +183,13 @@ def load_front(directory) -> List[DeployedClassifier]:
     meta = unpack_json(flat["meta"])
     if meta["format"] != FORMAT_VERSION:
         raise ValueError(f"unknown front format {meta['format']}")
+    spec = AdcSpec.from_meta(meta)
     designs = []
     for i in range(meta["num_designs"]):
         p = f"design_{i:03d}/"
         designs.append(DeployedClassifier(
-            kind=meta["kind"], bits=meta["bits"], mode=meta["mode"],
-            vmin=meta["vmin"], vmax=meta["vmax"],
+            kind=meta["kind"], bits=spec.bits, mode=spec.mode,
+            vmin=spec.vmin, vmax=spec.vmax,
             dp=float(flat[p + "dp"]), mask=flat[p + "mask"],
             table=flat[p + "table"],
             weights=tuple(flat[p + n] for n in _WEIGHT_LEAVES[meta["kind"]]),
@@ -218,8 +227,7 @@ def make_bank_fn(designs: Sequence[DeployedClassifier], *, mesh=None,
     tables = jnp.asarray(tables)
     weights = tuple(jnp.asarray(w) for w in weights)
     d0 = designs[0]
-    kw = dict(kind=d0.kind, bits=d0.bits, vmin=d0.vmin, vmax=d0.vmax,
-              interpret=interpret)
+    kw = dict(kind=d0.kind, spec=d0.spec, interpret=interpret)
     if mesh is not None:
         return jax.jit(lambda xb: ops.classifier_bank_sharded(
             xb, tables, weights, mesh=mesh, **kw))
@@ -233,8 +241,7 @@ def serve_bank(designs: Sequence[DeployedClassifier], x, *,
     the design axis shards D/device (ops.classifier_bank_sharded)."""
     tables, weights = bank_arrays(designs)
     d0 = designs[0]
-    kw = dict(kind=d0.kind, bits=d0.bits, vmin=d0.vmin, vmax=d0.vmax,
-              interpret=interpret)
+    kw = dict(kind=d0.kind, spec=d0.spec, interpret=interpret)
     x = np.asarray(x, np.float32)
     if mesh is not None:
         out = ops.classifier_bank_sharded(x, tables, weights, mesh=mesh, **kw)

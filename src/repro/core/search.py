@@ -40,6 +40,7 @@ from jax.sharding import PartitionSpec
 
 from repro import compat
 from repro.core import adc, area, nsga2
+from repro.core.spec import AdcSpec, Range, normalize_range
 from repro.distributed import sharding as sharding_lib
 from repro.kernels import ops
 from repro.models import mlp as mlp_lib
@@ -61,6 +62,28 @@ class SearchConfig:
     design: str = "ours"          # area model used in the fitness
     model: str = "mlp"            # 'mlp' | 'svm' (paper targets both)
     engine: str = "batched"       # 'batched' | 'sharded' | 'reference'
+    # analog range — scalar or per-channel tuple (heterogeneous sensors);
+    # normalized to hashable form so the config stays a valid static jit arg
+    vmin: Range = 0.0
+    vmax: Range = 1.0
+
+    def __post_init__(self):
+        object.__setattr__(self, "vmin", normalize_range(self.vmin))
+        object.__setattr__(self, "vmax", normalize_range(self.vmax))
+
+    @property
+    def adc_spec(self) -> AdcSpec:
+        """The ADC design point this search optimizes around — the single
+        object every downstream layer (value tables, kernels, deployment
+        artifacts) consumes (core/spec.py)."""
+        return AdcSpec(bits=self.bits, mode=self.mode, vmin=self.vmin,
+                       vmax=self.vmax)
+
+    @classmethod
+    def for_spec(cls, spec: AdcSpec, **kw) -> "SearchConfig":
+        """Build a config around an AdcSpec (the repro.api entry path)."""
+        return cls(bits=spec.bits, mode=spec.mode, vmin=spec.vmin,
+                   vmax=spec.vmax, **kw)
 
 
 def genome_len(channels: int, bits: int) -> int:
@@ -158,8 +181,10 @@ def _train_eval_one(genome, data, sizes, cfg: SearchConfig):
     # the x + (xq - x) round-trip keeps the values bitwise-identical to the
     # batched engine's value-table gather (parity tests rely on this).
     xq_tr = adc.adc_quantize(data["x_train"], mask, bits=cfg.bits,
+                             vmin=cfg.vmin, vmax=cfg.vmax,
                              mode=cfg.mode, ste=False)
     xq_te = adc.adc_quantize(data["x_test"], mask, bits=cfg.bits,
+                             vmin=cfg.vmin, vmax=cfg.vmax,
                              mode=cfg.mode, ste=False)
     params, opt = _init_model(sizes, cfg)
     return _train_from_quantized(xq_tr, xq_te, data["y_train"], data["y_test"],
@@ -182,10 +207,9 @@ def _train_and_score(genomes: jnp.ndarray, params0, opt0, data: Dict,
     P gathers."""
     masks, dps = decode_population(genomes, sizes[0], cfg.bits,
                                    cfg.min_levels)
-    xq_tr = ops.adc_quantize_population(data["x_train"], masks,
-                                        bits=cfg.bits, mode=cfg.mode)
-    xq_te = ops.adc_quantize_population(data["x_test"], masks,
-                                        bits=cfg.bits, mode=cfg.mode)
+    spec = cfg.adc_spec
+    xq_tr = ops.adc_quantize_population(data["x_train"], masks, spec=spec)
+    xq_te = ops.adc_quantize_population(data["x_test"], masks, spec=spec)
     fn = lambda xtr, xte, dp, p, o: _train_from_quantized(
         xtr, xte, data["y_train"], data["y_test"], dp, p, o, sizes, cfg,
         return_params)
@@ -425,6 +449,7 @@ def run_search(data: Dict, sizes, cfg: SearchConfig,
     a killed-and-resumed search matches an uninterrupted one
     generation-for-generation. ``mesh`` feeds the 'sharded' engine."""
     C = sizes[0]
+    cfg.adc_spec.validate_channels(C)   # per-channel ranges must match data
     G = genome_len(C, cfg.bits)
     state = None
     if ckpt is not None and resume:

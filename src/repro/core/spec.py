@@ -1,0 +1,220 @@
+"""AdcSpec — the one object that describes a binary-search ADC design
+point (DESIGN.md §9).
+
+Before this existed the ADC description travelled as five loose kwargs
+(``bits, vmin, vmax, mode, interpret``) repeated across every signature in
+core/adc, kernels/ops, core/search, core/deploy and both launch CLIs;
+adding one ADC property meant touching a dozen call sites. ``AdcSpec``
+freezes the description once and every layer — value tables, Pallas
+kernels, the search engines, deployment artifacts, the serving drivers —
+consumes the same object.
+
+Beyond de-duplication it carries one genuinely new capability the flat
+``vmin: float, vmax: float`` API could not express: **per-channel analog
+ranges**. Heterogeneous sensor frontends (the ADC-front-end-costs
+follow-up, arXiv:2411.08674, and the feature-to-classifier co-design
+work, arXiv:2508.19637) feed each classifier input from a different
+transducer with its own span; ``vmin``/``vmax`` therefore accept a scalar
+*or* a per-channel sequence. Ranges normalize to hashable python floats /
+tuples, so a spec is simultaneously
+
+* a valid **static jit argument** (hashable, ``__eq__`` by value) — the
+  kernels keep ``vmin``/``vmax`` static and bake the per-channel
+  ``(vmin_row, scale_row)`` operands at trace time in f64, preserving the
+  bit-for-bit parity contract of DESIGN.md §8; and
+* a registered **pytree** (``tree_flatten`` yields the range leaves,
+  ``bits``/``mode`` ride as aux data), so specs flow through
+  ``jax.tree_util`` machinery and checkpoint packing unmodified.
+
+``to_meta``/``from_meta`` give the JSON form deployment artifacts persist
+(core/deploy.save_front), closing the spec → table → kernel → serialized
+bank loop.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple, Union
+
+import jax
+import numpy as np
+
+Range = Union[float, Tuple[float, ...]]
+
+_MODES = ("tree", "nearest")
+
+
+def normalize_range(v) -> Range:
+    """Coerce a range endpoint to its canonical hashable form: a python
+    float (shared across channels) or a tuple of python floats (one per
+    channel). Accepts scalars, lists/tuples and numpy/jax arrays. A
+    length-1 sequence stays a tuple — a 1-channel per-channel spec keeps
+    its channel pinning (``AdcSpec.validate_channels``)."""
+    if isinstance(v, (list, tuple)) or (
+            hasattr(v, "ndim") and getattr(v, "ndim", 0) > 0):
+        return tuple(float(x) for x in np.asarray(v).reshape(-1))
+    return float(v)
+
+
+@dataclasses.dataclass(frozen=True)
+class AdcSpec:
+    """Frozen description of one (possibly per-channel) binary-search ADC.
+
+    bits: resolution (2^bits levels per channel).
+    mode: pruned-tree semantics — 'tree' (circuit-faithful) | 'nearest'.
+    vmin/vmax: analog range, scalar or per-channel tuple (len == C).
+    """
+    bits: int
+    mode: str = "tree"
+    vmin: Range = 0.0
+    vmax: Range = 1.0
+
+    def __post_init__(self):
+        if self.bits < 1:
+            raise ValueError(f"ADC needs >= 1 bit, got {self.bits}")
+        if self.mode not in _MODES:
+            raise ValueError(f"mode must be one of {_MODES}, "
+                             f"got {self.mode!r}")
+        lo = normalize_range(self.vmin)
+        hi = normalize_range(self.vmax)
+        object.__setattr__(self, "vmin", lo)
+        object.__setattr__(self, "vmax", hi)
+        lo_t, hi_t = isinstance(lo, tuple), isinstance(hi, tuple)
+        if lo_t and hi_t and len(lo) != len(hi):
+            raise ValueError(f"per-channel vmin has {len(lo)} channels but "
+                             f"vmax has {len(hi)}")
+        lo_a = np.asarray(lo, np.float64)
+        hi_a = np.asarray(hi, np.float64)
+        if np.any(hi_a <= lo_a):
+            raise ValueError(f"vmax must exceed vmin elementwise: "
+                             f"vmin={lo} vmax={hi}")
+
+    # ------------------------------------------------------------ geometry
+    @property
+    def levels(self) -> int:
+        """Quantization levels per channel (2^bits)."""
+        return 2 ** self.bits
+
+    @property
+    def per_channel(self) -> bool:
+        """True when either range endpoint varies across channels."""
+        return isinstance(self.vmin, tuple) or isinstance(self.vmax, tuple)
+
+    @property
+    def channels(self) -> Optional[int]:
+        """Channel count pinned by a per-channel range (None if scalar —
+        the spec then applies to any channel count)."""
+        for v in (self.vmin, self.vmax):
+            if isinstance(v, tuple):
+                return len(v)
+        return None
+
+    def validate_channels(self, channels: int) -> "AdcSpec":
+        """Raise unless this spec can drive ``channels`` sensor channels."""
+        pinned = self.channels
+        if pinned is not None and pinned != channels:
+            raise ValueError(
+                f"AdcSpec pins {pinned} per-channel range(s) but the data "
+                f"has {channels} channels")
+        return self
+
+    # ------------------------------------------------------------- tables
+    def range_rows(self, channels: int):
+        """The canonical per-channel code math operands: f32 numpy rows
+        ``(vmin_row (1, C), scale_row (1, C))`` with
+        ``scale = 2^bits / (vmax - vmin)`` computed in f64 then cast —
+        every consumer (jnp oracle, Pallas kernel, modelling API) derives
+        codes as ``clip(floor((x - vmin_row) * scale_row), 0, 2^bits - 1)``
+        from these exact constants, which is what makes kernel-vs-oracle
+        parity bitwise rather than approximate (see kernels/ref.py)."""
+        from repro.core import adc
+        self.validate_channels(channels)
+        return adc.range_rows(self.bits, self.vmin, self.vmax, channels)
+
+    def level_values(self, channels: Optional[int] = None):
+        """Representative (reconstruction) value of every level:
+        (2^bits,) for a scalar range, (C, 2^bits) per-channel."""
+        from repro.core import adc
+        if self.per_channel:
+            self.validate_channels(channels if channels is not None
+                                   else self.channels)
+        return adc.level_values(self.bits, self.vmin, self.vmax)
+
+    def value_table(self, mask):
+        """Bake a pruned mask ((C, 2^bits) or population-batched
+        (P, C, 2^bits)) into the code->value table the kernels consume —
+        per-channel ranges included (kernels/ref.value_table)."""
+        from repro.kernels import ref
+        if len(mask.shape) >= 2:           # 1-D masks are channel-shared
+            self.validate_channels(mask.shape[-2])
+        return ref.value_table(mask, self.bits, self.vmin, self.vmax,
+                               self.mode)
+
+    # -------------------------------------------------------- (de)serialize
+    def replace(self, **kw) -> "AdcSpec":
+        return dataclasses.replace(self, **kw)
+
+    def to_meta(self) -> dict:
+        """JSON-safe dict (tuples become lists; ``from_meta`` restores)."""
+        v = lambda r: list(r) if isinstance(r, tuple) else r
+        return {"bits": self.bits, "mode": self.mode,
+                "vmin": v(self.vmin), "vmax": v(self.vmax)}
+
+    @classmethod
+    def from_meta(cls, meta: dict) -> "AdcSpec":
+        return cls(bits=int(meta["bits"]), mode=str(meta["mode"]),
+                   vmin=normalize_range(meta["vmin"]),
+                   vmax=normalize_range(meta["vmax"]))
+
+    def describe(self) -> str:
+        rng = (f"{self.channels}-channel ranges" if self.per_channel
+               else f"[{self.vmin}, {self.vmax}]")
+        return f"{self.bits}-bit {self.mode} ADC, {rng}"
+
+
+def as_spec(spec: Optional[AdcSpec] = None, *, bits: Optional[int] = None,
+            vmin: Range = 0.0, vmax: Range = 1.0, mode: str = "tree"
+            ) -> AdcSpec:
+    """Resolve the spec-or-loose-kwargs calling convention the ops shims
+    keep alive: pass ``spec`` alone, or the legacy ``bits/vmin/vmax/mode``
+    kwargs (mutually exclusive — a non-default loose value alongside
+    ``spec`` would otherwise be silently ignored)."""
+    if spec is not None:
+        if (bits is not None or mode != "tree"
+                or normalize_range(vmin) != 0.0
+                or normalize_range(vmax) != 1.0):
+            raise TypeError("pass either spec= or the loose "
+                            "bits/vmin/vmax/mode kwargs, not both")
+        return spec
+    if bits is None:
+        raise TypeError("an AdcSpec (or at least bits=) is required")
+    return AdcSpec(bits=bits, mode=mode, vmin=normalize_range(vmin),
+                   vmax=normalize_range(vmax))
+
+
+def parse_range(s) -> Range:
+    """The CLI form of a range endpoint (--vmin/--vmax): a scalar
+    ('0.0') or a comma-separated per-channel list ('0.0,-1.0,0.2' —
+    heterogeneous sensor spans)."""
+    parts = [float(p) for p in str(s).split(",")]
+    return parts[0] if len(parts) == 1 else tuple(parts)
+
+
+# Pytree registration: the range endpoints are the leaves (a per-channel
+# tuple flattens to its float leaves), bits/mode ride as aux data.
+# Unflatten bypasses __init__ so traced leaves survive a jit boundary.
+def _spec_flatten(s: AdcSpec):
+    return (s.vmin, s.vmax), (s.bits, s.mode)
+
+
+def _spec_unflatten(aux, children):
+    bits, mode = aux
+    vmin, vmax = children
+    obj = object.__new__(AdcSpec)
+    object.__setattr__(obj, "bits", bits)
+    object.__setattr__(obj, "mode", mode)
+    object.__setattr__(obj, "vmin", vmin)
+    object.__setattr__(obj, "vmax", vmax)
+    return obj
+
+
+jax.tree_util.register_pytree_node(AdcSpec, _spec_flatten, _spec_unflatten)

@@ -1,14 +1,20 @@
 """Pallas TPU kernels for the compute hot-spots (each with a pure-jnp
-oracle in ref.py and a jit'd dispatcher in ops.py; validated in interpret
-mode on CPU, targeted at TPU v5e VMEM/MXU):
+oracle in ref.py, a declarative routing entry in dispatch.py, and a
+back-compat shim in ops.py; validated in interpret mode on CPU, targeted
+at TPU v5e VMEM/MXU):
 
   adc_quantize     — the paper's analog-frontend hot path: pruned
                      binary-search-ADC quantization as a one-hot selection
-                     sum over VMEM code->value tables.
-  qmlp             — fused ADC + printed-MLP forward (serving path of the
-                     paper's classifier system).
+                     sum over VMEM code->value tables (per-channel analog
+                     ranges ride as VMEM range rows).
+  qmlp             — fused ADC + printed-MLP/SVM forward (serving path of
+                     the paper's classifier system).
   flash_attention  — online-softmax attention with VMEM scratch; the
                      §Perf-identified lever for prefill/train score traffic
                      at LM scale.
+
+Routing policy (oracle vs kernel vs sharded, interpret autodetection,
+envelope limits) is registered once per entry in ``dispatch.py``;
+``envelope.py`` holds the shared static limits and backend detection.
 """
-from repro.kernels import ops, ref  # noqa: F401
+from repro.kernels import dispatch, ops, ref  # noqa: F401

@@ -9,6 +9,14 @@ held in VMEM. Arithmetic intensity is ~2^N flops/elem, so the kernel is
 HBM-bound and the tile pipeline (double-buffered via the grid) keeps it at
 streaming bandwidth.
 
+Analog ranges: ``vmin``/``vmax`` are static (float or per-channel tuple,
+spec.AdcSpec) and are baked at trace time into f32 ``(1, C)`` range rows
+(core/adc.range_rows — scale computed in f64, cast once), which ride as
+VMEM-resident operands. The in-kernel code math
+``clip(floor((x - vmin_row) * scale_row), 0, 2^N - 1)`` is therefore
+bitwise-identical to the jnp oracles for scalar *and* heterogeneous
+per-channel sensor spans, at the cost of one broadcast row pair in VMEM.
+
 Two entry points share one kernel body:
 
 * ``adc_quantize_pallas`` — one ADC bank: x (M, C), VALUES (C, 2^N),
@@ -24,15 +32,16 @@ Two entry points share one kernel body:
 Under the device-sharded engine (DESIGN.md §7) the population entry runs
 *inside* a ``shard_map`` body: P is then the LOCAL population slice, the
 grid is the per-shard (P_local, M/block_m), and only that shard's value
-tables ever exist on the device (ops.adc_quantize_population_sharded
+tables ever exist on the device (the dispatch registry's sharded path
 builds them from the local masks). ``block_m=None`` (the default) sizes
 the M-tile from the per-core VMEM budget instead of a fixed 512, so both
 the full-population and per-shard launches pipeline at the same depth
 regardless of how many individuals landed on the device.
 
-C stays whole per tile (sensor counts are small; ops.py falls back to the
-jnp path for C > 4096 or bits > 6). On TPU the kernels compile by default;
-interpret mode is the CPU/debug fallback selected in ops.py.
+C stays whole per tile (sensor counts are small; the dispatch registry
+falls back to the jnp path for C > 4096 or bits > 6). On TPU the kernels
+compile by default; interpret mode is the CPU/debug fallback selected by
+kernels/dispatch.py.
 """
 from __future__ import annotations
 
@@ -41,6 +50,13 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+
+
+def _range_rows(bits: int, vmin, vmax, channels: int):
+    # deferred: repro.core.__init__ -> search -> ops -> this module is a
+    # cycle at import time; range_rows is only needed at trace time.
+    from repro.core.adc import range_rows
+    return range_rows(bits, vmin, vmax, channels)
 
 
 # ~2 MB of f32 VMEM for x + out tiles and the resident table: half a
@@ -59,32 +75,31 @@ def _auto_block_m(m: int, c: int, n: int) -> int:
     return min(bm, 4096, m)
 
 
-def _kernel(x_ref, table_ref, o_ref, *, bits: int, vmin: float, vmax: float):
+def _dequant_tile(x, table, lo, scale, *, bits: int):
+    """(bm, C) tile through the one-hot selection sum: codes from the
+    (1, C) range rows, values from the VMEM-resident (C, 2^N) table."""
     n = 2 ** bits
-    x = x_ref[...].astype(jnp.float32)                  # (bm, C)
-    scale = n / (vmax - vmin)
-    code = jnp.floor((x - vmin) * scale)
-    code = jnp.clip(code, 0.0, float(n - 1))            # (bm, C) f32 codes
+    code = jnp.floor((x - lo) * scale)
+    code = jnp.clip(code, 0.0, float(n - 1))
     out = jnp.zeros_like(x)
-    table = table_ref[...]                              # (C, n) f32
     for k in range(n):                                  # static unroll
         out = out + jnp.where(code == float(k), table[:, k][None, :], 0.0)
+    return out
+
+
+def _kernel(x_ref, table_ref, lo_ref, scale_ref, o_ref, *, bits: int):
+    x = x_ref[...].astype(jnp.float32)                  # (bm, C)
+    out = _dequant_tile(x, table_ref[...], lo_ref[...], scale_ref[...],
+                        bits=bits)
     o_ref[...] = out.astype(o_ref.dtype)
 
 
-def _pop_kernel(x_ref, table_ref, o_ref, *, bits: int, vmin: float,
-                vmax: float):
+def _pop_kernel(x_ref, table_ref, lo_ref, scale_ref, o_ref, *, bits: int):
     """Population tile: x (bm, C) shared, table (1, C, n) for the current
-    individual, out (1, bm, C)."""
-    n = 2 ** bits
+    individual, range rows (1, C) shared, out (1, bm, C)."""
     x = x_ref[...].astype(jnp.float32)                  # (bm, C)
-    scale = n / (vmax - vmin)
-    code = jnp.floor((x - vmin) * scale)
-    code = jnp.clip(code, 0.0, float(n - 1))
-    out = jnp.zeros_like(x)
-    table = table_ref[0]                                # (C, n) in VMEM
-    for k in range(n):                                  # static unroll
-        out = out + jnp.where(code == float(k), table[:, k][None, :], 0.0)
+    out = _dequant_tile(x, table_ref[0], lo_ref[...], scale_ref[...],
+                        bits=bits)
     o_ref[0] = out.astype(o_ref.dtype)
 
 
@@ -92,28 +107,37 @@ def _pop_kernel(x_ref, table_ref, o_ref, *, bits: int, vmin: float,
                    static_argnames=("bits", "vmin", "vmax", "block_m",
                                     "interpret"))
 def adc_quantize_pallas(x: jnp.ndarray, table: jnp.ndarray, *, bits: int,
-                        vmin: float = 0.0, vmax: float = 1.0,
-                        block_m: int | None = None, interpret: bool = True
-                        ) -> jnp.ndarray:
+                        vmin=0.0, vmax=1.0,
+                        block_m: int | None = None,
+                        interpret: bool | None = None) -> jnp.ndarray:
     """x: (M, C); table: (C, 2^bits). Returns quantized (M, C).
-    ``block_m=None`` auto-sizes the tile from the VMEM budget."""
+    ``block_m=None`` auto-sizes the tile from the VMEM budget.
+    ``vmin``/``vmax``: float or per-channel tuple (static — hashable).
+    ``interpret=None`` autodetects the backend (compiled on TPU) — the
+    same convention as the qmlp entries and the dispatch registry."""
+    if interpret is None:
+        from repro.kernels import envelope
+        interpret = envelope.interpret_default()
     m, c = x.shape
+    lo, scale = _range_rows(bits, vmin, vmax, c)          # (1, C) f32 each
     bm = min(block_m, m) if block_m else _auto_block_m(m, c, 2 ** bits)
     pad = (-m) % bm
     if pad:
         x = jnp.pad(x, ((0, pad), (0, 0)))
     grid = (x.shape[0] // bm,)
     out = pl.pallas_call(
-        functools.partial(_kernel, bits=bits, vmin=vmin, vmax=vmax),
+        functools.partial(_kernel, bits=bits),
         grid=grid,
         in_specs=[
             pl.BlockSpec((bm, c), lambda i: (i, 0)),
             pl.BlockSpec((c, 2 ** bits), lambda i: (0, 0)),
+            pl.BlockSpec((1, c), lambda i: (0, 0)),
+            pl.BlockSpec((1, c), lambda i: (0, 0)),
         ],
         out_specs=pl.BlockSpec((bm, c), lambda i: (i, 0)),
         out_shape=jax.ShapeDtypeStruct((x.shape[0], c), x.dtype),
         interpret=interpret,
-    )(x, table.astype(jnp.float32))
+    )(x, table.astype(jnp.float32), jnp.asarray(lo), jnp.asarray(scale))
     return out[:m]
 
 
@@ -121,34 +145,42 @@ def adc_quantize_pallas(x: jnp.ndarray, table: jnp.ndarray, *, bits: int,
                    static_argnames=("bits", "vmin", "vmax", "block_m",
                                     "interpret"))
 def adc_quantize_pallas_population(x: jnp.ndarray, tables: jnp.ndarray, *,
-                                   bits: int, vmin: float = 0.0,
-                                   vmax: float = 1.0,
+                                   bits: int, vmin=0.0, vmax=1.0,
                                    block_m: int | None = None,
-                                   interpret: bool = True) -> jnp.ndarray:
+                                   interpret: bool | None = None
+                                   ) -> jnp.ndarray:
     """Shared x: (M, C); per-individual tables: (P, C, 2^bits). Returns
     (P, M, C) — the whole population's quantized views in one launch.
 
     Grid (P, M/bm), M innermost: the (C, 2^N) table of individual p loads
     into VMEM at the first M-tile and is re-used by every subsequent tile
     (the index map is constant in the inner grid axis, so the pipeline
-    skips the re-fetch). Under the sharded engine P is the local
-    population slice, making this the per-shard grid."""
+    skips the re-fetch). The (1, C) range rows are shared across the whole
+    launch. Under the sharded engine P is the local population slice,
+    making this the per-shard grid. ``interpret=None`` autodetects the
+    backend like every other entry."""
+    if interpret is None:
+        from repro.kernels import envelope
+        interpret = envelope.interpret_default()
     m, c = x.shape
     p = tables.shape[0]
+    lo, scale = _range_rows(bits, vmin, vmax, c)          # (1, C) f32 each
     bm = min(block_m, m) if block_m else _auto_block_m(m, c, 2 ** bits)
     pad = (-m) % bm
     if pad:
         x = jnp.pad(x, ((0, pad), (0, 0)))
     grid = (p, x.shape[0] // bm)
     out = pl.pallas_call(
-        functools.partial(_pop_kernel, bits=bits, vmin=vmin, vmax=vmax),
+        functools.partial(_pop_kernel, bits=bits),
         grid=grid,
         in_specs=[
             pl.BlockSpec((bm, c), lambda pi, i: (i, 0)),
             pl.BlockSpec((1, c, 2 ** bits), lambda pi, i: (pi, 0, 0)),
+            pl.BlockSpec((1, c), lambda pi, i: (0, 0)),
+            pl.BlockSpec((1, c), lambda pi, i: (0, 0)),
         ],
         out_specs=pl.BlockSpec((1, bm, c), lambda pi, i: (pi, i, 0)),
         out_shape=jax.ShapeDtypeStruct((p, x.shape[0], c), x.dtype),
         interpret=interpret,
-    )(x, tables.astype(jnp.float32))
+    )(x, tables.astype(jnp.float32), jnp.asarray(lo), jnp.asarray(scale))
     return out[:, :m]

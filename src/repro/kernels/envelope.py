@@ -1,15 +1,16 @@
-"""Shared kernel-dispatch policy for every fused classifier kernel.
+"""Shared static limits + backend detection for the fused kernel family.
 
-One place answers the two questions every ``ops.py`` wrapper asks:
+One place answers the two questions the dispatch registry
+(kernels/dispatch.py) asks for every registered entry:
 
 * ``interpret_default()`` — compiled (non-interpret) Pallas kernels are the
   default on TPU; everywhere else interpret mode executes the kernel bodies
-  in Python (correct but slow — per-tile Python, so population/bank-grid
-  launches additionally fall back to the jnp oracles in auto mode).
+  in Python (correct but slow — per-tile Python, so the registry's auto
+  policy routes every entry to the jnp oracles off-TPU).
 * the static envelope the kernels were written for: the one-hot selection
   sum unrolls 2^bits compare/select/fma steps (``MAX_UNROLL_BITS``) and a
   (C, 2^N) table plus a (block_m, C) tile must fit a VMEM budget
-  (``MAX_CHANNELS``). Outside the envelope the wrappers route to the jnp
+  (``MAX_CHANNELS``). Outside the envelope the registry routes to the jnp
   oracles (kernels/ref.py) — same math, no tiling assumptions.
 """
 from __future__ import annotations

@@ -1,100 +1,108 @@
-"""Public jit'd wrappers for the Pallas kernels with automatic fallback to
-the jnp reference when the kernel's static envelope doesn't apply
-(bits > 6 unrolls too far; huge channel counts exceed a VMEM tile).
+"""Back-compat entry points over the declarative dispatch registry
+(kernels/dispatch.py — DESIGN.md §9).
 
-On this CPU container the kernels run in interpret mode (the kernel body
-executes in Python per tile); on TPU set interpret=False (default when a
-TPU backend is detected). The envelope/backend policy lives in
-kernels/envelope.py so every entry — search-side (mask-based) and
-deployment-side (baked-table banks) — dispatches identically.
+These wrappers exist for two reasons only:
+
+* they keep the pre-AdcSpec call signatures (``bits=, vmin=, vmax=,
+  mode=`` loose kwargs) working as **deprecation shims** — new code
+  passes ``spec=AdcSpec(...)`` (or uses the ``repro.api`` facade) and the
+  loose form emits a ``DeprecationWarning`` (removal timeline in
+  CHANGES.md);
+* they own the mask -> baked-value-table decode, so the registry itself
+  only ever sees tables (the deployment path hands it baked tables
+  directly).
+
+All routing — envelope fallback to the jnp oracles, interpret
+autodetection, the oracle-vs-interpret-kernel auto policy (now identical
+for single-sample, population and bank paths), shard_map partitioning of
+the population/design axis — lives in ``dispatch.dispatch`` /
+``dispatch.dispatch_sharded`` and is logged there.
 """
 from __future__ import annotations
 
-import jax
+import warnings
+from typing import Optional
+
 import jax.numpy as jnp
 
-from repro.kernels import ref
-from repro.kernels.adc_quantize import (adc_quantize_pallas,
-                                        adc_quantize_pallas_population)
-from repro.kernels.envelope import (MAX_CHANNELS, MAX_UNROLL_BITS,
-                                    interpret_default, outside_envelope)
-from repro.kernels.qmlp import (bespoke_mlp_bank_pallas, bespoke_mlp_pallas,
-                                bespoke_svm_bank_pallas, bespoke_svm_pallas)
-
-# retained spellings: pre-envelope callers import these from ops
-_MAX_UNROLL_BITS = MAX_UNROLL_BITS
-_MAX_CHANNELS = MAX_CHANNELS
-_interpret_default = interpret_default
+from repro.core.spec import AdcSpec, as_spec
+from repro.kernels import dispatch
 
 
-def adc_quantize(x: jnp.ndarray, mask: jnp.ndarray, *, bits: int,
-                 vmin: float = 0.0, vmax: float = 1.0, mode: str = "tree",
+def _spec_of(fn: str, spec: Optional[AdcSpec], bits, vmin, vmax, mode
+             ) -> AdcSpec:
+    """spec= wins; the loose-kwarg form still works but is deprecated."""
+    if spec is None and bits is not None:
+        warnings.warn(
+            f"ops.{fn}(bits=..., vmin=..., vmax=..., mode=...) loose "
+            f"kwargs are deprecated; pass spec=AdcSpec(...) instead "
+            f"(see CHANGES.md for the removal timeline)",
+            DeprecationWarning, stacklevel=3)
+    return as_spec(spec, bits=bits, vmin=vmin, vmax=vmax, mode=mode)
+
+
+def adc_quantize(x: jnp.ndarray, mask: jnp.ndarray, *,
+                 spec: Optional[AdcSpec] = None, bits: Optional[int] = None,
+                 vmin=0.0, vmax=1.0, mode: str = "tree",
                  interpret: bool | None = None) -> jnp.ndarray:
-    """Quantize (M, C) samples through per-channel pruned binary-search ADCs
-    (kernel when applicable, jnp oracle otherwise)."""
-    table = ref.value_table(mask, bits, vmin, vmax, mode)
-    if outside_envelope(bits, x.shape[-1]):
-        return ref.adc_quantize_ref(x, table, bits, vmin, vmax)
-    if interpret is None:
-        interpret = interpret_default()
-    return adc_quantize_pallas(x, table, bits=bits, vmin=vmin, vmax=vmax,
-                               interpret=interpret)
+    """Quantize (M, C) samples through per-channel pruned binary-search
+    ADCs (kernel when the registry resolves one, jnp oracle otherwise)."""
+    spec = _spec_of("adc_quantize", spec, bits, vmin, vmax, mode)
+    table = spec.value_table(mask)
+    return dispatch.dispatch("adc_quantize", x, table, spec=spec,
+                             interpret=interpret)
 
 
-def adc_quantize_population(x: jnp.ndarray, masks: jnp.ndarray, *, bits: int,
-                            vmin: float = 0.0, vmax: float = 1.0,
-                            mode: str = "tree",
+def adc_quantize_population(x: jnp.ndarray, masks: jnp.ndarray, *,
+                            spec: Optional[AdcSpec] = None,
+                            bits: Optional[int] = None,
+                            vmin=0.0, vmax=1.0, mode: str = "tree",
                             interpret: bool | None = None) -> jnp.ndarray:
     """Quantize one shared (M, C) sample batch through an entire NSGA-II
     population of pruned ADC banks. masks: (P, C, 2^bits). Returns
-    (P, M, C). Kernel when the static envelope applies (population grid,
+    (P, M, C). Kernel when the registry resolves one (population grid,
     per-individual value table resident in VMEM), batched jnp oracle
-    otherwise."""
-    tables = ref.value_table(masks, bits, vmin, vmax, mode)   # (P, C, n)
-    if outside_envelope(bits, x.shape[-1]):
-        return ref.adc_quantize_ref_population(x, tables, bits, vmin, vmax)
-    if interpret is None:
-        if interpret_default():
-            # auto mode off-TPU: interpret-mode kernels run tile bodies in
-            # Python (P * M/bm tiles — minutes on CPU), so the batched
-            # oracle is the fallback; tests opt in to interpret explicitly.
-            return ref.adc_quantize_ref_population(x, tables, bits, vmin,
-                                                   vmax)
-        interpret = False
-    return adc_quantize_pallas_population(x, tables, bits=bits, vmin=vmin,
-                                          vmax=vmax, interpret=interpret)
+    otherwise — the auto (interpret=None) policy is the registry's,
+    identical to every other entry."""
+    spec = _spec_of("adc_quantize_population", spec, bits, vmin, vmax, mode)
+    tables = spec.value_table(masks)                      # (P, C, n)
+    return dispatch.dispatch("adc_quantize_population", x, tables,
+                             spec=spec, interpret=interpret)
 
 
 def adc_quantize_population_sharded(x: jnp.ndarray, masks: jnp.ndarray, *,
-                                    mesh, bits: int, axes=None,
-                                    vmin: float = 0.0, vmax: float = 1.0,
-                                    mode: str = "tree",
+                                    mesh, spec: Optional[AdcSpec] = None,
+                                    bits: Optional[int] = None, axes=None,
+                                    vmin=0.0, vmax=1.0, mode: str = "tree",
                                     interpret: bool | None = None
                                     ) -> jnp.ndarray:
     """``adc_quantize_population`` with the population axis partitioned
     over ``mesh``: each device receives only its (P/D, C, 2^bits) mask
     slice, builds value tables for *that slice alone*, and launches the
     per-shard (P_local, M/block_m) population grid; x replicates (it is
-    one shared sample batch). ``axes`` defaults to the first divisible
-    candidate from distributed/sharding.RULES_POPULATION; when nothing
-    divides P the single-device path runs unsharded (same results)."""
+    one shared sample batch). ``axes`` defaults to the registry's rule
+    (distributed/sharding.RULES_POPULATION); when nothing divides P the
+    single-device path runs unsharded (same results)."""
     from jax.sharding import PartitionSpec as P
 
     from repro.compat import shard_map
     from repro.distributed import sharding as sharding_lib
 
+    spec = _spec_of("adc_quantize_population_sharded", spec, bits, vmin,
+                    vmax, mode)
     p = masks.shape[0]
     if axes is None:
         axes = sharding_lib.population_axes(mesh, p)
     if axes is None:
-        return adc_quantize_population(x, masks, bits=bits, vmin=vmin,
-                                       vmax=vmax, mode=mode,
+        return adc_quantize_population(x, masks, spec=spec,
                                        interpret=interpret)
     pspec = P(axes)
 
+    # value tables are built INSIDE the shard body from the local mask
+    # slice, so dispatch_sharded (which shards pre-baked tables) is not
+    # used here — the per-device table build is the point of this entry.
     def body(xs, ms):
-        return adc_quantize_population(xs, ms, bits=bits, vmin=vmin,
-                                       vmax=vmax, mode=mode,
+        return adc_quantize_population(xs, ms, spec=spec,
                                        interpret=interpret)
 
     return shard_map(body, mesh=mesh, in_specs=(P(), pspec),
@@ -102,93 +110,66 @@ def adc_quantize_population_sharded(x: jnp.ndarray, masks: jnp.ndarray, *,
 
 
 # ------------------------------------------------ fused classifier serving
-def bespoke_mlp(x, mask, w1, b1, w2, b2, *, bits: int, vmin: float = 0.0,
-                vmax: float = 1.0, mode: str = "tree",
-                interpret: bool | None = None):
+def bespoke_mlp(x, mask, w1, b1, w2, b2, *, spec: Optional[AdcSpec] = None,
+                bits: Optional[int] = None, vmin=0.0, vmax=1.0,
+                mode: str = "tree", interpret: bool | None = None):
     """Fused ADC + 1-hidden-layer printed MLP inference (mask-based: the
     value table is built here; deployment passes baked tables through
     ``classifier_bank``)."""
-    table = ref.value_table(mask, bits, vmin, vmax, mode)
-    if outside_envelope(bits, x.shape[-1]):
-        return ref.bespoke_mlp_ref(x, table, bits, w1, b1, w2, b2, vmin, vmax)
-    if interpret is None:
-        interpret = interpret_default()
-    return bespoke_mlp_pallas(x, table, w1, b1, w2, b2, bits=bits,
-                              vmin=vmin, vmax=vmax, interpret=interpret)
+    spec = _spec_of("bespoke_mlp", spec, bits, vmin, vmax, mode)
+    table = spec.value_table(mask)
+    return dispatch.dispatch("bespoke_mlp", x, table, w1, b1, w2, b2,
+                             spec=spec, interpret=interpret)
 
 
-def bespoke_svm(x, mask, w, b, *, bits: int, vmin: float = 0.0,
-                vmax: float = 1.0, mode: str = "tree",
-                interpret: bool | None = None):
+def bespoke_svm(x, mask, w, b, *, spec: Optional[AdcSpec] = None,
+                bits: Optional[int] = None, vmin=0.0, vmax=1.0,
+                mode: str = "tree", interpret: bool | None = None):
     """Fused ADC + linear-SVM inference (the paper's second model family),
-    same envelope contract as ``bespoke_mlp``."""
-    table = ref.value_table(mask, bits, vmin, vmax, mode)
-    if outside_envelope(bits, x.shape[-1]):
-        return ref.bespoke_svm_ref(x, table, bits, w, b, vmin, vmax)
-    if interpret is None:
-        interpret = interpret_default()
-    return bespoke_svm_pallas(x, table, w, b, bits=bits, vmin=vmin,
-                              vmax=vmax, interpret=interpret)
+    same registry contract as ``bespoke_mlp``."""
+    spec = _spec_of("bespoke_svm", spec, bits, vmin, vmax, mode)
+    table = spec.value_table(mask)
+    return dispatch.dispatch("bespoke_svm", x, table, w, b, spec=spec,
+                             interpret=interpret)
 
 
-def classifier_bank(x, tables, weights, *, kind: str, bits: int,
-                    vmin: float = 0.0, vmax: float = 1.0,
+def _bank_entry(kind: str) -> str:
+    if kind not in ("mlp", "svm"):
+        raise ValueError(f"unknown classifier kind {kind!r}")
+    return f"classifier_bank_{kind}"
+
+
+def classifier_bank(x, tables, weights, *, kind: str,
+                    spec: Optional[AdcSpec] = None,
+                    bits: Optional[int] = None, vmin=0.0, vmax=1.0,
                     interpret: bool | None = None):
     """One shared (M, C) sample batch through a deployed multi-design bank.
 
     tables: (D, C, 2^bits) *baked* value tables (the deployment artifact —
     no mask decode at serve time); weights: stacked po2-quantized
     parameters, ``(w1, b1, w2, b2)`` for kind='mlp' or ``(w, b)`` for
-    kind='svm'. Returns (D, M, O) logits.
-
-    Kernel when the static envelope applies ((D, M/block_m) grid,
-    per-design table+weights resident in VMEM); bank jnp oracle otherwise.
-    Auto mode off-TPU routes to the oracle like the population quantizer
-    (interpret bank grids run D * M/bm tile bodies in Python)."""
-    if kind == "mlp":
-        kernel, oracle = bespoke_mlp_bank_pallas, ref.bespoke_mlp_bank_ref
-    elif kind == "svm":
-        kernel, oracle = bespoke_svm_bank_pallas, ref.bespoke_svm_bank_ref
-    else:
-        raise ValueError(f"unknown classifier kind {kind!r}")
-    if outside_envelope(bits, x.shape[-1]):
-        return oracle(x, tables, bits, *weights, vmin, vmax)
-    if interpret is None:
-        if interpret_default():
-            return oracle(x, tables, bits, *weights, vmin, vmax)
-        interpret = False
-    return kernel(x, tables, *weights, bits=bits, vmin=vmin, vmax=vmax,
-                  interpret=interpret)
+    kind='svm'. Returns (D, M, O) logits. Kernel-vs-oracle routing is the
+    registry's ((D, M/block_m) grid, per-design table+weights resident in
+    VMEM when the kernel applies)."""
+    spec = _spec_of("classifier_bank", spec, bits, vmin, vmax, "tree")
+    return dispatch.dispatch(_bank_entry(kind), x, tables, *weights,
+                             spec=spec, interpret=interpret)
 
 
 def classifier_bank_sharded(x, tables, weights, *, mesh, kind: str,
-                            bits: int, axes=None, vmin: float = 0.0,
-                            vmax: float = 1.0,
+                            spec: Optional[AdcSpec] = None,
+                            bits: Optional[int] = None, axes=None,
+                            vmin=0.0, vmax=1.0,
                             interpret: bool | None = None):
     """``classifier_bank`` with the design axis partitioned over ``mesh``:
     each device holds only its (D/Dev, ...) slice of tables and weights
     and serves the shared sample batch against it — Pareto designs are
-    embarrassingly parallel exactly like GA individuals, so the axis
-    choice reuses the population rules
+    embarrassingly parallel exactly like GA individuals, so the registered
+    axis rule reuses the population rules
     (distributed/sharding.design_bank_axes). When nothing divides D the
     single-device bank runs unsharded (same results)."""
-    from jax.sharding import PartitionSpec as P
-
-    from repro.compat import shard_map
-    from repro.distributed import sharding as sharding_lib
-
-    d = tables.shape[0]
-    if axes is None:
-        axes = sharding_lib.design_bank_axes(mesh, d)
-    if axes is None:
-        return classifier_bank(x, tables, weights, kind=kind, bits=bits,
-                               vmin=vmin, vmax=vmax, interpret=interpret)
-    pspec = P(axes)
-
-    def body(xs, ts, *ws):
-        return classifier_bank(xs, ts, ws, kind=kind, bits=bits, vmin=vmin,
-                               vmax=vmax, interpret=interpret)
-
-    return shard_map(body, mesh=mesh,
-                     in_specs=(P(),) + (pspec,) * (1 + len(weights)),
-                     out_specs=pspec, check_vma=False)(x, tables, *weights)
+    spec = _spec_of("classifier_bank_sharded", spec, bits, vmin, vmax,
+                    "tree")
+    return dispatch.dispatch_sharded(_bank_entry(kind), x, tables,
+                                     *weights, spec=spec, mesh=mesh,
+                                     axes=axes, interpret=interpret)

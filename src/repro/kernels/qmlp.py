@@ -7,6 +7,11 @@ the serving hot path of the paper's deployed ADC+classifier pairs. Printed
 classifiers are tiny (F, H, O <= a few hundred), so tables and weights are
 fully VMEM-resident. fp32 accumulation; fp32 logits out.
 
+Analog ranges follow adc_quantize.py: ``vmin``/``vmax`` are static (float
+or per-channel tuple, spec.AdcSpec), baked at trace time into f32 (1, F)
+range rows that ride as VMEM operands — per-sensor spans reach the fused
+serving path with bitwise oracle parity.
+
 Four entries share the body:
 
 * ``bespoke_mlp_pallas``  — one design, 1-hidden-layer MLP:
@@ -23,7 +28,8 @@ Four entries share the body:
 
 ``interpret=None`` (default) autodetects the backend via
 ``envelope.interpret_default`` — compiled on TPU, interpret elsewhere —
-the same convention as ``adc_quantize_pallas`` callers get through ops.py.
+the same convention the dispatch registry (kernels/dispatch.py) applies
+uniformly for every wrapped entry.
 """
 from __future__ import annotations
 
@@ -34,15 +40,15 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 from repro.kernels import envelope
+from repro.kernels.adc_quantize import _range_rows
 
 
-def _dequant(x, table, *, bits: int, vmin: float, vmax: float):
-    """(bm, F) tile + (F, 2^bits) table -> quantized tile, as the one-hot
-    selection sum (gathers are weak on the TPU VPU; N<=6 unrolls to pure
-    compare/select/fma)."""
+def _dequant(x, table, lo, scale, *, bits: int):
+    """(bm, F) tile + (F, 2^bits) table + (1, F) range rows -> quantized
+    tile, as the one-hot selection sum (gathers are weak on the TPU VPU;
+    N<=6 unrolls to pure compare/select/fma)."""
     n = 2 ** bits
-    scale = n / (vmax - vmin)
-    code = jnp.clip(jnp.floor((x - vmin) * scale), 0.0, float(n - 1))
+    code = jnp.clip(jnp.floor((x - lo) * scale), 0.0, float(n - 1))
     xq = jnp.zeros_like(x)
     for k in range(n):                                  # static unroll
         xq = xq + jnp.where(code == float(k), table[:, k][None, :], 0.0)
@@ -56,35 +62,35 @@ def _mlp_forward(xq, w1, b1, w2, b2):
     return o + b2[None, :]
 
 
-def _mlp_kernel(x_ref, table_ref, w1_ref, b1_ref, w2_ref, b2_ref, o_ref, *,
-                bits: int, vmin: float, vmax: float):
+def _mlp_kernel(x_ref, table_ref, lo_ref, scale_ref, w1_ref, b1_ref, w2_ref,
+                b2_ref, o_ref, *, bits: int):
     xq = _dequant(x_ref[...].astype(jnp.float32), table_ref[...],
-                  bits=bits, vmin=vmin, vmax=vmax)
+                  lo_ref[...], scale_ref[...], bits=bits)
     o_ref[...] = _mlp_forward(xq, w1_ref[...], b1_ref[...], w2_ref[...],
                               b2_ref[...])
 
 
-def _svm_kernel(x_ref, table_ref, w_ref, b_ref, o_ref, *,
-                bits: int, vmin: float, vmax: float):
+def _svm_kernel(x_ref, table_ref, lo_ref, scale_ref, w_ref, b_ref, o_ref, *,
+                bits: int):
     xq = _dequant(x_ref[...].astype(jnp.float32), table_ref[...],
-                  bits=bits, vmin=vmin, vmax=vmax)
+                  lo_ref[...], scale_ref[...], bits=bits)
     o = jnp.dot(xq, w_ref[...], preferred_element_type=jnp.float32)
     o_ref[...] = o + b_ref[...][None, :]
 
 
-def _mlp_bank_kernel(x_ref, table_ref, w1_ref, b1_ref, w2_ref, b2_ref,
-                     o_ref, *, bits: int, vmin: float, vmax: float):
+def _mlp_bank_kernel(x_ref, table_ref, lo_ref, scale_ref, w1_ref, b1_ref,
+                     w2_ref, b2_ref, o_ref, *, bits: int):
     """Bank tile: x (bm, F) shared, per-design operands carry a leading
-    1-axis (the current design), out (1, bm, O)."""
+    1-axis (the current design), range rows shared, out (1, bm, O)."""
     xq = _dequant(x_ref[...].astype(jnp.float32), table_ref[0],
-                  bits=bits, vmin=vmin, vmax=vmax)
+                  lo_ref[...], scale_ref[...], bits=bits)
     o_ref[0] = _mlp_forward(xq, w1_ref[0], b1_ref[0], w2_ref[0], b2_ref[0])
 
 
-def _svm_bank_kernel(x_ref, table_ref, w_ref, b_ref, o_ref, *,
-                     bits: int, vmin: float, vmax: float):
+def _svm_bank_kernel(x_ref, table_ref, lo_ref, scale_ref, w_ref, b_ref,
+                     o_ref, *, bits: int):
     xq = _dequant(x_ref[...].astype(jnp.float32), table_ref[0],
-                  bits=bits, vmin=vmin, vmax=vmax)
+                  lo_ref[...], scale_ref[...], bits=bits)
     o = jnp.dot(xq, w_ref[0], preferred_element_type=jnp.float32)
     o_ref[0] = o + b_ref[0][None, :]
 
@@ -102,11 +108,21 @@ def _f32(*arrays):
     return tuple(a.astype(jnp.float32) for a in arrays)
 
 
+def _row_specs(c: int, ngrid: int):
+    """BlockSpecs for the two (1, C) range-row operands (constant index
+    maps — the rows stay VMEM-resident across the whole grid)."""
+    if ngrid == 1:
+        idx = lambda i: (0, 0)
+    else:
+        idx = lambda di, i: (0, 0)
+    return [pl.BlockSpec((1, c), idx), pl.BlockSpec((1, c), idx)]
+
+
 @functools.partial(jax.jit,
                    static_argnames=("bits", "vmin", "vmax", "block_m",
                                     "interpret"))
 def bespoke_mlp_pallas(x, table, w1, b1, w2, b2, *, bits: int,
-                       vmin: float = 0.0, vmax: float = 1.0,
+                       vmin=0.0, vmax=1.0,
                        block_m: int = 256, interpret: bool | None = None):
     """x (M, F), table (F, 2^bits), 1-hidden-layer weights -> (M, O) logits."""
     if interpret is None:
@@ -114,14 +130,16 @@ def bespoke_mlp_pallas(x, table, w1, b1, w2, b2, *, bits: int,
     m, f = x.shape
     h = w1.shape[1]
     o = w2.shape[1]
+    lo, scale = _range_rows(bits, vmin, vmax, f)
     x, bm = _pad_batch(x, block_m)
     grid = (x.shape[0] // bm,)
     out = pl.pallas_call(
-        functools.partial(_mlp_kernel, bits=bits, vmin=vmin, vmax=vmax),
+        functools.partial(_mlp_kernel, bits=bits),
         grid=grid,
         in_specs=[
             pl.BlockSpec((bm, f), lambda i: (i, 0)),
             pl.BlockSpec((f, 2 ** bits), lambda i: (0, 0)),
+            *_row_specs(f, 1),
             pl.BlockSpec((f, h), lambda i: (0, 0)),
             pl.BlockSpec((h,), lambda i: (0,)),
             pl.BlockSpec((h, o), lambda i: (0, 0)),
@@ -130,7 +148,8 @@ def bespoke_mlp_pallas(x, table, w1, b1, w2, b2, *, bits: int,
         out_specs=pl.BlockSpec((bm, o), lambda i: (i, 0)),
         out_shape=jax.ShapeDtypeStruct((x.shape[0], o), jnp.float32),
         interpret=interpret,
-    )(x, *_f32(table, w1, b1, w2, b2))
+    )(x, *_f32(table), jnp.asarray(lo), jnp.asarray(scale),
+      *_f32(w1, b1, w2, b2))
     return out[:m]
 
 
@@ -138,28 +157,30 @@ def bespoke_mlp_pallas(x, table, w1, b1, w2, b2, *, bits: int,
                    static_argnames=("bits", "vmin", "vmax", "block_m",
                                     "interpret"))
 def bespoke_svm_pallas(x, table, w, b, *, bits: int,
-                       vmin: float = 0.0, vmax: float = 1.0,
+                       vmin=0.0, vmax=1.0,
                        block_m: int = 256, interpret: bool | None = None):
     """x (M, F), table (F, 2^bits), SVM weights (F, O)/(O,) -> (M, O)."""
     if interpret is None:
         interpret = envelope.interpret_default()
     m, f = x.shape
     o = w.shape[1]
+    lo, scale = _range_rows(bits, vmin, vmax, f)
     x, bm = _pad_batch(x, block_m)
     grid = (x.shape[0] // bm,)
     out = pl.pallas_call(
-        functools.partial(_svm_kernel, bits=bits, vmin=vmin, vmax=vmax),
+        functools.partial(_svm_kernel, bits=bits),
         grid=grid,
         in_specs=[
             pl.BlockSpec((bm, f), lambda i: (i, 0)),
             pl.BlockSpec((f, 2 ** bits), lambda i: (0, 0)),
+            *_row_specs(f, 1),
             pl.BlockSpec((f, o), lambda i: (0, 0)),
             pl.BlockSpec((o,), lambda i: (0,)),
         ],
         out_specs=pl.BlockSpec((bm, o), lambda i: (i, 0)),
         out_shape=jax.ShapeDtypeStruct((x.shape[0], o), jnp.float32),
         interpret=interpret,
-    )(x, *_f32(table, w, b))
+    )(x, *_f32(table), jnp.asarray(lo), jnp.asarray(scale), *_f32(w, b))
     return out[:m]
 
 
@@ -167,7 +188,7 @@ def bespoke_svm_pallas(x, table, w, b, *, bits: int,
                    static_argnames=("bits", "vmin", "vmax", "block_m",
                                     "interpret"))
 def bespoke_mlp_bank_pallas(x, tables, w1, b1, w2, b2, *, bits: int,
-                            vmin: float = 0.0, vmax: float = 1.0,
+                            vmin=0.0, vmax=1.0,
                             block_m: int = 256,
                             interpret: bool | None = None):
     """Shared x (M, F); per-design tables (D, F, 2^bits) and weights
@@ -180,14 +201,16 @@ def bespoke_mlp_bank_pallas(x, tables, w1, b1, w2, b2, *, bits: int,
     d = tables.shape[0]
     h = w1.shape[2]
     o = w2.shape[2]
+    lo, scale = _range_rows(bits, vmin, vmax, f)
     x, bm = _pad_batch(x, block_m)
     grid = (d, x.shape[0] // bm)
     out = pl.pallas_call(
-        functools.partial(_mlp_bank_kernel, bits=bits, vmin=vmin, vmax=vmax),
+        functools.partial(_mlp_bank_kernel, bits=bits),
         grid=grid,
         in_specs=[
             pl.BlockSpec((bm, f), lambda di, i: (i, 0)),
             pl.BlockSpec((1, f, 2 ** bits), lambda di, i: (di, 0, 0)),
+            *_row_specs(f, 2),
             pl.BlockSpec((1, f, h), lambda di, i: (di, 0, 0)),
             pl.BlockSpec((1, h), lambda di, i: (di, 0)),
             pl.BlockSpec((1, h, o), lambda di, i: (di, 0, 0)),
@@ -196,7 +219,8 @@ def bespoke_mlp_bank_pallas(x, tables, w1, b1, w2, b2, *, bits: int,
         out_specs=pl.BlockSpec((1, bm, o), lambda di, i: (di, i, 0)),
         out_shape=jax.ShapeDtypeStruct((d, x.shape[0], o), jnp.float32),
         interpret=interpret,
-    )(x, *_f32(tables, w1, b1, w2, b2))
+    )(x, *_f32(tables), jnp.asarray(lo), jnp.asarray(scale),
+      *_f32(w1, b1, w2, b2))
     return out[:, :m]
 
 
@@ -204,7 +228,7 @@ def bespoke_mlp_bank_pallas(x, tables, w1, b1, w2, b2, *, bits: int,
                    static_argnames=("bits", "vmin", "vmax", "block_m",
                                     "interpret"))
 def bespoke_svm_bank_pallas(x, tables, w, b, *, bits: int,
-                            vmin: float = 0.0, vmax: float = 1.0,
+                            vmin=0.0, vmax=1.0,
                             block_m: int = 256,
                             interpret: bool | None = None):
     """Shared x (M, F); per-design tables (D, F, 2^bits), w (D, F, O),
@@ -214,19 +238,21 @@ def bespoke_svm_bank_pallas(x, tables, w, b, *, bits: int,
     m, f = x.shape
     d = tables.shape[0]
     o = w.shape[2]
+    lo, scale = _range_rows(bits, vmin, vmax, f)
     x, bm = _pad_batch(x, block_m)
     grid = (d, x.shape[0] // bm)
     out = pl.pallas_call(
-        functools.partial(_svm_bank_kernel, bits=bits, vmin=vmin, vmax=vmax),
+        functools.partial(_svm_bank_kernel, bits=bits),
         grid=grid,
         in_specs=[
             pl.BlockSpec((bm, f), lambda di, i: (i, 0)),
             pl.BlockSpec((1, f, 2 ** bits), lambda di, i: (di, 0, 0)),
+            *_row_specs(f, 2),
             pl.BlockSpec((1, f, o), lambda di, i: (di, 0, 0)),
             pl.BlockSpec((1, o), lambda di, i: (di, 0)),
         ],
         out_specs=pl.BlockSpec((1, bm, o), lambda di, i: (di, i, 0)),
         out_shape=jax.ShapeDtypeStruct((d, x.shape[0], o), jnp.float32),
         interpret=interpret,
-    )(x, *_f32(tables, w, b))
+    )(x, *_f32(tables), jnp.asarray(lo), jnp.asarray(scale), *_f32(w, b))
     return out[:, :m]

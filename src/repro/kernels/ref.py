@@ -1,6 +1,13 @@
 """Pure-jnp oracles for every Pallas kernel (kernel-vs-ref allclose tests).
 These are the *semantic* references; `repro.core.adc` is the modelling API
-and tests assert the three agree."""
+and tests assert the three agree.
+
+Range handling: ``vmin``/``vmax`` may be scalars or per-channel (length-C)
+sequences (spec.AdcSpec). Codes derive from the exact same f64-computed
+``(vmin_row, scale_row)`` constants the Pallas kernels bake at trace time
+(core/adc.range_rows), so oracle-vs-kernel parity is bitwise — including
+the heterogeneous-sensor per-channel-range scenario — not merely allclose.
+"""
 from __future__ import annotations
 
 import jax
@@ -9,38 +16,56 @@ import jax.numpy as jnp
 from repro.core import adc
 
 
-def value_table(mask: jnp.ndarray, bits: int, vmin: float = 0.0,
-                vmax: float = 1.0, mode: str = "tree") -> jnp.ndarray:
+def value_table(mask: jnp.ndarray, bits: int, vmin=0.0, vmax=1.0,
+                mode: str = "tree") -> jnp.ndarray:
     """Per-channel code->reconstruction-value table: VALUES[..., c, k] is
     the analog value the pruned ADC returns for raw code k on channel c.
     mask: (C, 2^bits) or population-batched (P, C, 2^bits) — the LUT walk
     in ``adc`` is shape-polymorphic over leading axes (DESIGN.md §2), so a
-    whole NSGA-II generation's tables are built in one call. Returns a
-    float32 array of the mask's shape."""
+    whole NSGA-II generation's tables are built in one call. Per-channel
+    ``vmin``/``vmax`` give each channel its own value ladder. Returns a
+    float32 array of the mask's shape (a channel-shared 1-D mask with
+    per-channel ladders expands to (C, 2^bits))."""
     values = adc.level_values(bits, vmin, vmax)
     lut_fn = adc.tree_lut if mode == "tree" else adc._nearest_lut
     lut = lut_fn(mask.astype(jnp.int32))                  # (..., C, n)
-    return values[lut]
+    if values.ndim == 1:
+        return values[lut]
+    if lut.ndim == 1:
+        # channel-shared mask + per-channel ladders -> (C, n) table
+        # (mirrors adc.adc_quantize's 1-D-mask semantics)
+        return values[:, lut]
+    # per-channel ladders: table[..., c, k] = values[c, lut[..., c, k]]
+    if lut.shape[-2] != values.shape[0]:
+        raise ValueError(f"mask has {lut.shape[-2]} channels but the "
+                         f"per-channel range pins {values.shape[0]}")
+    return jnp.take_along_axis(jnp.broadcast_to(values, lut.shape), lut,
+                               axis=-1)
+
+
+def _codes(x: jnp.ndarray, bits: int, vmin, vmax) -> jnp.ndarray:
+    """Raw (unpruned) codes via the canonical row constants — the shared
+    front half of every oracle below."""
+    n = 2 ** bits
+    lo, scale = adc.range_rows(bits, vmin, vmax, x.shape[-1])
+    code = jnp.floor((x - lo[0]) * scale[0])
+    return jnp.clip(code, 0, n - 1).astype(jnp.int32)
 
 
 def adc_quantize_ref(x: jnp.ndarray, table: jnp.ndarray, bits: int,
-                     vmin: float = 0.0, vmax: float = 1.0) -> jnp.ndarray:
+                     vmin=0.0, vmax=1.0) -> jnp.ndarray:
     """x: (M, C); table: (C, 2^bits) from value_table. Returns (M, C)."""
-    n = 2 ** bits
-    code = jnp.clip(jnp.floor((x - vmin) / (vmax - vmin) * n), 0, n - 1
-                    ).astype(jnp.int32)                    # (M, C)
+    code = _codes(x, bits, vmin, vmax)                     # (M, C)
     return jnp.take_along_axis(table.T, code, axis=0).astype(x.dtype)
 
 
 def adc_quantize_ref_population(x: jnp.ndarray, tables: jnp.ndarray,
-                                bits: int, vmin: float = 0.0,
-                                vmax: float = 1.0) -> jnp.ndarray:
+                                bits: int, vmin=0.0, vmax=1.0
+                                ) -> jnp.ndarray:
     """Population-batched oracle: one shared sample batch through P pruned
     ADC banks. x: (M, C); tables: (P, C, 2^bits). Returns (P, M, C) —
     out[p, m, c] = tables[p, c, code(x[m, c])]."""
-    n = 2 ** bits
-    code = jnp.clip(jnp.floor((x - vmin) / (vmax - vmin) * n), 0, n - 1
-                    ).astype(jnp.int32)                    # (M, C)
+    code = _codes(x, bits, vmin, vmax)                     # (M, C)
     taker = lambda t: jnp.take_along_axis(t.T, code, axis=0)
     return jax.vmap(taker)(tables).astype(x.dtype)
 
@@ -48,7 +73,7 @@ def adc_quantize_ref_population(x: jnp.ndarray, tables: jnp.ndarray,
 def bespoke_mlp_ref(x: jnp.ndarray, table: jnp.ndarray, bits: int,
                     w1: jnp.ndarray, b1: jnp.ndarray,
                     w2: jnp.ndarray, b2: jnp.ndarray,
-                    vmin: float = 0.0, vmax: float = 1.0) -> jnp.ndarray:
+                    vmin=0.0, vmax=1.0) -> jnp.ndarray:
     """Fused analog-frontend + printed-MLP forward:
     logits = relu(ADC(x) @ w1 + b1) @ w2 + b2."""
     xq = adc_quantize_ref(x, table, bits, vmin, vmax)
@@ -58,7 +83,7 @@ def bespoke_mlp_ref(x: jnp.ndarray, table: jnp.ndarray, bits: int,
 
 def bespoke_svm_ref(x: jnp.ndarray, table: jnp.ndarray, bits: int,
                     w: jnp.ndarray, b: jnp.ndarray,
-                    vmin: float = 0.0, vmax: float = 1.0) -> jnp.ndarray:
+                    vmin=0.0, vmax=1.0) -> jnp.ndarray:
     """Fused analog-frontend + linear-SVM forward: scores = ADC(x) @ w + b."""
     xq = adc_quantize_ref(x, table, bits, vmin, vmax)
     return xq @ w + b
@@ -67,7 +92,7 @@ def bespoke_svm_ref(x: jnp.ndarray, table: jnp.ndarray, bits: int,
 def bespoke_mlp_bank_ref(x: jnp.ndarray, tables: jnp.ndarray, bits: int,
                          w1: jnp.ndarray, b1: jnp.ndarray,
                          w2: jnp.ndarray, b2: jnp.ndarray,
-                         vmin: float = 0.0, vmax: float = 1.0) -> jnp.ndarray:
+                         vmin=0.0, vmax=1.0) -> jnp.ndarray:
     """Multi-design bank oracle: one shared sample batch through D deployed
     MLP designs. x (M, F); tables (D, F, 2^bits); weights stacked over D.
     Returns (D, M, O) — row d == ``bespoke_mlp_ref`` on design d."""
@@ -78,7 +103,7 @@ def bespoke_mlp_bank_ref(x: jnp.ndarray, tables: jnp.ndarray, bits: int,
 
 def bespoke_svm_bank_ref(x: jnp.ndarray, tables: jnp.ndarray, bits: int,
                          w: jnp.ndarray, b: jnp.ndarray,
-                         vmin: float = 0.0, vmax: float = 1.0) -> jnp.ndarray:
+                         vmin=0.0, vmax=1.0) -> jnp.ndarray:
     """Multi-design bank oracle for SVM designs: (D, M, O)."""
     fn = lambda t, a, c: bespoke_svm_ref(x, t, bits, a, c, vmin, vmax)
     return jax.vmap(fn)(tables, w, b)

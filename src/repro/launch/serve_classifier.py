@@ -167,7 +167,7 @@ def main(argv=None):
         from repro.core import search
         mesh = search.default_search_mesh()
     print(f"serve_classifier[D={len(designs)} {designs[0].kind} "
-          f"bits={designs[0].bits}] dataset={args.dataset} "
+          f"{designs[0].spec.describe()}] dataset={args.dataset} "
           f"devices={len(jax.devices())} sharded={args.sharded}")
 
     requests = make_request_stream(data["x_test"], args.requests,

@@ -30,6 +30,7 @@ import numpy as np
 
 from repro.checkpoint.manager import CheckpointManager
 from repro.configs import get_config, smoke_config
+from repro.core.spec import parse_range
 from repro.configs.base import ShapeConfig
 from repro.data.lm import LMDataConfig, SyntheticLM
 from repro.distributed import fault
@@ -60,15 +61,18 @@ def run_adc_search(args):
     from pathlib import Path
 
     from repro.core import area, search
+    from repro.core.spec import AdcSpec
     from repro.data import tabular
 
     spec = tabular.SPECS[args.dataset]
     data = tabular.make_dataset(args.dataset)
     sizes = (spec.features, spec.hidden, spec.classes)
-    cfg = search.SearchConfig(bits=args.bits, pop_size=args.pop,
-                              generations=args.generations,
-                              train_steps=args.train_steps,
-                              engine=args.engine)
+    adc_spec = AdcSpec(bits=args.bits, vmin=parse_range(args.vmin),
+                       vmax=parse_range(args.vmax))
+    adc_spec.validate_channels(spec.features)
+    cfg = search.SearchConfig.for_spec(
+        adc_spec, pop_size=args.pop, generations=args.generations,
+        train_steps=args.train_steps, engine=args.engine)
     mesh = search.default_search_mesh() if cfg.engine == "sharded" else None
     ckpt_dir = Path(args.ckpt_dir) / "adc_search"
     if not args.resume and ckpt_dir.exists():
@@ -82,8 +86,9 @@ def run_adc_search(args):
         print(f"resuming from generation {ckpt.latest_step()} "
               f"({ckpt.dir})")
     print(f"adc-search[{cfg.engine}] dataset={args.dataset} "
-          f"bits={cfg.bits} pop={cfg.pop_size} gens={cfg.generations} "
-          f"qat-steps={cfg.train_steps} devices={len(jax.devices())}")
+          f"adc=({adc_spec.describe()}) pop={cfg.pop_size} "
+          f"gens={cfg.generations} qat-steps={cfg.train_steps} "
+          f"devices={len(jax.devices())}")
     marks = [time.perf_counter()]
 
     def log(g, pop, fit):
@@ -150,6 +155,11 @@ def main(argv=None):
                          "instead of LM training")
     ap.add_argument("--dataset", default="seeds")
     ap.add_argument("--bits", type=int, default=3)
+    ap.add_argument("--vmin", default="0.0",
+                    help="analog range minimum: scalar, or comma-separated "
+                         "per-channel list (heterogeneous sensors)")
+    ap.add_argument("--vmax", default="1.0",
+                    help="analog range maximum (same forms as --vmin)")
     ap.add_argument("--pop", type=int, default=16)
     ap.add_argument("--generations", type=int, default=4)
     ap.add_argument("--train-steps", type=int, default=100)

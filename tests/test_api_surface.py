@@ -1,0 +1,148 @@
+"""Public-API snapshot (tier-1): the ``repro.api`` facade's exported
+symbol set is a compatibility contract — additions require updating the
+snapshot here deliberately, removals/renames fail loudly — plus the
+AdcSpec invariants every layer relies on (hashable static-arg form,
+pytree round trip, JSON meta round trip) and the facade's end-to-end
+bit-for-bit pipeline parity (the DESIGN.md §8 contract through §9)."""
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro import api
+from repro.core.spec import AdcSpec, normalize_range
+
+# The frozen public surface of repro.api. Update deliberately.
+API_SURFACE = {
+    "AdcSpec",
+    "Bank",
+    "DeployedClassifier",
+    "Front",
+    "SearchConfig",
+    "deploy",
+    "load_front",
+    "quantize",
+    "save_front",
+    "search",
+    "serve",
+}
+
+
+def test_api_exports_exact_symbol_set():
+    assert set(api.__all__) == API_SURFACE
+    for name in API_SURFACE:
+        assert hasattr(api, name), f"api.__all__ lists missing {name}"
+
+
+def test_dispatch_registry_entry_set():
+    """The registered kernel entries are part of the public contract the
+    benchmarks and the facade dispatch against."""
+    from repro.kernels import dispatch
+    assert dispatch.entries() == (
+        "adc_quantize", "adc_quantize_population", "bespoke_mlp",
+        "bespoke_svm", "classifier_bank_mlp", "classifier_bank_svm")
+    for name in dispatch.entries():
+        entry = dispatch.get(name)
+        # the interpret policy is explicit and IDENTICAL across entries
+        # (the population/single-sample asymmetry this registry removed)
+        assert entry.interpret_policy == "oracle"
+
+
+# ----------------------------------------------------------------- AdcSpec
+def test_adc_spec_normalizes_and_hashes():
+    s = AdcSpec(bits=3, vmin=np.array([0.0, -1.0]), vmax=[1.0, 2.0])
+    assert s.vmin == (0.0, -1.0) and isinstance(s.vmin, tuple)
+    assert s.vmax == (1.0, 2.0)
+    assert s.per_channel and s.channels == 2
+    assert hash(s) == hash(AdcSpec(bits=3, vmin=(0.0, -1.0),
+                                   vmax=(1.0, 2.0)))
+    scalar = AdcSpec(bits=4)
+    assert not scalar.per_channel and scalar.channels is None
+    assert isinstance(scalar.vmin, float)
+    # hashable -> usable as a static jit argument
+    {s: 1, scalar: 2}
+
+
+def test_adc_spec_validation():
+    with pytest.raises(ValueError):
+        AdcSpec(bits=0)
+    with pytest.raises(ValueError):
+        AdcSpec(bits=3, mode="magic")
+    with pytest.raises(ValueError):
+        AdcSpec(bits=3, vmin=1.0, vmax=0.5)
+    with pytest.raises(ValueError):
+        AdcSpec(bits=3, vmin=(0.0, 0.0), vmax=(1.0, 0.0))
+    with pytest.raises(ValueError):
+        AdcSpec(bits=3, vmin=(0.0, 0.0), vmax=(1.0, 1.0, 1.0))
+    with pytest.raises(ValueError):
+        AdcSpec(bits=3, vmin=(0.0, 0.0)).validate_channels(7)
+    AdcSpec(bits=3, vmin=(0.0, 0.0)).validate_channels(2)
+
+
+def test_adc_spec_pytree_round_trip():
+    for s in (AdcSpec(bits=3),
+              AdcSpec(bits=2, mode="nearest", vmin=(0.0, -1.0),
+                      vmax=(1.0, 3.0))):
+        leaves, treedef = jax.tree_util.tree_flatten(s)
+        back = jax.tree_util.tree_unflatten(treedef, leaves)
+        assert back == s and isinstance(back, AdcSpec)
+        # specs nest inside larger pytrees without being torn apart
+        tree = {"spec": s, "x": np.zeros(2)}
+        l2, td2 = jax.tree_util.tree_flatten(tree)
+        assert jax.tree_util.tree_unflatten(td2, l2)["spec"] == s
+
+
+def test_adc_spec_meta_round_trip():
+    s = AdcSpec(bits=3, mode="nearest", vmin=(0.0, 0.5), vmax=(1.0, 2.5))
+    back = AdcSpec.from_meta(s.to_meta())
+    assert back == s
+    import json
+    assert AdcSpec.from_meta(json.loads(json.dumps(s.to_meta()))) == s
+    # a length-1 sequence keeps its channel pinning (stays a tuple)
+    assert normalize_range([1.0]) == (1.0,)
+    one = AdcSpec(bits=2, vmin=(0.5,), vmax=(2.0,))
+    assert one.channels == 1
+    with pytest.raises(ValueError):
+        one.validate_channels(7)
+
+
+def test_search_config_carries_spec():
+    from repro.core.search import SearchConfig
+    spec = AdcSpec(bits=2, vmin=(0.0, 0.1), vmax=(1.0, 1.1))
+    cfg = SearchConfig.for_spec(spec, pop_size=4)
+    assert cfg.adc_spec == spec
+    assert cfg.vmin == (0.0, 0.1)                 # normalized, hashable
+    hash(cfg)                                     # static-jit-arg safe
+
+
+# -------------------------------------------------- facade pipeline parity
+def test_api_pipeline_bitforbit_round_trip(tmp_path):
+    """search -> deploy -> save -> load -> serve through repro.api alone
+    reproduces the search-time fitness bit-for-bit (PR 3's contract,
+    preserved across the API redesign)."""
+    from repro.data import tabular
+    data = tabular.make_dataset("seeds")
+    front = api.search(api.AdcSpec(bits=2), data, (7, 4, 3), pop_size=6,
+                       generations=1, train_steps=20)
+    assert len(front) >= 1
+    np.testing.assert_array_equal(front.trained[0], front.accuracies)
+    bank = api.deploy(front)
+    assert len(bank) == len(front)
+    exported = np.array([d.accuracy for d in bank.designs])
+    np.testing.assert_array_equal(exported, front.accuracies)
+    api.save_front(tmp_path / "front", bank, extra_meta={"dataset": "seeds"})
+    back = api.load_front(tmp_path / "front")
+    served = back.accuracies(data["x_test"], data["y_test"])
+    np.testing.assert_array_equal(served, exported)
+    logits = api.serve(back, data["x_test"][:16])
+    assert logits.shape == (len(bank), 16, 3)
+    np.testing.assert_array_equal(logits, bank.logits(data["x_test"][:16]))
+
+
+def test_api_search_infers_sizes():
+    from repro.data import tabular
+    data = tabular.make_dataset("seeds")
+    front = api.search(api.AdcSpec(bits=2), data, pop_size=4,
+                       generations=0, train_steps=10, hidden=4)
+    assert front.sizes == (7, 4, 3)

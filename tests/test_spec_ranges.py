@@ -1,0 +1,269 @@
+"""Per-channel analog ranges (AdcSpec) through every layer: value tables,
+kernel-vs-oracle parity (quantizer, population grid, MLP/SVM single and
+bank variants), the modelling API, the dispatch registry's uniform
+interpret policy, and the deployed-front save/load round trip."""
+import logging
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import adc, deploy, search
+from repro.core.spec import AdcSpec
+from repro.kernels import dispatch, ops, ref
+from repro.kernels.adc_quantize import (adc_quantize_pallas,
+                                        adc_quantize_pallas_population)
+from repro.kernels.qmlp import (bespoke_mlp_bank_pallas, bespoke_mlp_pallas,
+                                bespoke_svm_bank_pallas, bespoke_svm_pallas)
+
+
+def _pc_spec(rng, bits, c):
+    vmin = tuple(float(v) for v in rng.uniform(-2.0, 0.0, c))
+    vmax = tuple(float(v) for v in rng.uniform(0.5, 3.0, c))
+    return AdcSpec(bits=bits, vmin=vmin, vmax=vmax)
+
+
+def _rand_mask(rng, c, n):
+    m = (rng.random((c, n)) < 0.6).astype(np.int32)
+    m[:, 0] = 1
+    m[:, -1] = 1
+    return jnp.asarray(m)
+
+
+def _pc_x(rng, m, c, spec):
+    lo = np.asarray(spec.vmin)
+    hi = np.asarray(spec.vmax)
+    span = hi - lo
+    # samples across (and slightly beyond) each channel's own span
+    return jnp.asarray(lo + rng.random((m, c)) * span * 1.2 - 0.1 * span,
+                       jnp.float32)
+
+
+def test_value_table_per_channel_values():
+    """Each channel's table entries are that channel's own level ladder
+    routed through its pruned LUT."""
+    spec = AdcSpec(bits=2, vmin=(0.0, 1.0), vmax=(1.0, 3.0))
+    mask = jnp.asarray([[1, 1, 1, 1], [0, 1, 1, 0]], jnp.int32)
+    table = np.asarray(spec.value_table(mask))
+    np.testing.assert_allclose(table[0], [0.125, 0.375, 0.625, 0.875])
+    # channel 1: levels {1, 2} kept on range [1, 3] (values 1.75, 2.25);
+    # tree routing sends codes 0->1 and 3->2
+    np.testing.assert_allclose(table[1], [1.75, 1.75, 2.25, 2.25])
+    # a channel-SHARED 1-D mask with per-channel ladders expands to (C, n)
+    shared = ref.value_table(jnp.asarray([0, 1, 1, 0], jnp.int32), 2,
+                             spec.vmin, spec.vmax)
+    assert shared.shape == (2, 4)
+    np.testing.assert_allclose(shared[1], [1.75, 1.75, 2.25, 2.25])
+    with pytest.raises(ValueError):      # channel-count mismatch is loud
+        ref.value_table(jnp.ones((3, 4), jnp.int32), 2, spec.vmin,
+                        spec.vmax)
+
+
+@pytest.mark.parametrize("bits,m,c", [(2, 33, 5), (4, 64, 9)])
+def test_per_channel_kernel_matches_oracle_exactly(bits, m, c):
+    """Quantizer kernel == jnp oracle BITWISE for per-channel ranges (the
+    shared f64-derived range rows make parity exact, not approximate)."""
+    rng = np.random.default_rng(bits * 10 + c)
+    spec = _pc_spec(rng, bits, c)
+    x = _pc_x(rng, m, c, spec)
+    mask = _rand_mask(rng, c, 2 ** bits)
+    table = spec.value_table(mask)
+    want = ref.adc_quantize_ref(x, table, bits, spec.vmin, spec.vmax)
+    got = adc_quantize_pallas(x, table, bits=bits, vmin=spec.vmin,
+                              vmax=spec.vmax, block_m=16, interpret=True)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_per_channel_matches_core_adc_modelling_api():
+    """ops (registry) == core.adc modelling semantics with per-channel
+    ranges, for both the oracle route and the interpret kernel."""
+    rng = np.random.default_rng(3)
+    bits, m, c = 3, 40, 6
+    spec = _pc_spec(rng, bits, c)
+    x = _pc_x(rng, m, c, spec)
+    mask = _rand_mask(rng, c, 2 ** bits)
+    via_core = adc.adc_quantize(x, mask, bits=bits, vmin=spec.vmin,
+                                vmax=spec.vmax, ste=False)
+    via_auto = ops.adc_quantize(x, mask, spec=spec)            # oracle path
+    via_kernel = ops.adc_quantize(x, mask, spec=spec, interpret=True)
+    np.testing.assert_array_equal(np.asarray(via_auto), np.asarray(via_core))
+    np.testing.assert_array_equal(np.asarray(via_kernel),
+                                  np.asarray(via_core))
+
+
+def test_per_channel_population_kernel_matches_oracle():
+    rng = np.random.default_rng(11)
+    bits, p, m, c = 3, 4, 37, 5
+    spec = _pc_spec(rng, bits, c)
+    x = _pc_x(rng, m, c, spec)
+    masks = jnp.stack([_rand_mask(rng, c, 2 ** bits) for _ in range(p)])
+    tables = spec.value_table(masks)
+    want = ref.adc_quantize_ref_population(x, tables, bits, spec.vmin,
+                                           spec.vmax)
+    got = adc_quantize_pallas_population(x, tables, bits=bits,
+                                         vmin=spec.vmin, vmax=spec.vmax,
+                                         block_m=8, interpret=True)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    via_ops = ops.adc_quantize_population(x, masks, spec=spec)
+    np.testing.assert_array_equal(np.asarray(via_ops), np.asarray(want))
+
+
+@pytest.mark.parametrize("bits", [2, 3])
+def test_per_channel_mlp_kernel_and_bank(bits):
+    """MLP single + bank kernels vs oracles with per-channel ranges; the
+    auto (registry) route is exactly the oracle, the interpret kernel is
+    allclose (MXU fp32 accumulation)."""
+    rng = np.random.default_rng(17 + bits)
+    d, m, f, h, o = 3, 29, 7, 4, 3
+    spec = _pc_spec(rng, bits, f)
+    x = _pc_x(rng, m, f, spec)
+    masks = jnp.stack([_rand_mask(rng, f, 2 ** bits) for _ in range(d)])
+    tables = spec.value_table(masks)
+    mk = lambda *s: jnp.asarray(rng.normal(size=s), jnp.float32)
+    w1, b1, w2, b2 = mk(d, f, h), mk(d, h), mk(d, h, o), mk(d, o)
+    # single-design path
+    want1 = ref.bespoke_mlp_ref(x, tables[0], bits, w1[0], b1[0], w2[0],
+                                b2[0], spec.vmin, spec.vmax)
+    got1 = bespoke_mlp_pallas(x, tables[0], w1[0], b1[0], w2[0], b2[0],
+                              bits=bits, vmin=spec.vmin, vmax=spec.vmax,
+                              block_m=16, interpret=True)
+    np.testing.assert_allclose(np.asarray(got1), np.asarray(want1),
+                               rtol=1e-5, atol=1e-5)
+    via_ops = ops.bespoke_mlp(x, masks[0], w1[0], b1[0], w2[0], b2[0],
+                              spec=spec)
+    np.testing.assert_array_equal(np.asarray(via_ops), np.asarray(want1))
+    # bank path
+    want = ref.bespoke_mlp_bank_ref(x, tables, bits, w1, b1, w2, b2,
+                                    spec.vmin, spec.vmax)
+    got = bespoke_mlp_bank_pallas(x, tables, w1, b1, w2, b2, bits=bits,
+                                  vmin=spec.vmin, vmax=spec.vmax,
+                                  block_m=8, interpret=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+    via_bank = ops.classifier_bank(x, tables, (w1, b1, w2, b2), kind="mlp",
+                                   spec=spec)
+    np.testing.assert_array_equal(np.asarray(via_bank), np.asarray(want))
+
+
+def test_per_channel_svm_kernel_and_bank():
+    rng = np.random.default_rng(41)
+    d, m, f, o, bits = 3, 50, 6, 2, 3
+    spec = _pc_spec(rng, bits, f)
+    x = _pc_x(rng, m, f, spec)
+    masks = jnp.stack([_rand_mask(rng, f, 2 ** bits) for _ in range(d)])
+    tables = spec.value_table(masks)
+    w = jnp.asarray(rng.normal(size=(d, f, o)), jnp.float32)
+    b = jnp.asarray(rng.normal(size=(d, o)), jnp.float32)
+    want1 = ref.bespoke_svm_ref(x, tables[0], bits, w[0], b[0], spec.vmin,
+                                spec.vmax)
+    got1 = bespoke_svm_pallas(x, tables[0], w[0], b[0], bits=bits,
+                              vmin=spec.vmin, vmax=spec.vmax, block_m=16,
+                              interpret=True)
+    np.testing.assert_allclose(np.asarray(got1), np.asarray(want1),
+                               rtol=1e-5, atol=1e-5)
+    want = ref.bespoke_svm_bank_ref(x, tables, bits, w, b, spec.vmin,
+                                    spec.vmax)
+    got = bespoke_svm_bank_pallas(x, tables, w, b, bits=bits,
+                                  vmin=spec.vmin, vmax=spec.vmax,
+                                  block_m=16, interpret=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+    via_bank = ops.classifier_bank(x, tables, (w, b), kind="svm", spec=spec)
+    np.testing.assert_array_equal(np.asarray(via_bank), np.asarray(want))
+
+
+# --------------------------------------------------- search/export round trip
+@pytest.mark.parametrize("model", ["mlp", "svm"])
+def test_per_channel_front_save_load_round_trip(tmp_path, model):
+    """A searched + exported front with per-channel ranges survives
+    save_front/load_front with the ranges intact (canonical tuples) and
+    serves bit-for-bit — MLP and SVM."""
+    from repro.data import tabular
+    data = tabular.make_dataset("seeds")
+    sizes = (7, 4, 3)
+    vmin = tuple(float(v) for v in np.linspace(-0.2, 0.1, 7))
+    vmax = tuple(float(v) for v in np.linspace(0.9, 1.8, 7))
+    spec = AdcSpec(bits=2, vmin=vmin, vmax=vmax)
+    cfg = search.SearchConfig.for_spec(spec, pop_size=6, generations=1,
+                                       train_steps=20, model=model)
+    pg, pf, _ = search.run_search(data, sizes, cfg)
+    designs = deploy.export_front(pg, data, sizes, cfg)
+    exported = np.array([d.accuracy for d in designs])
+    np.testing.assert_array_equal(exported, 1.0 - pf[:, 0])
+    for d in designs:
+        assert d.spec == spec
+        np.testing.assert_array_equal(
+            d.table, np.asarray(spec.value_table(d.mask), np.float32))
+    deploy.save_front(tmp_path / "front", designs)
+    back = deploy.load_front(tmp_path / "front")
+    for a, b in zip(designs, back):
+        assert b.spec == spec                     # tuples, not JSON lists
+        np.testing.assert_array_equal(a.table, b.table)
+    served = deploy.served_accuracies(back, data["x_test"], data["y_test"])
+    np.testing.assert_array_equal(served, exported)
+    kernel = deploy.served_accuracies(back, data["x_test"], data["y_test"],
+                                      interpret=True)
+    np.testing.assert_array_equal(kernel, exported)
+
+
+def test_search_rejects_wrong_channel_count():
+    from repro.data import tabular
+    data = tabular.make_dataset("seeds")
+    spec = AdcSpec(bits=2, vmin=(0.0, 0.0), vmax=(1.0, 1.0))  # 2 != 7
+    cfg = search.SearchConfig.for_spec(spec, pop_size=4, generations=1,
+                                       train_steps=10)
+    with pytest.raises(ValueError):
+        search.run_search(data, (7, 4, 3), cfg)
+
+
+# ------------------------------------------------------- dispatch registry
+def test_dispatch_auto_policy_identical_across_entries():
+    """The interpret=None policy is explicit and the SAME for the
+    single-sample, population and bank entries (the asymmetry fix):
+    off-TPU auto resolves to the jnp oracle everywhere, explicit
+    interpret picks the kernel, outside-envelope always falls back."""
+    spec = AdcSpec(bits=3)
+    auto_paths = {dispatch.resolve(n, spec, 7).path
+                  for n in dispatch.entries()}
+    kernel_paths = {dispatch.resolve(n, spec, 7, interpret=True).path
+                    for n in dispatch.entries()}
+    fallback = {dispatch.resolve(n, AdcSpec(bits=7), 7).path
+                for n in dispatch.entries()}
+    import jax
+    expect_auto = "kernel" if jax.default_backend() == "tpu" else "oracle"
+    assert auto_paths == {expect_auto}
+    assert kernel_paths == {"kernel"}
+    assert fallback == {"oracle"}
+    with pytest.raises(ValueError):
+        dispatch.get("no_such_entry")
+    with pytest.raises(ValueError):
+        ops.classifier_bank(np.zeros((2, 3), np.float32), np.zeros((1, 3, 8)),
+                            (), kind="tree", spec=spec)
+
+
+def test_dispatch_logs_chosen_path(caplog):
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.random((8, 4)), jnp.float32)
+    mask = _rand_mask(rng, 4, 8)
+    dispatch._LOGGED.clear()
+    with caplog.at_level(logging.INFO, logger="repro.kernels.dispatch"):
+        ops.adc_quantize(x, mask, spec=AdcSpec(bits=3))
+    text = "\n".join(r.getMessage() for r in caplog.records)
+    assert "dispatch adc_quantize ->" in text
+
+
+def test_loose_kwargs_emit_deprecation_warning():
+    rng = np.random.default_rng(1)
+    x = jnp.asarray(rng.random((8, 4)), jnp.float32)
+    mask = _rand_mask(rng, 4, 8)
+    with pytest.warns(DeprecationWarning, match="loose"):
+        ops.adc_quantize(x, mask, bits=3)
+    with pytest.raises(TypeError):
+        ops.adc_quantize(x, mask)                        # neither form
+    with pytest.raises(TypeError):
+        ops.adc_quantize(x, mask, spec=AdcSpec(bits=3), bits=3)  # both
+    with pytest.raises(TypeError):
+        # a loose range alongside spec= would be silently ignored
+        ops.adc_quantize(x, mask, spec=AdcSpec(bits=3), vmax=2.0)
+    with pytest.raises(TypeError):
+        ops.adc_quantize(x, mask, spec=AdcSpec(bits=3), mode="nearest")
