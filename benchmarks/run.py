@@ -224,6 +224,80 @@ def bench_search_adc_sharded(pop=16, smoke=False):
             f"({report['speedup_sharded_over_batched']:.2f}x vs batched)")
 
 
+def bench_mc_robustness(smoke=False):
+    """Monte-Carlo non-ideality engine (DESIGN.md §10): MC instance-evals
+    per second of the mc_eval kernel family vs instance count S and
+    population size P — kernel vs jnp oracle on the same pre-built
+    interval-table operands, dispatch path stamped — plus the end-to-end
+    ``evaluate_robustness`` wall time on a tiny exported front. Writes
+    mc_robustness.json (the CI bench-smoke lane tracks it)."""
+    from benchmarks import paper_tables
+    from repro.core import adc, deploy, nonideal, search
+    from repro.core.spec import AdcSpec
+    from repro.data import tabular
+    from repro.kernels import dispatch, envelope
+    bits = 2 if smoke else 3
+    m = 128 if smoke else 512
+    c = 7
+    spec = AdcSpec(bits=bits)
+    ni = nonideal.NonIdealSpec(sigma_offset=0.5, sigma_range=0.02,
+                               fault_rate=0.05, seed=0)
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.random((m, c)), jnp.float32)
+    interp = envelope.interpret_default()
+    reps, warmup = (1, 1) if smoke else (3, 1)
+    report = {"bits": bits, "channels": c, "rows": m, "smoke": smoke,
+              "backend": jax.default_backend(),
+              "nonideal": ni.to_meta(),
+              "dispatch": _dispatch_record("mc_eval_population", spec, c,
+                                           interpret=interp)}
+    grid = {}
+    # interpret-mode kernel grids run per-tile Python off-TPU, so the
+    # P x S sweep stays modest (the oracle numbers are the CPU story;
+    # the kernel numbers are the TPU story)
+    for p in ((1, 4) if smoke else (1, 8)):
+        for s in ((4,) if smoke else (8, 16)):
+            masks = adc.repair_mask(jnp.asarray(
+                (rng.random((p, c, 2 ** bits)) < 0.6).astype(np.int32)))
+            ops_mc = nonideal.mc_operands(spec, ni, masks, samples=s)
+            entry = dispatch.get("mc_eval_population")
+            us_k, _ = _timeit(entry.kernel, x, *ops_mc, spec=spec,
+                              interpret=interp, reps=reps, warmup=warmup)
+            oracle = jax.jit(lambda *a: entry.oracle(*a, spec=spec))
+            us_o, _ = _timeit(oracle, x, *ops_mc, reps=reps, warmup=warmup)
+            evals = p * s * m
+            grid[f"P={p},S={s}"] = {
+                "kernel_us": us_k, "oracle_us": us_o,
+                "kernel_instance_evals_per_s": evals / (us_k / 1e6),
+                "oracle_instance_evals_per_s": evals / (us_o / 1e6)}
+    report["grid"] = grid
+    # end-to-end robustness of a deployed front (the user-facing verb)
+    data = tabular.make_dataset("seeds")
+    base = _search_bench_base(8, True)
+    cfg = search.SearchConfig(**base)
+    pg, _, _ = search.run_search(data, (7, 4, 3), cfg)
+    front = deploy.export_front(pg, data, (7, 4, 3), cfg)
+    samples = 4 if smoke else 32
+    us_e2e, rep = _timeit(deploy.evaluate_robustness, front, ni,
+                          data["x_test"], data["y_test"], samples,
+                          reps=1, warmup=1)
+    report["evaluate_robustness"] = {
+        "num_designs": len(front), "samples": samples, "us": us_e2e,
+        "mean_accuracy": [d["mean_accuracy"] for d in rep["designs"]],
+        "exported_accuracy": [d["exported_accuracy"]
+                              for d in rep["designs"]]}
+    paper_tables.save("mc_robustness", report)
+    top_key = max(grid, key=lambda k: grid[k]["oracle_instance_evals_per_s"])
+    top = grid[top_key]
+    d = report["dispatch"]
+    return (top["oracle_us"] if d["path"] == "oracle" else top["kernel_us"],
+            f"{top_key}: oracle "
+            f"{top['oracle_instance_evals_per_s']:.0f} evals/s, kernel "
+            f"{top['kernel_instance_evals_per_s']:.0f} "
+            f"(dispatch={d['path']}[interpret={d['interpret']}]); "
+            f"e2e D={len(front)} S={samples} {us_e2e / 1e6:.2f}s")
+
+
 def bench_serve_classifier(smoke=False):
     """Fused multi-design serving engine (DESIGN.md §8): searches + exports
     a small Pareto front, then measures (a) raw fused-bank throughput vs
@@ -339,6 +413,7 @@ def main() -> None:
         ("search_adc", lambda: bench_search_adc(smoke=smoke)),
         ("search_adc_sharded", lambda: bench_search_adc_sharded(smoke=smoke)),
         ("serve_classifier", lambda: bench_serve_classifier(smoke=smoke)),
+        ("mc_robustness", lambda: bench_mc_robustness(smoke=smoke)),
         ("lm_train_step_smoke", bench_lm_train_step),
         ("roofline_summary", bench_roofline_summary),
     ]

@@ -50,3 +50,21 @@ served = bank.accuracies(data["x_test"], data["y_test"])
 print(f"\nsearched {len(front)} Pareto designs; served accuracies "
       f"{served.round(3)} == search fitness "
       f"{np.array_equal(np.sort(served), np.sort(front.accuracies))}")
+
+# 6. how robust are those designs on REAL (non-ideal) hardware? Sweep the
+#    per-comparator offset sigma with Monte-Carlo instances of each
+#    design (stuck-at faults + ladder drift ride along in NonIdealSpec);
+#    sigma=0 reproduces the exported accuracies bit-for-bit (DESIGN §10)
+sigmas = [0.0, 0.5, 1.0, 2.0]
+curve = api.robustness_curve(bank, data["x_test"], data["y_test"], sigmas,
+                             samples=16,
+                             base=api.NonIdealSpec(fault_rate=0.01))
+print("\naccuracy vs comparator-offset sigma (mean over 16 MC instances,"
+      " 1% stuck-at faults):")
+for s, means in zip(sigmas, curve["mean_accuracy"]):
+    bar = "#" * int(40 * float(np.mean(means)))
+    print(f"  sigma={s:3.1f} LSB  mean-acc={np.mean(means):.3f}  {bar}")
+ideal = api.evaluate_robustness(bank, api.NonIdealSpec(), data["x_test"],
+                                data["y_test"], samples=4)
+print(f"all-zero NonIdealSpec reproduces exported accuracy bit-for-bit: "
+      f"{[d['mean_accuracy'] for d in ideal['designs']] == [d.accuracy for d in bank.designs]}")

@@ -13,6 +13,10 @@ fused multi-design serving — behind four verbs and one spec object::
     api.save_front("/tmp/front", bank)
     bank = api.load_front("/tmp/front")               # bit-for-bit restore
 
+    ni = api.NonIdealSpec(sigma_offset=0.5, fault_rate=0.01)
+    rep = api.evaluate_robustness(bank, ni, x, y)     # MC yield report
+    api.robustness_curve(bank, x, y, [0, 0.5, 1.0])   # accuracy vs sigma
+
 Everything here is a thin composition of the subsystem modules
 (core/search, core/deploy, kernels/dispatch) — no logic of its own — so
 the bit-for-bit search -> export -> load -> serve parity contract
@@ -30,6 +34,7 @@ import numpy as np
 from repro.core import deploy as _deploy
 from repro.core import search as _search
 from repro.core.deploy import DeployedClassifier
+from repro.core.nonideal import NonIdealSpec
 from repro.core.search import SearchConfig
 from repro.core.spec import AdcSpec
 
@@ -38,10 +43,13 @@ __all__ = [
     "Bank",
     "DeployedClassifier",
     "Front",
+    "NonIdealSpec",
     "SearchConfig",
     "deploy",
+    "evaluate_robustness",
     "load_front",
     "quantize",
+    "robustness_curve",
     "save_front",
     "search",
     "serve",
@@ -102,6 +110,13 @@ class Bank:
         fitness) accuracies (the DESIGN.md §8 contract)."""
         return _deploy.served_accuracies(self.designs, x, y, mesh=mesh,
                                          interpret=interpret)
+
+    def evaluate_robustness(self, nonideal: NonIdealSpec, x, y,
+                            samples: int = 32, **kw) -> Dict:
+        """Monte-Carlo yield/accuracy report of the whole bank under
+        ``nonideal`` hardware (module-level ``evaluate_robustness``)."""
+        return _deploy.evaluate_robustness(self.designs, nonideal, x, y,
+                                           samples, **kw)
 
 
 def search(spec: AdcSpec, data: Dict, sizes: Optional[Sequence[int]] = None,
@@ -172,6 +187,33 @@ def load_front(directory) -> Bank:
     """Inverse of ``save_front`` — the reloaded bank serves bit-for-bit
     identically to the one exported."""
     return Bank(designs=tuple(_deploy.load_front(directory)))
+
+
+def evaluate_robustness(bank: Union[Bank, Sequence[DeployedClassifier]],
+                        nonideal: NonIdealSpec, x, y, samples: int = 32,
+                        **kw) -> Dict:
+    """Monte-Carlo robustness of a deployed bank under non-ideal hardware
+    (DESIGN.md §10): S perturbed instances of every design — comparator
+    offsets, reference-ladder drift, stuck-at faults per ``nonideal`` —
+    against the shared (x, y) test set through the MC kernel family.
+    Returns the per-design yield/accuracy report; with an all-zero
+    ``NonIdealSpec`` it reproduces the exported accuracies bit-for-bit,
+    and for a 3-objective search it reproduces the robustness fitness
+    column from the same ``NonIdealSpec`` exactly."""
+    designs = bank.designs if isinstance(bank, Bank) else tuple(bank)
+    return _deploy.evaluate_robustness(list(designs), nonideal, x, y,
+                                       samples, **kw)
+
+
+def robustness_curve(bank: Union[Bank, Sequence[DeployedClassifier]], x, y,
+                     sigmas: Sequence[float], samples: int = 32,
+                     **kw) -> Dict:
+    """Accuracy-vs-sigma sweep over comparator-offset sigmas: one
+    ``evaluate_robustness`` report per point (persist with
+    ``repro.core.deploy.save_robustness`` next to the front)."""
+    designs = bank.designs if isinstance(bank, Bank) else tuple(bank)
+    return _deploy.robustness_curve(list(designs), x, y, sigmas, samples,
+                                    **kw)
 
 
 def quantize(x, mask, spec: AdcSpec, *, interpret: Optional[bool] = None):

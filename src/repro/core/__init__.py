@@ -1,5 +1,6 @@
 """The paper's primary contribution: binary-search ADC design + in-training
 level-pruning optimization (NSGA-II x QAT). See DESIGN.md §1-2; the
 ``spec.AdcSpec`` design-point object and the ``repro.api`` facade are
-DESIGN.md §9."""
-from repro.core import adc, area, nsga2, qat, search, spec  # noqa: F401
+DESIGN.md §9; the ``nonideal.NonIdealSpec`` hardware non-ideality model
+(Monte-Carlo fault/variation injection) is DESIGN.md §10."""
+from repro.core import adc, area, nonideal, nsga2, qat, search, spec  # noqa: F401

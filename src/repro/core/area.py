@@ -125,7 +125,21 @@ def pruned_flash_tc(mask: np.ndarray) -> int:
 
 
 def pruned_baseline_tc(mask: np.ndarray) -> int:
-    """Baseline binary design pruned with rules r1/r2/r4."""
+    """Baseline binary design (Fig. 2a) pruned with rules r1/r2/r4,
+    calibrated so the full mask reproduces ``baseline_binary_tc`` exactly
+    (the full design has: one comparator + one NOT per stage, 2^(N-1) AND
+    control terms, 2^N - 2 switching transistors):
+
+    * a stage survives iff some comparison is still needed at its depth
+      (r2/r3 — its comparator and NOT go with it);
+    * an AND control term survives iff its deepest-stage node still
+      compares (r4 — one term per needed leaf-pair node);
+    * switching transistors follow the kept levels (r1 — the full
+      network's 2^N - 2 prorated as kept - 2).
+
+    Every term is monotone in the mask, so pruning more levels never
+    increases the count and no pruned baseline exceeds the full design
+    (tests/test_area.py property coverage)."""
     mask = np.asarray(mask).astype(bool)
     kept = int(mask.sum())
     if kept <= 1:
@@ -138,8 +152,8 @@ def pruned_baseline_tc(mask: np.ndarray) -> int:
             continue
         tc += COMPARATOR_TC                           # per live stage
         tc += INVERTER_TC * (1 if d < bits - 1 else 0)
-        tc += AND_TC * min(2 * cnt, 2 ** d)           # r4: surviving ANDs
-        tc += max(2 * cnt - 2, 0)                     # switching transistors
+    tc += AND_TC * needed[bits - 1]                   # r4: surviving ANDs
+    tc += max(kept - 2, 0)                            # r1: switching trans
     return tc
 
 

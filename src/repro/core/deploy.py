@@ -35,6 +35,8 @@ import numpy as np
 
 from repro.checkpoint.manager import CheckpointManager, pack_json, unpack_json
 from repro.core import area, qat
+from repro.core import nonideal as nonideal_lib
+from repro.core.nonideal import NonIdealSpec
 from repro.core.spec import AdcSpec, Range
 from repro.core.search import SearchConfig, train_pareto_front
 from repro.kernels import ops
@@ -267,3 +269,190 @@ def _jnp_mean_acc(correct: np.ndarray) -> np.ndarray:
     break the bit-for-bit round-trip contract."""
     import jax.numpy as jnp
     return np.asarray(jnp.mean(jnp.asarray(correct), axis=-1))
+
+
+# -------------------------------------------------- robustness (DESIGN §10)
+def _stacked_model_params(designs: Sequence[DeployedClassifier]):
+    """The front's baked weights re-assembled as the model family's params
+    pytree with a leading design axis — the exact structure
+    models.{mlp,svm}.accuracy consumes, so the Monte-Carlo accuracy path
+    below is op-for-op the in-search robustness objective
+    (search._mc_accuracy_fn) evaluated on the exported numbers. The
+    stacking itself is ``bank_arrays``' (one site owns the weight-leaf
+    layout); this only regroups the flat leaves into params."""
+    import jax.numpy as jnp
+    w = tuple(jnp.asarray(a) for a in bank_arrays(designs)[1])
+    if designs[0].kind == "svm":
+        return (w[0], w[1])
+    return [(w[0], w[1]), (w[2], w[3])]
+
+
+def _mc_instance_accuracies(designs: Sequence[DeployedClassifier],
+                            nonideal: NonIdealSpec, x, y, *,
+                            draws: Optional[nonideal_lib.Draws] = None,
+                            samples: Optional[int] = None,
+                            interpret: Optional[bool] = None) -> np.ndarray:
+    """(D, S) per-design, per-MC-instance test accuracies of a deployed
+    front under ``nonideal`` — the shared core of ``evaluate_robustness``
+    and the non-ideal serving path. The perturbed views come from the MC
+    population entry (one (D, S, M/bm) launch); each view is re-scored by
+    the design's baked classifier with the same vmap structure (design
+    axis outer, instance axis inner) as the in-search objective, keeping
+    the search -> deploy robustness numbers bit-for-bit reproducible."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.kernels import dispatch
+    from repro.models import mlp as mlp_lib
+    from repro.models import svm as svm_lib
+    d0 = designs[0]
+    spec = d0.spec
+    masks = jnp.stack([jnp.asarray(d.mask, jnp.int32) for d in designs])
+    if draws is None:
+        draws = nonideal_lib.draw(spec.bits, masks.shape[1],
+                                  samples if samples else 32, nonideal)
+    mc = nonideal_lib.mc_operands(spec, nonideal, masks, draws=draws)
+    xj = jnp.asarray(np.asarray(x, np.float32))
+    yj = jnp.asarray(np.asarray(y))
+    xq_mc = dispatch.dispatch("mc_eval_population", xj, *mc, spec=spec,
+                              interpret=interpret)       # (D, S, M, C)
+    acc = svm_lib.accuracy if d0.kind == "svm" else mlp_lib.accuracy
+    # dp=None: the baked weights are already po2/fixed-quantized at
+    # export; re-quantization would be a no-op by construction and the
+    # in-graph path was only ever there for traced search-time dp
+    per_design = lambda p, xq_s: jax.vmap(lambda xq: acc(p, xq, yj))(xq_s)
+    return np.asarray(jax.vmap(per_design)(_stacked_model_params(designs),
+                                           xq_mc))
+
+
+def evaluate_robustness(designs: Sequence[DeployedClassifier],
+                        nonideal: NonIdealSpec, x, y, samples: int = 32, *,
+                        draws: Optional[nonideal_lib.Draws] = None,
+                        yield_margins: Tuple[float, ...] = (0.01, 0.05),
+                        interpret: Optional[bool] = None) -> Dict:
+    """Monte-Carlo robustness report for a deployed front: S perturbed
+    hardware instances of every design against the shared (x, y) test
+    set, through the MC kernel family (DESIGN.md §10).
+
+    Returns a JSON-able report: per design the exported (ideal) accuracy,
+    mean/worst/std over instances, the two search objectives
+    (``expected`` accuracy drop, ``worst``-case error — the identical
+    host-side f64 reductions as core/search applies to the identical
+    per-instance accuracies, so a 3-objective front's robustness fitness
+    column is reproduced *bit-for-bit* from the same ``NonIdealSpec``),
+    the per-instance accuracies, and the *yield*: the fraction of
+    instances within each ``yield_margins`` accuracy drop of the exported
+    value (the arXiv:2602.10790 question — how many manufactured devices
+    still classify acceptably)."""
+    designs = list(designs)
+    mc_accs = _mc_instance_accuracies(designs, nonideal, x, y, draws=draws,
+                                      samples=samples, interpret=interpret)
+    exported = np.array([d.accuracy for d in designs])
+    expected = nonideal_lib.robust_objective(exported, mc_accs, "expected")
+    worst = nonideal_lib.robust_objective(exported, mc_accs, "worst")
+    means = nonideal_lib.mc_mean_accuracy(mc_accs)
+    rows = []
+    for i, d in enumerate(designs):
+        inst = mc_accs[i]
+        rows.append({
+            "exported_accuracy": float(d.accuracy),
+            "area_tc": int(d.area_tc),
+            "mean_accuracy": float(means[i]),
+            "worst_accuracy": float(inst.min()),
+            "std_accuracy": float(np.asarray(inst, np.float64).std()),
+            "expected_drop": float(expected[i]),
+            "worst_case_error": float(worst[i]),
+            "yield": {f"{m:g}": float(np.mean(
+                inst >= d.accuracy - m)) for m in yield_margins},
+            "instance_accuracies": [float(a) for a in inst],
+        })
+    return {"nonideal": nonideal.to_meta(), "samples": int(mc_accs.shape[1]),
+            "kind": designs[0].kind, "num_designs": len(designs),
+            "designs": rows}
+
+
+def robustness_curve(designs: Sequence[DeployedClassifier], x, y,
+                     sigmas: Sequence[float], samples: int = 32, *,
+                     base: Optional[NonIdealSpec] = None,
+                     interpret: Optional[bool] = None) -> Dict:
+    """Accuracy-vs-sigma sweep: one ``evaluate_robustness`` report per
+    comparator-offset sigma (other knobs from ``base``), the artifact the
+    paper-style robustness figure plots. The sigma=0 point reproduces the
+    exported accuracies bit-for-bit (the ideal-limit contract)."""
+    base = base if base is not None else NonIdealSpec()
+    points = []
+    for s in sigmas:
+        rep = evaluate_robustness(designs, base.replace(sigma_offset=s), x,
+                                  y, samples, interpret=interpret)
+        points.append(rep)
+    return {"sigma_offset": [float(s) for s in sigmas],
+            "samples": samples, "base": base.to_meta(),
+            "mean_accuracy": [[d["mean_accuracy"] for d in p["designs"]]
+                              for p in points],
+            "points": points}
+
+
+def save_robustness(directory, report: Dict) -> None:
+    """Persist a robustness report/curve next to the front artifact
+    (``<front-dir>/robustness.json`` — the front leaves stay under the
+    CheckpointManager step layout, the report is plain JSON)."""
+    import json
+    from pathlib import Path
+    path = Path(directory)
+    path.mkdir(parents=True, exist_ok=True)
+    with open(path / "robustness.json", "w") as f:
+        json.dump(report, f, indent=1)
+
+
+def load_robustness(directory) -> Dict:
+    import json
+    from pathlib import Path
+    with open(Path(directory) / "robustness.json") as f:
+        return json.load(f)
+
+
+def make_nonideal_bank_fn(designs: Sequence[DeployedClassifier],
+                          nonideal: NonIdealSpec, *, instance: int = 0,
+                          samples: Optional[int] = None,
+                          interpret: Optional[bool] = None):
+    """One jitted bank call serving through a *sampled non-ideal hardware
+    instance*: (M, C) samples -> (D, M, O) logits, the degraded twin of
+    ``make_bank_fn`` — what launch/serve_classifier drives to demonstrate
+    live accuracy degradation. The instance's interval tables and drifted
+    rows are baked into the closure (built once, device-resident).
+
+    ``samples`` names the MC stream the ``instance`` index refers to:
+    JAX PRNG bits depend on the drawn array's total size, so instance
+    ``k`` of an S-sample ``evaluate_robustness`` report is reproduced
+    only by drawing the same S-sample stream and slicing it — pass the
+    report's ``samples`` to serve exactly the instance whose accuracy
+    the report lists. Default (None) draws a minimal
+    ``instance + 1``-sample stream (a valid sampled instance, but NOT
+    row ``instance`` of some larger report)."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.kernels import dispatch
+    from repro.models import mlp as mlp_lib
+    from repro.models import svm as svm_lib
+    designs = list(designs)
+    d0 = designs[0]
+    spec = d0.spec
+    masks = jnp.stack([jnp.asarray(d.mask, jnp.int32) for d in designs])
+    if samples is None:
+        samples = instance + 1
+    if not 0 <= instance < samples:
+        raise ValueError(f"instance {instance} outside the "
+                         f"{samples}-sample MC stream")
+    draws = nonideal_lib.draw(spec.bits, masks.shape[1], samples, nonideal)
+    one = nonideal_lib.Draws(*(a[instance:instance + 1] for a in draws))
+    mc = nonideal_lib.mc_operands(spec, nonideal, masks, draws=one)
+    params = _stacked_model_params(designs)
+    apply = svm_lib.apply_svm if d0.kind == "svm" else mlp_lib.apply_mlp
+
+    def fn(xb):
+        xq = dispatch.dispatch("mc_eval_population", xb, *mc, spec=spec,
+                               interpret=interpret)      # (D, 1, M, C)
+        return jax.vmap(lambda p, xq_d: apply(p, xq_d[0]))(params, xq)
+
+    return jax.jit(fn)

@@ -40,6 +40,8 @@ from jax.sharding import PartitionSpec
 
 from repro import compat
 from repro.core import adc, area, nsga2
+from repro.core import nonideal as nonideal_lib
+from repro.core.nonideal import NonIdealSpec
 from repro.core.spec import AdcSpec, Range, normalize_range
 from repro.distributed import sharding as sharding_lib
 from repro.kernels import ops
@@ -66,10 +68,29 @@ class SearchConfig:
     # normalized to hashable form so the config stays a valid static jit arg
     vmin: Range = 0.0
     vmax: Range = 1.0
+    # robustness-aware co-search (DESIGN.md §10): with a NonIdealSpec and
+    # mc_samples > 0 the fitness grows a third minimized column —
+    # 'expected' accuracy drop or 'worst'-case error over the MC instances
+    nonideal: Optional[NonIdealSpec] = None
+    mc_samples: int = 0
+    robust_objective: str = "expected"
 
     def __post_init__(self):
         object.__setattr__(self, "vmin", normalize_range(self.vmin))
         object.__setattr__(self, "vmax", normalize_range(self.vmax))
+        nonideal_lib.robust_objective_name(self.robust_objective)
+        if self.mc_samples < 0:
+            raise ValueError(f"mc_samples must be >= 0, got "
+                             f"{self.mc_samples}")
+
+    @property
+    def wants_robustness(self) -> bool:
+        """True when the search optimizes the third (robustness) objective."""
+        return self.nonideal is not None and self.mc_samples > 0
+
+    @property
+    def n_objectives(self) -> int:
+        return 3 if self.wants_robustness else 2
 
     @property
     def adc_spec(self) -> AdcSpec:
@@ -171,10 +192,13 @@ def _train_from_quantized(xq_tr, xq_te, y_tr, y_te, dp, params, opt,
     return acc_of(params)
 
 
-def _train_eval_one(genome, data, sizes, cfg: SearchConfig):
+def _train_eval_one(genome, data, sizes, cfg: SearchConfig,
+                    draws: Optional[nonideal_lib.Draws] = None):
     """QAT one individual end-to-end (decode -> quantize -> train). The
     paper-faithful sequential path; also the per-individual parity oracle
-    for the batched engine."""
+    for the batched engine. With a robustness-enabled config and
+    ``draws`` returns ``(accuracy, (S,) per-instance MC accuracies)`` —
+    the single-design MC entry standing in for the population launch."""
     channels = sizes[0]
     mask, dp = decode_genome(genome, channels, cfg.bits, cfg.min_levels)
     # ste=False: inputs are data, no gradient flows to them, and skipping
@@ -187,17 +211,47 @@ def _train_eval_one(genome, data, sizes, cfg: SearchConfig):
                              vmin=cfg.vmin, vmax=cfg.vmax,
                              mode=cfg.mode, ste=False)
     params, opt = _init_model(sizes, cfg)
-    return _train_from_quantized(xq_tr, xq_te, data["y_train"], data["y_test"],
-                                 dp, params, opt, sizes, cfg)
+    robust = cfg.wants_robustness and draws is not None
+    out = _train_from_quantized(xq_tr, xq_te, data["y_train"],
+                                data["y_test"], dp, params, opt, sizes,
+                                cfg, return_params=robust)
+    if not robust:
+        return out
+    acc, trained = out
+    xq_mc = nonideal_lib.mc_quantize(data["x_test"], mask, cfg.adc_spec,
+                                     cfg.nonideal, draws=draws)
+    return acc, _mc_accuracy_fn(data, cfg)(trained, dp, xq_mc)   # (S,)
+
+
+def _mc_accuracy_fn(data: Dict, cfg: SearchConfig):
+    """Per-individual MC accuracy: (trained params, dp, xq (S, M, C)) ->
+    (S,) test accuracies — the same model-accuracy op as the ideal
+    fitness, vmapped over the MC instance axis."""
+    from repro.models import svm as svm_lib
+    acc = svm_lib.accuracy if cfg.model == "svm" else mlp_lib.accuracy
+
+    def fn(params, dp, xq_s):
+        one = lambda xq: acc(params, xq, data["y_test"], dp,
+                             cfg.weight_bits)
+        return jax.vmap(one)(xq_s)
+
+    return fn
 
 
 def _train_and_score(genomes: jnp.ndarray, params0, opt0, data: Dict,
                      sizes: Tuple[int, ...], cfg: SearchConfig,
-                     return_params: bool = False) -> jnp.ndarray:
-    """(P, G) genomes -> (P,) test accuracies as ONE compiled program
-    (``return_params=True`` additionally yields the trained parameter
-    stacks, each leaf (P, ...) — the raw material of a deployment export,
-    core/deploy.py).
+                     return_params: bool = False,
+                     draws: Optional[nonideal_lib.Draws] = None) -> Dict:
+    """(P, G) genomes -> ``{'acc': (P,) test accuracies}`` as ONE compiled
+    program; ``return_params=True`` adds the trained parameter stacks
+    under ``'params'`` (each leaf (P, ...) — the raw material of a
+    deployment export, core/deploy.py); a robustness-enabled config plus
+    ``draws`` adds ``'mc_accs'``, the raw (P, S) per-instance MC
+    accuracies: the MC population kernel pushes the shared test batch
+    through ``cfg.mc_samples`` perturbed instances of every individual's
+    ADC (one (P, S, M/bm) launch) and the trained models re-score each
+    perturbed view (DESIGN.md §10); callers reduce the third fitness
+    column host-side via ``nonideal.robust_objective``.
 
     The population's initial parameter and optimizer buffers (``params0``,
     ``opt0``, stacked over P) are donated: XLA reuses their memory for the
@@ -210,10 +264,29 @@ def _train_and_score(genomes: jnp.ndarray, params0, opt0, data: Dict,
     spec = cfg.adc_spec
     xq_tr = ops.adc_quantize_population(data["x_train"], masks, spec=spec)
     xq_te = ops.adc_quantize_population(data["x_test"], masks, spec=spec)
+    robust = cfg.wants_robustness and draws is not None
+    want_params = return_params or robust
     fn = lambda xtr, xte, dp, p, o: _train_from_quantized(
         xtr, xte, data["y_train"], data["y_test"], dp, p, o, sizes, cfg,
-        return_params)
-    return jax.vmap(fn)(xq_tr, xq_te, dps, params0, opt0)
+        want_params)
+    out = jax.vmap(fn)(xq_tr, xq_te, dps, params0, opt0)
+    accs, params = out if want_params else (out, None)
+    result = {"acc": accs}
+    if robust:
+        from repro.kernels import dispatch
+        mc = nonideal_lib.mc_operands(spec, cfg.nonideal, masks,
+                                      draws=draws)
+        xq_mc = dispatch.dispatch("mc_eval_population", data["x_test"],
+                                  *mc, spec=spec)          # (P, S, M, C)
+        # per-instance accuracies leave the compiled program raw; the
+        # objective reduction happens host-side in f64
+        # (nonideal.robust_objective) so the search fitness and
+        # deploy.evaluate_robustness agree bit-for-bit
+        result["mc_accs"] = jax.vmap(_mc_accuracy_fn(data, cfg))(
+            params, dps, xq_mc)
+    if return_params:
+        result["params"] = params
+    return result
 
 
 @functools.lru_cache(maxsize=1)
@@ -235,6 +308,21 @@ def _stacked_init(pop: int, sizes, cfg: SearchConfig):
             jax.tree_util.tree_map(tile, opt))
 
 
+def search_draws(cfg: SearchConfig, channels: int
+                 ) -> Optional[nonideal_lib.Draws]:
+    """The search's Monte-Carlo draw block — one stream per run, fixed
+    across generations and shared across individuals (common random
+    numbers), a pure function of ``cfg.nonideal.seed``. None when the
+    config has no robustness objective. ``deploy.evaluate_robustness``
+    re-derives the identical stream from the same NonIdealSpec, which is
+    what makes the third fitness column reproducible from a deployed
+    front."""
+    if not cfg.wants_robustness:
+        return None
+    return nonideal_lib.draw(cfg.bits, channels, cfg.mc_samples,
+                             cfg.nonideal)
+
+
 def evaluate_population_acc(genomes: jnp.ndarray, data: Dict,
                             sizes: Tuple[int, ...], cfg: SearchConfig
                             ) -> jnp.ndarray:
@@ -242,7 +330,7 @@ def evaluate_population_acc(genomes: jnp.ndarray, data: Dict,
     convenience wrapper that builds the donated initial buffers itself."""
     params0, opt0 = _stacked_init(genomes.shape[0], sizes, cfg)
     return _train_and_score_jit()(jnp.asarray(genomes, jnp.uint8), params0,
-                                  opt0, data, tuple(sizes), cfg)
+                                  opt0, data, tuple(sizes), cfg)["acc"]
 
 
 def train_pareto_front(genomes: np.ndarray, data: Dict,
@@ -261,9 +349,10 @@ def train_pareto_front(genomes: np.ndarray, data: Dict,
     genomes = np.asarray(genomes, np.uint8)
     dev_data = {k: jnp.asarray(v) for k, v in data.items()}
     params0, opt0 = _stacked_init(len(genomes), sizes, cfg)
-    accs, params = _train_and_score_jit()(
+    out = _train_and_score_jit()(
         jnp.asarray(genomes), params0, opt0, dev_data, tuple(sizes), cfg,
         return_params=True)
+    accs, params = out["acc"], out["params"]
     masks, dps = decode_population(jnp.asarray(genomes), sizes[0], cfg.bits,
                                    cfg.min_levels)
     return (np.asarray(accs, np.float64), jax.device_get(params),
@@ -286,16 +375,27 @@ def population_areas(genomes: np.ndarray, channels: int, cfg: SearchConfig
 
 
 def evaluate_population(genomes: np.ndarray, data: Dict, sizes,
-                        cfg: SearchConfig) -> np.ndarray:
+                        cfg: SearchConfig,
+                        draws: Optional[nonideal_lib.Draws] = None
+                        ) -> np.ndarray:
     """Batched engine. Full fitness: [1 - accuracy, normalized ADC area]
-    (both minimized) — one donated-buffer compiled call per generation."""
+    plus, for a robustness-enabled config, the Monte-Carlo robustness
+    column (all minimized) — one donated-buffer compiled call per
+    generation."""
+    if draws is None:
+        draws = search_draws(cfg, sizes[0])
     dev_data = {k: jnp.asarray(v) for k, v in data.items()}
     params0, opt0 = _stacked_init(len(genomes), sizes, cfg)
-    accs = np.asarray(_train_and_score_jit()(
+    out = _train_and_score_jit()(
         jnp.asarray(genomes, jnp.uint8), params0, opt0, dev_data,
-        tuple(sizes), cfg))
-    return np.stack([1.0 - accs, population_areas(genomes, sizes[0], cfg)],
-                    axis=1)
+        tuple(sizes), cfg, draws=draws)
+    cols = [1.0 - np.asarray(out["acc"]),
+            population_areas(genomes, sizes[0], cfg)]
+    if "mc_accs" in out:
+        cols.append(nonideal_lib.robust_objective(
+            np.asarray(out["acc"]), np.asarray(out["mc_accs"]),
+            cfg.robust_objective))
+    return np.stack(cols, axis=1)
 
 
 # ------------------------------------------------------------ sharded engine
@@ -319,22 +419,28 @@ def _sharded_train_and_score(mesh, axes, sizes, cfg: SearchConfig):
     the initial scatter and the final fitness gather."""
     pspec = PartitionSpec(axes)
 
-    def body(genomes, params0, opt0, data):
-        return _train_and_score(genomes, params0, opt0, data, sizes, cfg)
+    def body(genomes, params0, opt0, data, draws):
+        return _train_and_score(genomes, params0, opt0, data, sizes, cfg,
+                                draws=draws)
 
     # mirror the batched engine: donate the stacked train states on
     # accelerators so each device's initial buffers alias the scan carry
-    # (XLA CPU cannot alias and would warn)
+    # (XLA CPU cannot alias and would warn). The genome/train-state
+    # population axis splits over ``axes``; the dataset AND the MC draw
+    # block replicate (common random numbers must be common across
+    # shards); every output leaf (acc, robust) carries the population
+    # axis, so the single pspec prefix covers the dict.
     donate = (1, 2) if jax.default_backend() != "cpu" else ()
     return jax.jit(compat.shard_map(
         body, mesh=mesh,
-        in_specs=(pspec, pspec, pspec, PartitionSpec()),
+        in_specs=(pspec, pspec, pspec, PartitionSpec(), PartitionSpec()),
         out_specs=pspec, check_vma=False), donate_argnums=donate)
 
 
 def evaluate_population_sharded(genomes: np.ndarray, data: Dict, sizes,
                                 cfg: SearchConfig,
-                                mesh: Optional[jax.sharding.Mesh] = None
+                                mesh: Optional[jax.sharding.Mesh] = None,
+                                draws: Optional[nonideal_lib.Draws] = None
                                 ) -> np.ndarray:
     """Device-sharded engine: same fitness contract as
     ``evaluate_population`` with the population partitioned P/D per
@@ -344,52 +450,75 @@ def evaluate_population_sharded(genomes: np.ndarray, data: Dict, sizes,
     mesh = default_search_mesh() if mesh is None else mesh
     axes = sharding_lib.population_axes(mesh, len(genomes))
     if axes is None:
-        return evaluate_population(genomes, data, sizes, cfg)
+        return evaluate_population(genomes, data, sizes, cfg, draws=draws)
+    if draws is None:
+        draws = search_draws(cfg, sizes[0])
     dev_data = {k: jnp.asarray(v) for k, v in data.items()}
     params0, opt0 = _stacked_init(len(genomes), sizes, cfg)
     fn = _sharded_train_and_score(mesh, axes, tuple(sizes), cfg)
-    accs = np.asarray(fn(jnp.asarray(genomes, jnp.uint8), params0, opt0,
-                         dev_data))
-    return np.stack([1.0 - accs, population_areas(genomes, sizes[0], cfg)],
-                    axis=1)
+    out = fn(jnp.asarray(genomes, jnp.uint8), params0, opt0, dev_data,
+             draws)
+    cols = [1.0 - np.asarray(out["acc"]),
+            population_areas(genomes, sizes[0], cfg)]
+    if "mc_accs" in out:
+        cols.append(nonideal_lib.robust_objective(
+            np.asarray(out["acc"]), np.asarray(out["mc_accs"]),
+            cfg.robust_objective))
+    return np.stack(cols, axis=1)
 
 
 @functools.partial(jax.jit, static_argnames=("sizes", "cfg"))
-def _eval_one_acc(genome, data, sizes, cfg: SearchConfig):
-    return _train_eval_one(genome, data, sizes, cfg)
+def _eval_one_acc(genome, data, sizes, cfg: SearchConfig, draws=None):
+    return _train_eval_one(genome, data, sizes, cfg, draws=draws)
 
 
 def evaluate_population_reference(genomes: np.ndarray, data: Dict, sizes,
-                                  cfg: SearchConfig) -> np.ndarray:
+                                  cfg: SearchConfig,
+                                  draws: Optional[nonideal_lib.Draws] = None
+                                  ) -> np.ndarray:
     """Per-individual reference path (the paper's pymoo-style loop): same
-    fitness as ``evaluate_population``, one compiled QAT per individual."""
+    fitness as ``evaluate_population`` — robustness column included for a
+    robustness-enabled config — one compiled QAT per individual."""
+    if draws is None:
+        draws = search_draws(cfg, sizes[0])
     dev_data = {k: jnp.asarray(v) for k, v in data.items()}
-    accs = np.array([
-        float(_eval_one_acc(jnp.asarray(g, jnp.uint8), dev_data,
-                            tuple(sizes), cfg))
-        for g in genomes])
-    return np.stack([1.0 - accs, population_areas(genomes, sizes[0], cfg)],
-                    axis=1)
+    rows = [_eval_one_acc(jnp.asarray(g, jnp.uint8), dev_data,
+                          tuple(sizes), cfg, draws=draws)
+            for g in genomes]
+    areas = population_areas(genomes, sizes[0], cfg)
+    if cfg.wants_robustness:
+        accs = np.array([float(a) for a, _ in rows])
+        mc_accs = np.stack([np.asarray(m) for _, m in rows])
+        robust = nonideal_lib.robust_objective(accs, mc_accs,
+                                               cfg.robust_objective)
+        return np.stack([1.0 - accs, areas, robust], axis=1)
+    accs = np.array([float(a) for a in rows])
+    return np.stack([1.0 - accs, areas], axis=1)
 
 
 def make_eval_fn(data: Dict, sizes, cfg: SearchConfig,
                  mesh: Optional[jax.sharding.Mesh] = None
                  ) -> Callable[[np.ndarray], np.ndarray]:
-    """The (P, G) -> (P, 2) fitness function ``nsga2.evolve`` consumes,
-    dispatched on ``cfg.engine``. The dataset moves host->device once
-    here, not once per generation (``jnp.asarray`` downstream no-ops on
-    the device copies)."""
+    """The (P, G) -> (P, n_objectives) fitness function ``nsga2.evolve``
+    consumes, dispatched on ``cfg.engine``. The dataset moves
+    host->device once here, not once per generation (``jnp.asarray``
+    downstream no-ops on the device copies); so does the MC draw block of
+    a robustness-enabled config (one stream for the whole run — fixed
+    instances across generations keep the third objective a
+    deterministic function of the genome)."""
     dev_data = {k: jnp.asarray(v) for k, v in data.items()}
+    draws = search_draws(cfg, sizes[0])
     if cfg.engine == "reference":
-        return lambda pop: evaluate_population_reference(pop, dev_data,
-                                                         sizes, cfg)
+        return lambda pop: evaluate_population_reference(
+            pop, dev_data, sizes, cfg, draws=draws)
     if cfg.engine == "sharded":
         m = default_search_mesh() if mesh is None else mesh
-        return lambda pop: evaluate_population_sharded(pop, dev_data, sizes,
-                                                       cfg, mesh=m)
+        return lambda pop: evaluate_population_sharded(
+            pop, dev_data, sizes, cfg, mesh=m, draws=draws)
     if cfg.engine != "batched":
         raise ValueError(f"unknown engine {cfg.engine!r}")
-    return lambda pop: evaluate_population(pop, dev_data, sizes, cfg)
+    return lambda pop: evaluate_population(pop, dev_data, sizes, cfg,
+                                           draws=draws)
 
 
 # --------------------------------------------------- search-state checkpoint
@@ -407,13 +536,15 @@ def search_state_tree(state: nsga2.EvolveState) -> Dict[str, np.ndarray]:
     }
 
 
-def restore_search_state(ckpt, step: int, pop_size: int, glen: int
-                         ) -> nsga2.EvolveState:
+def restore_search_state(ckpt, step: int, pop_size: int, glen: int,
+                         n_obj: int = 2) -> nsga2.EvolveState:
     """Inverse of ``search_state_tree``. host=True keeps float64 fitness
-    and the exact RNG words (device_put would canonicalize to f32)."""
+    and the exact RNG words (device_put would canonicalize to f32).
+    ``n_obj`` is the fitness width the config implies (3 for a
+    robustness-enabled search)."""
     from repro.checkpoint import manager
     like = {"genomes": np.zeros((pop_size, glen), np.uint8),
-            "fitness": np.zeros((pop_size, 2), np.float64),
+            "fitness": np.zeros((pop_size, n_obj), np.float64),
             "rng_state": np.zeros(1, np.uint8),
             "generation": np.zeros((), np.int64)}
     tree = ckpt.restore(step, like, host=True)
@@ -455,7 +586,8 @@ def run_search(data: Dict, sizes, cfg: SearchConfig,
     if ckpt is not None and resume:
         step = ckpt.latest_step()
         if step is not None:
-            state = restore_search_state(ckpt, step, cfg.pop_size, G)
+            state = restore_search_state(ckpt, step, cfg.pop_size, G,
+                                         n_obj=cfg.n_objectives)
     on_gen = None
     if ckpt is not None:
         # blocking: the state is a few KB and the atomic-commit rename must

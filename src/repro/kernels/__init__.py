@@ -9,6 +9,11 @@ at TPU v5e VMEM/MXU):
                      ranges ride as VMEM range rows).
   qmlp             — fused ADC + printed-MLP/SVM forward (serving path of
                      the paper's classifier system).
+  mc_eval          — Monte-Carlo non-ideal ADC evaluation: S perturbed
+                     hardware instances (comparator offset / ladder
+                     drift / stuck-at faults compiled to per-instance
+                     interval tables, core/nonideal.py) per launch on an
+                     (S, M/bm) or population (P, S, M/bm) grid.
   flash_attention  — online-softmax attention with VMEM scratch; the
                      §Perf-identified lever for prefill/train score traffic
                      at LM scale.

@@ -42,6 +42,8 @@ from typing import Callable, Dict, Optional, Tuple
 from repro.kernels import envelope, ref
 from repro.kernels.adc_quantize import (adc_quantize_pallas,
                                         adc_quantize_pallas_population)
+from repro.kernels.mc_eval import (mc_adc_eval_pallas,
+                                   mc_adc_eval_pallas_population)
 from repro.kernels.qmlp import (bespoke_mlp_bank_pallas, bespoke_mlp_pallas,
                                 bespoke_svm_bank_pallas, bespoke_svm_pallas)
 
@@ -235,6 +237,28 @@ register(KernelEntry(
         x, t, bits=spec.bits, vmin=spec.vmin, vmax=spec.vmax,
         interpret=interpret),
     sharded_axes=_population_axes,
+))
+
+# Monte-Carlo non-ideality entries (DESIGN.md §10): tables is the lb
+# interval table; ub/values/lo/scale ride as the remaining operands
+# (core/nonideal.mc_operands builds them in exactly this order). The
+# spec's role here is resolution only (bits/channels envelope) — the
+# non-ideal code math is fully baked into the operands.
+register(KernelEntry(
+    name="mc_eval",
+    oracle=lambda x, lb, ub, v, lo, sc, *, spec: ref.mc_adc_eval_ref(
+        x, lb, ub, v, lo, sc),
+    kernel=lambda x, lb, ub, v, lo, sc, *, spec, interpret:
+        mc_adc_eval_pallas(x, lb, ub, v, lo, sc, interpret=interpret),
+))
+
+register(KernelEntry(
+    name="mc_eval_population",
+    oracle=lambda x, lb, ub, v, lo, sc, *, spec:
+        ref.mc_adc_eval_ref_population(x, lb, ub, v, lo, sc),
+    kernel=lambda x, lb, ub, v, lo, sc, *, spec, interpret:
+        mc_adc_eval_pallas_population(x, lb, ub, v, lo, sc,
+                                      interpret=interpret),
 ))
 
 register(KernelEntry(

@@ -20,6 +20,7 @@ the population/design axis — lives in ``dispatch.dispatch`` /
 """
 from __future__ import annotations
 
+import sys
 import warnings
 from typing import Optional
 
@@ -28,16 +29,29 @@ import jax.numpy as jnp
 from repro.core.spec import AdcSpec, as_spec
 from repro.kernels import dispatch
 
+# (shim name, caller filename, caller lineno) triples already warned —
+# each loose-kwarg call SITE warns exactly once per process regardless of
+# the active warnings filters (pytest's 'always' filter would otherwise
+# re-emit on every call and a hot loop would spam; python's own 'default'
+# dedup keys on the warning line, not the caller). Tests reset this set.
+_WARNED_SITES: set = set()
+
 
 def _spec_of(fn: str, spec: Optional[AdcSpec], bits, vmin, vmax, mode
              ) -> AdcSpec:
-    """spec= wins; the loose-kwarg form still works but is deprecated."""
+    """spec= wins; the loose-kwarg form still works but is deprecated
+    (removal timeline in CHANGES.md: loose kwargs drop at PR >= 6 and
+    ``spec=`` becomes required)."""
     if spec is None and bits is not None:
-        warnings.warn(
-            f"ops.{fn}(bits=..., vmin=..., vmax=..., mode=...) loose "
-            f"kwargs are deprecated; pass spec=AdcSpec(...) instead "
-            f"(see CHANGES.md for the removal timeline)",
-            DeprecationWarning, stacklevel=3)
+        caller = sys._getframe(2)
+        site = (fn, caller.f_code.co_filename, caller.f_lineno)
+        if site not in _WARNED_SITES:
+            _WARNED_SITES.add(site)
+            warnings.warn(
+                f"ops.{fn}(bits=..., vmin=..., vmax=..., mode=...) loose "
+                f"kwargs are deprecated; pass spec=AdcSpec(...) instead "
+                f"(see CHANGES.md for the removal timeline)",
+                DeprecationWarning, stacklevel=3)
     return as_spec(spec, bits=bits, vmin=vmin, vmax=vmax, mode=mode)
 
 

@@ -70,6 +70,35 @@ def adc_quantize_ref_population(x: jnp.ndarray, tables: jnp.ndarray,
     return jax.vmap(taker)(tables).astype(x.dtype)
 
 
+def mc_adc_eval_ref(x: jnp.ndarray, lb: jnp.ndarray, ub: jnp.ndarray,
+                    values: jnp.ndarray, lo: jnp.ndarray,
+                    scale: jnp.ndarray) -> jnp.ndarray:
+    """Monte-Carlo non-ideal ADC oracle (core/nonideal.py operands):
+    x (M, C) shared samples; lb/ub (S, C, 2^N) per-instance interval
+    tables in code units; values (C, 2^N) nominal reconstruction ladder;
+    lo/scale (S, C) per-instance drifted range rows. Returns (S, M, C):
+    ``out[s, m, c] = values[c, k]`` for the unique kept leaf ``k`` with
+    ``lb[s, c, k] <= (x[m, c] - lo[s, c]) * scale[s, c] < ub[s, c, k]``
+    (the perturbed pruned-tree walk; regions partition the line, so the
+    selection sum has exactly one live term and is exact)."""
+    u = (x[None, :, :] - lo[:, None, :]) * scale[:, None, :]   # (S, M, C)
+    sel = ((u[..., None] >= lb[:, None, :, :])
+           & (u[..., None] < ub[:, None, :, :]))               # (S, M, C, n)
+    return jnp.sum(jnp.where(sel, values[None, None, :, :], 0.0),
+                   axis=-1).astype(x.dtype)
+
+
+def mc_adc_eval_ref_population(x: jnp.ndarray, lb: jnp.ndarray,
+                               ub: jnp.ndarray, values: jnp.ndarray,
+                               lo: jnp.ndarray, scale: jnp.ndarray
+                               ) -> jnp.ndarray:
+    """Population-batched MC oracle: lb/ub carry a leading design axis
+    (P, S, C, 2^N); draws (values/lo/scale) are shared across designs
+    (common random numbers — core/nonideal.Draws). Returns (P, S, M, C)."""
+    fn = lambda l, u_: mc_adc_eval_ref(x, l, u_, values, lo, scale)
+    return jax.vmap(fn)(lb, ub)
+
+
 def bespoke_mlp_ref(x: jnp.ndarray, table: jnp.ndarray, bits: int,
                     w1: jnp.ndarray, b1: jnp.ndarray,
                     w2: jnp.ndarray, b2: jnp.ndarray,

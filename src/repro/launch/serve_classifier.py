@@ -21,6 +21,13 @@ distributed/sharding.design_bank_axes).
 ``--smoke`` (no --front-dir needed) searches a tiny fixed-seed front
 inline and serves it — the CI lane; every derived field except wall-clock
 is deterministic.
+
+``--nonideal-sigma/--fault-rate/--range-drift`` serve the front through
+ONE sampled non-ideal hardware instance (MC instance ``--nonideal-instance``
+of the ``--nonideal-seed`` stream, DESIGN.md §10) — the live demonstration
+of what comparator offsets and stuck-at faults do to served accuracy; the
+report prints served-vs-exported degradation per design instead of
+asserting the ideal-hardware parity contract.
 """
 from __future__ import annotations
 
@@ -49,13 +56,23 @@ def make_request_stream(x: np.ndarray, num_requests: int, request_size: int,
 
 def serve(designs: Sequence[deploy.DeployedClassifier],
           requests: Sequence[Tuple[int, np.ndarray]], batch: int, *,
-          mesh=None, interpret: Optional[bool] = None) -> Dict:
+          mesh=None, interpret: Optional[bool] = None,
+          bank_fn=None) -> Dict:
     """Drain ``requests`` through the fused bank in fixed ``batch``-row
     microbatches (continuous batching: the row stream ignores request
     boundaries; the tail pads to keep one compiled shape). Returns the
     throughput report plus per-request responses
-    ``{rid: (D, n_rows) predicted classes}``."""
-    fn = deploy.make_bank_fn(designs, mesh=mesh, interpret=interpret)
+    ``{rid: (D, n_rows) predicted classes}``. ``bank_fn`` overrides the
+    jitted (M, C) -> (D, M, O) bank closure — the non-ideal serving path
+    passes a sampled-instance bank (deploy.make_nonideal_bank_fn) built
+    once by the caller."""
+    if bank_fn is not None:
+        if mesh is not None:
+            raise ValueError("a custom bank_fn (non-ideal serving) and "
+                             "--sharded are mutually exclusive")
+        fn = bank_fn
+    else:
+        fn = deploy.make_bank_fn(designs, mesh=mesh, interpret=interpret)
     channels = designs[0].table.shape[0]
     queue = deque(requests)
     carry: Optional[Tuple[int, np.ndarray]] = None
@@ -136,6 +153,24 @@ def main(argv=None):
                     help="shard the design bank D/device over the mesh")
     ap.add_argument("--smoke", action="store_true",
                     help="tiny fixed-seed front + traffic (CI lane)")
+    ap.add_argument("--nonideal-sigma", type=float, default=0.0,
+                    help="serve through a sampled non-ideal instance: "
+                         "comparator offset sigma in LSBs")
+    ap.add_argument("--fault-rate", type=float, default=0.0,
+                    help="stuck-at-0/1 probability per comparator")
+    ap.add_argument("--range-drift", type=float, default=0.0,
+                    help="reference-ladder drift sigma (fraction of "
+                         "full scale)")
+    ap.add_argument("--nonideal-seed", type=int, default=0)
+    ap.add_argument("--nonideal-instance", type=int, default=0,
+                    help="which MC instance of the seed's stream to "
+                         "sample the served hardware from")
+    ap.add_argument("--mc-samples", type=int, default=0,
+                    help="the MC stream size --nonideal-instance indexes "
+                         "into — pass the samples count of an "
+                         "evaluate_robustness report to serve exactly "
+                         "the instance it lists (0: minimal "
+                         "instance+1-sample stream)")
     args = ap.parse_args(argv)
 
     from repro.data import tabular
@@ -162,28 +197,69 @@ def main(argv=None):
     else:
         ap.error("--front-dir is required unless --smoke is given")
 
+    nonideal = None
+    if (args.nonideal_sigma > 0 or args.fault_rate > 0
+            or args.range_drift > 0):
+        from repro.core.nonideal import NonIdealSpec
+        nonideal = NonIdealSpec(sigma_offset=args.nonideal_sigma,
+                                sigma_range=args.range_drift,
+                                fault_rate=args.fault_rate,
+                                seed=args.nonideal_seed)
+
     mesh = None
     if args.sharded:
+        if nonideal is not None:
+            ap.error("--sharded and --nonideal-* are mutually exclusive")
         from repro.core import search
         mesh = search.default_search_mesh()
     print(f"serve_classifier[D={len(designs)} {designs[0].kind} "
           f"{designs[0].spec.describe()}] dataset={args.dataset} "
-          f"devices={len(jax.devices())} sharded={args.sharded}")
+          f"devices={len(jax.devices())} sharded={args.sharded}"
+          + (f" nonideal=({nonideal.describe()} "
+             f"instance={args.nonideal_instance})" if nonideal else ""))
+
+    nonideal_fn = None
+    if nonideal is not None:
+        # built ONCE: serve() drives it for throughput and the
+        # degradation report below re-uses the same compiled closure
+        nonideal_fn = deploy.make_nonideal_bank_fn(
+            designs, nonideal, instance=args.nonideal_instance,
+            samples=args.mc_samples or None)
 
     requests = make_request_stream(data["x_test"], args.requests,
                                    args.request_size)
-    rep = serve(designs, requests, args.batch, mesh=mesh)
+    rep = serve(designs, requests, args.batch, mesh=mesh,
+                bank_fn=nonideal_fn)
     print(f"  {rep['requests']} requests ({rep['samples']} samples) in "
           f"{rep['wall_s']:.3f}s: {rep['requests_per_s']:.1f} req/s, "
           f"{rep['samples_per_s']:.0f} samples/s "
           f"({rep['batches']} batches of {rep['batch']}, "
           f"{rep['pad_fraction'] * 100:.1f}% pad)")
 
+    exported = np.array([d.accuracy for d in designs])
+    if nonideal is not None:
+        # degraded-hardware demonstration: score the sampled instance
+        # (same compiled closure serve() used) against the exported
+        # (ideal) accuracies
+        logits = np.asarray(nonideal_fn(jnp.asarray(data["x_test"],
+                                                    jnp.float32)))
+        served = deploy._jnp_mean_acc(
+            np.argmax(logits, -1) == np.asarray(data["y_test"])[None, :])
+        for i, d in enumerate(designs):
+            print(f"  design {i}: area={d.area_tc:4d}T  acc "
+                  f"exported={d.accuracy:.3f} served={served[i]:.3f} "
+                  f"(drop {d.accuracy - served[i]:+.3f})")
+        print(f"  served a sampled non-ideal instance "
+              f"({nonideal.describe()}): mean accuracy drop "
+              f"{float(np.mean(exported - served)):+.3f}")
+        rep["nonideal"] = nonideal.to_meta()
+        rep["served_accuracies"] = [float(a) for a in served]
+        return rep
+
     # round-trip parity: the served front must reproduce each design's
     # export-time accuracy bit-for-bit (the deployment contract)
     served = deploy.served_accuracies(designs, data["x_test"],
                                       data["y_test"], mesh=mesh)
-    exported = np.array([d.accuracy for d in designs])
     for i, d in enumerate(designs):
         print(f"  design {i}: area={d.area_tc:4d}T  dp={int(d.dp):+d}  "
               f"acc exported={d.accuracy:.3f} served={served[i]:.3f}")

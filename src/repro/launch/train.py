@@ -16,6 +16,17 @@ individuals/sec):
 Add ``--export-front`` to freeze the searched Pareto front into deployable
 classifier artifacts (core/deploy.py) under <ckpt-dir>/front, servable by
 ``repro.launch.serve_classifier``.
+
+Robustness-aware co-search (DESIGN.md §10): ``--mc-samples S`` with any of
+``--nonideal-sigma`` (comparator offset, LSBs), ``--fault-rate`` (stuck-at
+probability) or ``--range-drift`` (reference-ladder sigma, fraction of
+full scale) adds the third NSGA-II objective (``--robust-objective
+expected|worst``) and, with ``--export-front``, persists the Monte-Carlo
+yield report next to the front (<ckpt-dir>/front/robustness.json):
+
+  PYTHONPATH=src python -m repro.launch.train --adc-search --dataset seeds \
+      --bits 3 --pop 16 --generations 4 --mc-samples 16 \
+      --nonideal-sigma 0.5 --fault-rate 0.02 --export-front
 """
 from __future__ import annotations
 
@@ -52,6 +63,43 @@ def build(arch: str, *, smoke: bool, seq: int, batch: int, microbatches: int,
     return cfg, mesh, train_step, data
 
 
+def adc_search_config(args, channels: int):
+    """argv -> the search's (AdcSpec, SearchConfig) pair — factored out of
+    ``run_adc_search`` so the CLI parsing round trip (per-channel
+    --vmin/--vmax comma lists, non-ideality knobs) is testable without
+    running a search (tests/test_cli_roundtrip.py)."""
+    from repro.core import nonideal, search
+    from repro.core.spec import AdcSpec
+
+    adc_spec = AdcSpec(bits=args.bits, vmin=parse_range(args.vmin),
+                       vmax=parse_range(args.vmax))
+    adc_spec.validate_channels(channels)
+    ni = None
+    knobs = (args.nonideal_sigma > 0 or args.fault_rate > 0
+             or args.range_drift > 0)
+    if knobs and args.mc_samples <= 0:
+        raise ValueError(
+            "--nonideal-sigma/--fault-rate/--range-drift need "
+            "--mc-samples > 0 to take effect; refusing to silently run "
+            "an ideal-hardware search")
+    if args.mc_samples > 0 and not knobs:
+        raise ValueError(
+            "--mc-samples without any non-ideality knob "
+            "(--nonideal-sigma/--fault-rate/--range-drift) would "
+            "Monte-Carlo ideal hardware; set at least one knob > 0")
+    if knobs:
+        ni = nonideal.NonIdealSpec(sigma_offset=args.nonideal_sigma,
+                                   sigma_range=args.range_drift,
+                                   fault_rate=args.fault_rate,
+                                   seed=args.nonideal_seed)
+    cfg = search.SearchConfig.for_spec(
+        adc_spec, pop_size=args.pop, generations=args.generations,
+        train_steps=args.train_steps, engine=args.engine,
+        nonideal=ni, mc_samples=args.mc_samples if ni else 0,
+        robust_objective=args.robust_objective)
+    return adc_spec, cfg
+
+
 def run_adc_search(args):
     """Drive the population-batched/sharded in-training ADC search: one
     compiled train-and-score call per generation, timed via the evolve log
@@ -61,18 +109,12 @@ def run_adc_search(args):
     from pathlib import Path
 
     from repro.core import area, search
-    from repro.core.spec import AdcSpec
     from repro.data import tabular
 
     spec = tabular.SPECS[args.dataset]
     data = tabular.make_dataset(args.dataset)
     sizes = (spec.features, spec.hidden, spec.classes)
-    adc_spec = AdcSpec(bits=args.bits, vmin=parse_range(args.vmin),
-                       vmax=parse_range(args.vmax))
-    adc_spec.validate_channels(spec.features)
-    cfg = search.SearchConfig.for_spec(
-        adc_spec, pop_size=args.pop, generations=args.generations,
-        train_steps=args.train_steps, engine=args.engine)
+    adc_spec, cfg = adc_search_config(args, spec.features)
     mesh = search.default_search_mesh() if cfg.engine == "sharded" else None
     ckpt_dir = Path(args.ckpt_dir) / "adc_search"
     if not args.resume and ckpt_dir.exists():
@@ -89,15 +131,20 @@ def run_adc_search(args):
           f"adc=({adc_spec.describe()}) pop={cfg.pop_size} "
           f"gens={cfg.generations} qat-steps={cfg.train_steps} "
           f"devices={len(jax.devices())}")
+    if cfg.wants_robustness:
+        print(f"  robustness objective [{cfg.robust_objective}] over "
+              f"{cfg.mc_samples} MC instances: {cfg.nonideal.describe()}")
     marks = [time.perf_counter()]
 
     def log(g, pop, fit):
         marks.append(time.perf_counter())
         dt = marks[-1] - marks[-2]
+        extra = (f"  best-robust {fit[:, 2].min():.3f}"
+                 if fit.shape[1] > 2 else "")
         print(f"  gen {g:2d}: {dt:6.2f}s/gen "
               f"{cfg.pop_size / dt:7.1f} individuals/s  "
               f"best-acc {1 - fit[:, 0].min():.3f}  "
-              f"min-area {fit[:, 1].min():.3f}", flush=True)
+              f"min-area {fit[:, 1].min():.3f}{extra}", flush=True)
 
     # return_trained: with --export-front the final front's vmapped QAT
     # runs once here and its trained stacks feed the export directly
@@ -132,12 +179,27 @@ def run_adc_search(args):
             print(f"  design {i}: acc={d.accuracy:.3f}  area={d.area_tc}T  "
                   f"dp={int(d.dp)}  kept-levels="
                   f"{int(d.mask.sum())}/{d.mask.size}")
+        if cfg.wants_robustness:
+            # the yield report rides with the artifact: same NonIdealSpec
+            # (hence same draw stream) as the search's third objective
+            rep = deploy.evaluate_robustness(
+                designs, cfg.nonideal, data["x_test"], data["y_test"],
+                samples=cfg.mc_samples)
+            deploy.save_robustness(front_dir, rep)
+            for i, row in enumerate(rep["designs"]):
+                print(f"  design {i} robustness: mean "
+                      f"{row['mean_accuracy']:.3f}  worst "
+                      f"{row['worst_accuracy']:.3f}  yield@1% "
+                      f"{row['yield']['0.01']:.2f}")
+            print(f"robustness report -> {front_dir}/robustness.json")
         print(f"serve it:  PYTHONPATH=src python -m repro.launch."
               f"serve_classifier --front-dir {front_dir}")
     return pf
 
 
-def main(argv=None):
+def build_parser() -> argparse.ArgumentParser:
+    """The launcher's full CLI — a separate function so tests can parse
+    argv without running anything (the --vmin/--vmax round-trip test)."""
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", help="LM architecture (required unless "
                                    "--adc-search)")
@@ -175,6 +237,29 @@ def main(argv=None):
                          "tables + po2-quantized weights + area report) "
                          "under <ckpt-dir>/front — servable via "
                          "repro.launch.serve_classifier")
+    ap.add_argument("--mc-samples", type=int, default=0,
+                    help="Monte-Carlo instances per design for the "
+                         "robustness objective (0 disables)")
+    ap.add_argument("--nonideal-sigma", type=float, default=0.0,
+                    help="per-comparator input-referred offset sigma, "
+                         "in LSBs")
+    ap.add_argument("--fault-rate", type=float, default=0.0,
+                    help="stuck-at-0/1 probability per surviving "
+                         "comparator")
+    ap.add_argument("--range-drift", type=float, default=0.0,
+                    help="reference-ladder drift sigma, as a fraction "
+                         "of each channel's full scale")
+    ap.add_argument("--nonideal-seed", type=int, default=0,
+                    help="MC draw stream seed (NonIdealSpec.seed)")
+    ap.add_argument("--robust-objective", default="expected",
+                    choices=("expected", "worst"),
+                    help="third NSGA-II objective: expected accuracy "
+                         "drop or worst-case error over the MC instances")
+    return ap
+
+
+def main(argv=None):
+    ap = build_parser()
     args = ap.parse_args(argv)
 
     if args.adc_search:

@@ -19,10 +19,13 @@ API_SURFACE = {
     "Bank",
     "DeployedClassifier",
     "Front",
+    "NonIdealSpec",
     "SearchConfig",
     "deploy",
+    "evaluate_robustness",
     "load_front",
     "quantize",
+    "robustness_curve",
     "save_front",
     "search",
     "serve",
@@ -41,7 +44,8 @@ def test_dispatch_registry_entry_set():
     from repro.kernels import dispatch
     assert dispatch.entries() == (
         "adc_quantize", "adc_quantize_population", "bespoke_mlp",
-        "bespoke_svm", "classifier_bank_mlp", "classifier_bank_svm")
+        "bespoke_svm", "classifier_bank_mlp", "classifier_bank_svm",
+        "mc_eval", "mc_eval_population")
     for name in dispatch.entries():
         entry = dispatch.get(name)
         # the interpret policy is explicit and IDENTICAL across entries

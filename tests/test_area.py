@@ -82,3 +82,79 @@ def test_pruned_flash_vs_binary(bits, seed):
     mask = (rng.random(n) < 0.5).astype(bool)
     mask[:2] = True
     assert area.pruned_binary_tc(mask) <= area.pruned_flash_tc(mask) * 1.5
+
+
+# ---------------------------------------------------------------------------
+# Property-based coverage of the full pruned-area family (hypothesis when
+# installed, single skipped case otherwise — tests/hypothesis_compat.py):
+# every pruned_*_tc is bounded by its full design, monotone under mask
+# supersets, and repair_mask always leaves a usable (>= 2 level) ADC.
+_PRUNED_VS_FULL = (
+    (area.pruned_binary_tc, area.ours_full_tc),
+    (area.pruned_flash_tc, area.flash_full_tc),
+    (area.pruned_baseline_tc, area.baseline_binary_tc),
+)
+
+
+def _mask_of(bits, seed, density):
+    rng = np.random.default_rng(seed)
+    n = 2 ** bits
+    mask = rng.random(n) < density
+    mask[rng.integers(0, n)] = True              # never fully pruned
+    return mask
+
+
+@settings(max_examples=80, deadline=None)
+@given(bits=st.integers(2, 6), seed=st.integers(0, 10 ** 6),
+       density=st.floats(0.05, 1.0))
+def test_every_pruned_design_bounded_by_full(bits, seed, density):
+    """pruned_*_tc(mask) <= full_tc(bits) for all three design families,
+    with equality on the full mask (pruning only ever removes hardware)."""
+    mask = _mask_of(bits, seed, density)
+    full = np.ones(2 ** bits, bool)
+    for pruned_fn, full_fn in _PRUNED_VS_FULL:
+        assert 0 <= pruned_fn(mask) <= full_fn(bits)
+        assert pruned_fn(full) == full_fn(bits)
+
+
+@settings(max_examples=80, deadline=None)
+@given(bits=st.integers(2, 6), seed=st.integers(0, 10 ** 6),
+       density=st.floats(0.05, 0.9))
+def test_every_pruned_design_monotone_under_supersets(bits, seed, density):
+    """Turning ON one more level (mask superset) never DECREASES the
+    transistor count, for all three families — the design rules only
+    remove hardware for removed levels (r1/r2/r3/r4)."""
+    rng = np.random.default_rng(seed)
+    mask = _mask_of(bits, seed, density)
+    off = np.where(~mask)[0]
+    if off.size == 0:
+        return
+    sup = mask.copy()
+    sup[rng.choice(off)] = True
+    for pruned_fn, _ in _PRUNED_VS_FULL:
+        assert pruned_fn(mask) <= pruned_fn(sup), (
+            f"{pruned_fn.__name__} not monotone: mask={mask.astype(int)} "
+            f"superset={sup.astype(int)}")
+
+
+@settings(max_examples=80, deadline=None)
+@given(bits=st.integers(1, 6), channels=st.integers(1, 5),
+       seed=st.integers(0, 10 ** 6), density=st.floats(0.0, 0.3))
+def test_repair_mask_always_yields_two_levels(bits, channels, seed, density):
+    """GA repair: any mask (even all-zero) comes back with >= 2 kept
+    levels per channel, and already-valid masks pass through unchanged."""
+    from repro.core import adc
+    import jax.numpy as jnp
+    rng = np.random.default_rng(seed)
+    n = 2 ** bits
+    mask = (rng.random((channels, n)) < density).astype(np.int32)
+    fixed = np.asarray(adc.repair_mask(jnp.asarray(mask)))
+    assert fixed.shape == mask.shape
+    if bits >= 1:
+        assert (fixed.sum(axis=-1) >= min(2, n)).all()
+    # repair only ever turns levels ON, and no-ops on valid masks
+    assert ((fixed - mask) >= 0).all()
+    valid = mask.copy()
+    valid[:, :2] = 1
+    np.testing.assert_array_equal(
+        np.asarray(adc.repair_mask(jnp.asarray(valid))), valid)

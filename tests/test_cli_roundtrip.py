@@ -1,0 +1,69 @@
+"""CLI parsing round trips for launch/train.py: a per-channel
+--vmin/--vmax comma-list spec survives argv -> SearchConfig -> AdcSpec ->
+JSON meta unchanged, and the non-ideality flags build the NonIdealSpec
+the search and the exported robustness report share."""
+import json
+
+import pytest
+
+from repro.core.nonideal import NonIdealSpec
+from repro.core.spec import AdcSpec, parse_range
+from repro.launch import train
+
+
+def _args(extra):
+    return train.build_parser().parse_args(["--adc-search"] + extra)
+
+
+def test_vmin_vmax_comma_list_round_trip():
+    argv = ["--bits", "3", "--vmin", "0.0,-1.0,0.25", "--vmax",
+            "1.0,2.0,4.75"]
+    args = _args(argv)
+    spec, cfg = train.adc_search_config(args, channels=3)
+    want = AdcSpec(bits=3, vmin=(0.0, -1.0, 0.25), vmax=(1.0, 2.0, 4.75))
+    assert spec == want
+    # argv -> SearchConfig: the config re-derives the identical spec
+    assert cfg.adc_spec == want
+    assert cfg.vmin == (0.0, -1.0, 0.25) and isinstance(cfg.vmin, tuple)
+    # -> meta (JSON) -> AdcSpec: the full persistence loop
+    back = AdcSpec.from_meta(json.loads(json.dumps(spec.to_meta())))
+    assert back == want and back.channels == 3
+
+
+def test_scalar_range_round_trip():
+    args = _args(["--bits", "2", "--vmin", "-0.5", "--vmax", "1.5"])
+    spec, cfg = train.adc_search_config(args, channels=7)
+    assert spec == AdcSpec(bits=2, vmin=-0.5, vmax=1.5)
+    assert isinstance(spec.vmin, float) and spec.channels is None
+    assert AdcSpec.from_meta(spec.to_meta()) == spec
+
+
+def test_channel_mismatch_rejected_at_parse_time():
+    args = _args(["--bits", "2", "--vmin", "0.0,0.0", "--vmax", "1.0,1.0"])
+    with pytest.raises(ValueError, match="channel"):
+        train.adc_search_config(args, channels=7)
+
+
+def test_parse_range_forms():
+    assert parse_range("0.5") == 0.5
+    assert parse_range("0.5,1.5") == (0.5, 1.5)
+    assert parse_range(2) == 2.0
+
+
+def test_nonideal_flags_build_spec():
+    args = _args(["--mc-samples", "8", "--nonideal-sigma", "0.5",
+                  "--fault-rate", "0.02", "--range-drift", "0.01",
+                  "--nonideal-seed", "7", "--robust-objective", "worst"])
+    _, cfg = train.adc_search_config(args, channels=7)
+    assert cfg.nonideal == NonIdealSpec(sigma_offset=0.5, sigma_range=0.01,
+                                        fault_rate=0.02, seed=7)
+    assert cfg.mc_samples == 8 and cfg.robust_objective == "worst"
+    assert cfg.wants_robustness and cfg.n_objectives == 3
+    # half-specified robustness is an error, never a silent ideal run
+    with pytest.raises(ValueError, match="mc-samples"):
+        train.adc_search_config(_args(["--nonideal-sigma", "0.5"]), 7)
+    with pytest.raises(ValueError, match="knob"):
+        train.adc_search_config(_args(["--mc-samples", "8"]), 7)
+    # no robustness flags at all: plain 2-objective search
+    _, cfg0 = train.adc_search_config(_args([]), 7)
+    assert not cfg0.wants_robustness
