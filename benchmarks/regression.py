@@ -1,0 +1,171 @@
+"""Perf-regression gate over BENCH_ci.json artifacts (DESIGN.md §11).
+
+Compares the benchmark rows a CI run just produced (benchmarks/run.py
+--json) against the committed baseline under ``benchmarks/baselines/``
+and fails — with an actionable offender list — when any entry slowed
+down past its tolerance band, went missing, or outright FAILED. Extra
+rows in the current run are notes, not failures (new benchmarks land
+before their baseline does).
+
+Tolerance bands are multiplicative: a current/baseline wall-time ratio
+above ``tolerance`` fails. The default (1.75x) is deliberately wide —
+shared CI runners jitter — while still catching a genuine 2x slowdown
+(the injected-regression fixture the tests pin). Per-entry bands come
+from the baseline file's optional top-level ``"tolerances": {name: x}``
+map or repeated ``--entry-tolerance name=x`` flags (CLI wins).
+
+  PYTHONPATH=src python -m benchmarks.regression BENCH_ci.json \
+      --baseline benchmarks/baselines/BENCH_ci.json
+  PYTHONPATH=src python -m benchmarks.regression BENCH_ci.json \
+      --write-baseline benchmarks/baselines/BENCH_ci.json   # refresh
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+from pathlib import Path
+from typing import Dict, List, Optional
+
+DEFAULT_TOLERANCE = 1.75
+
+
+@dataclasses.dataclass
+class Report:
+    """One gate evaluation: pass/fail plus the evidence."""
+    ok: bool
+    failures: List[str]
+    notes: List[str]
+    checked: int                  # rows actually ratio-compared
+
+    def render(self) -> str:
+        lines = [f"perf-regression gate: "
+                 f"{'PASS' if self.ok else 'FAIL'} "
+                 f"({self.checked} entries compared)"]
+        for f in self.failures:
+            lines.append(f"  FAIL: {f}")
+        for n in self.notes:
+            lines.append(f"  note: {n}")
+        if not self.ok:
+            lines.append("  -> real regression: fix the slowdown. "
+                         "Intentional change: refresh the baseline with "
+                         "benchmarks/run.py --json + --write-baseline "
+                         "(see benchmarks/README.md).")
+        return "\n".join(lines)
+
+
+def _rows_by_name(doc: Dict) -> Dict[str, Dict]:
+    return {r["name"]: r for r in doc.get("rows", [])}
+
+
+def compare(current: Dict, baseline: Dict,
+            tolerance: float = DEFAULT_TOLERANCE,
+            entry_tolerances: Optional[Dict[str, float]] = None) -> Report:
+    """Gate ``current`` (a benchmarks/run.py --json document) against
+    ``baseline``. Failure conditions, each reported per offender:
+
+    * a baseline entry missing from the current run;
+    * a current entry whose row FAILED (``us_per_call`` is null);
+    * a slowdown: current/baseline wall time above the entry's band.
+    """
+    failures: List[str] = []
+    notes: List[str] = []
+    bands = dict(baseline.get("tolerances", {}))
+    bands.update(entry_tolerances or {})
+    if current.get("backend") != baseline.get("backend"):
+        failures.append(
+            f"backend mismatch: current={current.get('backend')!r} vs "
+            f"baseline={baseline.get('backend')!r} — timings are not "
+            f"comparable; re-record the baseline on this backend")
+    cur, base = _rows_by_name(current), _rows_by_name(baseline)
+    checked = 0
+    for name, brow in base.items():
+        if name not in cur:
+            failures.append(f"{name}: present in baseline but missing from "
+                            f"the current run (bench renamed/removed? "
+                            f"refresh the baseline deliberately)")
+            continue
+        crow = cur[name]
+        if crow.get("us_per_call") is None:
+            failures.append(f"{name}: current run FAILED "
+                            f"({crow.get('derived')})")
+            continue
+        if brow.get("us_per_call") is None:
+            notes.append(f"{name}: baseline row has no timing; skipped")
+            continue
+        band = float(bands.get(name, tolerance))
+        ratio = float(crow["us_per_call"]) / max(float(brow["us_per_call"]),
+                                                 1e-9)
+        checked += 1
+        if ratio > band:
+            failures.append(
+                f"{name}: {ratio:.2f}x slower than baseline "
+                f"({crow['us_per_call']:.0f}us vs "
+                f"{brow['us_per_call']:.0f}us, tolerance {band:.2f}x)")
+        elif ratio < 1.0 / band:
+            notes.append(f"{name}: {1 / ratio:.2f}x faster than baseline "
+                         f"— consider refreshing the baseline")
+    for name in cur:
+        if name not in base:
+            notes.append(f"{name}: no baseline entry yet (new bench?)")
+    if int(current.get("failures", 0)) > 0 and not any(
+            "FAILED" in f for f in failures):
+        failures.append(f"current run reports {current['failures']} "
+                        f"failed benchmark(s)")
+    return Report(ok=not failures, failures=failures, notes=notes,
+                  checked=checked)
+
+
+def _parse_entry_tolerances(pairs: List[str]) -> Dict[str, float]:
+    out: Dict[str, float] = {}
+    for p in pairs:
+        name, _, val = p.partition("=")
+        if not val:
+            raise SystemExit(f"--entry-tolerance wants name=ratio, got {p!r}")
+        out[name] = float(val)
+    return out
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    ap = argparse.ArgumentParser(
+        description="fail CI when benchmark timings regress vs the "
+                    "committed baseline")
+    ap.add_argument("current", help="BENCH_ci.json from this run")
+    ap.add_argument("--baseline",
+                    default=str(Path(__file__).parent / "baselines"
+                                / "BENCH_ci.json"))
+    ap.add_argument("--tolerance", type=float, default=DEFAULT_TOLERANCE,
+                    help=f"default slowdown band "
+                         f"(default {DEFAULT_TOLERANCE}x)")
+    ap.add_argument("--entry-tolerance", action="append", default=[],
+                    metavar="NAME=RATIO",
+                    help="per-entry band override; repeatable")
+    ap.add_argument("--write-baseline", metavar="PATH", nargs="?",
+                    const="", default=None,
+                    help="instead of gating, copy the current document to "
+                         "PATH (default: the --baseline path) as the new "
+                         "baseline")
+    args = ap.parse_args(argv)
+    current = json.loads(Path(args.current).read_text())
+    if args.write_baseline is not None:
+        dest = Path(args.write_baseline or args.baseline)
+        dest.parent.mkdir(parents=True, exist_ok=True)
+        dest.write_text(json.dumps(current, indent=1, sort_keys=True)
+                        + "\n")
+        print(f"baseline written: {dest} "
+              f"({len(current.get('rows', []))} rows)")
+        return 0
+    baseline_path = Path(args.baseline)
+    if not baseline_path.exists():
+        raise SystemExit(f"no baseline at {baseline_path}; record one with "
+                         f"--write-baseline first")
+    baseline = json.loads(baseline_path.read_text())
+    report = compare(current, baseline, tolerance=args.tolerance,
+                     entry_tolerances=_parse_entry_tolerances(
+                         args.entry_tolerance))
+    print(report.render())
+    return 0 if report.ok else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,10 +1,31 @@
-"""Render EXPERIMENTS.md §Roofline from the dry-run JSONs."""
+"""Render EXPERIMENTS.md §Roofline from the dry-run JSONs, plus the
+kernel-entry roofline table from the analytic cost model
+(repro/perf/cost_model.py — DESIGN.md §11)."""
 from __future__ import annotations
 
 import json
 from pathlib import Path
 
 DRYRUN = Path("experiments/dryrun")
+
+
+def kernel_table_markdown(m: int = 4096, c: int = 21, bits: int = 4,
+                          backend: str = "tpu") -> str:
+    """Analytic roofline of every dispatch-registry entry at one
+    representative shape — same record fields as the dry-run table, no
+    hardware needed (estimates, clearly labelled as such)."""
+    from repro.perf import autotune, cost_model
+    out = ["| entry | block_m | dominant | compute s | memory s "
+           "| AI (flop/B) | est s | roofline frac |",
+           "|---|---|---|---|---|---|---|---|"]
+    for w in autotune.default_workloads(m=m, c=c, bits=bits):
+        r = cost_model.roofline_estimate(w, backend=backend)
+        out.append(
+            f"| {w.entry} | {r['block_m']} | {r['dominant']} "
+            f"| {r['compute_s']:.3e} | {r['memory_s']:.3e} "
+            f"| {r['arithmetic_intensity']:.1f} | {r['estimated_s']:.3e} "
+            f"| {r['roofline_fraction']:.3f} |")
+    return "\n".join(out)
 
 
 def load_records():
@@ -79,5 +100,7 @@ def summary_line() -> str:
 
 if __name__ == "__main__":
     print(table_markdown("single"))
+    print()
+    print(kernel_table_markdown())
     print()
     print(summary_line())

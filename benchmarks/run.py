@@ -20,15 +20,17 @@ import jax.numpy as jnp
 import numpy as np
 
 
-def _dispatch_record(entry, spec, channels, interpret=None, sharded=False):
+def _dispatch_record(entry, spec, channels, interpret=None, sharded=False,
+                     workload=None):
     """The resolved kernel-dispatch path (oracle/kernel, interpret flag,
-    sharded, reason) for one registry entry, resolved from the ACTUAL
-    AdcSpec the benchmark runs — stamped into every JSON artifact so a
-    perf regression is attributable to the path actually taken rather
-    than guessed from the backend."""
+    sharded, reason — plus the tuned-vs-heuristic block_m choice when the
+    benchmark's ``workload`` is known) for one registry entry, resolved
+    from the ACTUAL AdcSpec the benchmark runs — stamped into every JSON
+    artifact so a perf regression is attributable to the path actually
+    taken rather than guessed from the backend."""
     from repro.kernels import dispatch
     return dispatch.resolve(entry, spec, channels, interpret=interpret,
-                            sharded=sharded).as_dict()
+                            sharded=sharded, workload=workload).as_dict()
 
 
 def _timeit(fn, *args, reps=3, warmup=1, **kw):
@@ -97,9 +99,14 @@ def bench_adc_kernel():
     table = ref.value_table(mask, 4)
     us_r, _ = _timeit(jax.jit(
         lambda x: ref.adc_quantize_ref(x, table, 4)), x, reps=5)
-    d = _dispatch_record("adc_quantize", spec, 21, interpret=interp)
+    from repro.perf import Workload
+    d = _dispatch_record("adc_quantize", spec, 21, interpret=interp,
+                         workload=Workload("adc_quantize", m=4096, c=21,
+                                           bits=4))
     return us_k, (f"ref_us={us_r:.0f} dispatch={d['path']}"
-                  f"[interpret={d['interpret']}] (TPU target)")
+                  f"[interpret={d['interpret']}, "
+                  f"block_m={d['block_m']}:{d['block_m_source']}] "
+                  f"(TPU target)")
 
 
 def bench_ga_generation():
@@ -246,11 +253,15 @@ def bench_mc_robustness(smoke=False):
     x = jnp.asarray(rng.random((m, c)), jnp.float32)
     interp = envelope.interpret_default()
     reps, warmup = (1, 1) if smoke else (3, 1)
+    from repro.perf import Workload
+    p_top, s_top = (4, 4) if smoke else (8, 16)
     report = {"bits": bits, "channels": c, "rows": m, "smoke": smoke,
               "backend": jax.default_backend(),
               "nonideal": ni.to_meta(),
-              "dispatch": _dispatch_record("mc_eval_population", spec, c,
-                                           interpret=interp)}
+              "dispatch": _dispatch_record(
+                  "mc_eval_population", spec, c, interpret=interp,
+                  workload=Workload("mc_eval_population", m=m, c=c,
+                                    bits=bits, p=p_top, s=s_top))}
     grid = {}
     # interpret-mode kernel grids run per-tile Python off-TPU, so the
     # P x S sweep stays modest (the oracle numbers are the CPU story;
@@ -296,6 +307,48 @@ def bench_mc_robustness(smoke=False):
             f"{top['kernel_instance_evals_per_s']:.0f} "
             f"(dispatch={d['path']}[interpret={d['interpret']}]); "
             f"e2e D={len(front)} S={samples} {us_e2e / 1e6:.2f}s")
+
+
+def bench_autotune(smoke=False):
+    """Roofline-modelled block_m autotuner (DESIGN.md §11): tunes every
+    dispatch-registry entry at a smoke-scale workload, records tuned vs
+    VMEM-heuristic wall time per entry, and asserts the tuned choice never
+    measures worse than the heuristic (the heuristic is always among the
+    candidates, so this is the autotuner's correctness contract, checked
+    on real measurements). Also stamps each entry's analytic roofline
+    estimate so measured-vs-modelled drift is visible in the artifact.
+    Writes autotune.json; the tuned table itself is NOT persisted here
+    (refreshing kernels/tuned_tables.json is a deliberate act — see
+    benchmarks/README.md)."""
+    from benchmarks import paper_tables
+    from repro.perf import autotune, cost_model, shape_class
+    m = 128 if smoke else 1024
+    workloads = autotune.default_workloads(m=m, c=7, bits=2 if smoke else 3)
+    t0 = time.perf_counter()
+    table = autotune.tune(workloads, reps=1 if smoke else 3,
+                          warmup=1, seed=0)
+    tune_us = (time.perf_counter() - t0) * 1e6
+    report = {"backend": jax.default_backend(), "smoke": smoke,
+              "interpret": table["interpret"], "entries": {}}
+    wins = 0
+    for w in workloads:
+        rec = table["entries"][w.entry][shape_class(w)]
+        assert rec["us"] <= rec["heuristic_us"], (
+            f"{w.entry}: tuned block_m={rec['block_m']} "
+            f"({rec['us']:.1f}us) lost to heuristic "
+            f"{rec['heuristic_block_m']} ({rec['heuristic_us']:.1f}us)")
+        wins += rec["block_m"] != min(rec["heuristic_block_m"], w.m)
+        report["entries"][w.entry] = dict(
+            rec, shape_class=shape_class(w),
+            roofline=cost_model.roofline_estimate(w, rec["block_m"]))
+    paper_tables.save("autotune", report)
+    speedups = [report["entries"][w.entry]["heuristic_us"]
+                / max(report["entries"][w.entry]["us"], 1e-9)
+                for w in workloads]
+    return (tune_us,
+            f"{len(workloads)} entries tuned, tuned<=heuristic on all; "
+            f"{wins} picks differ from heuristic; best speedup "
+            f"{max(speedups):.2f}x (m={m})")
 
 
 def bench_serve_classifier(smoke=False):
@@ -414,6 +467,7 @@ def main() -> None:
         ("search_adc_sharded", lambda: bench_search_adc_sharded(smoke=smoke)),
         ("serve_classifier", lambda: bench_serve_classifier(smoke=smoke)),
         ("mc_robustness", lambda: bench_mc_robustness(smoke=smoke)),
+        ("autotune", lambda: bench_autotune(smoke=smoke)),
         ("lm_train_step_smoke", bench_lm_train_step),
         ("roofline_summary", bench_roofline_summary),
     ]

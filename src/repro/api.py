@@ -45,6 +45,7 @@ __all__ = [
     "Front",
     "NonIdealSpec",
     "SearchConfig",
+    "autotune",
     "deploy",
     "evaluate_robustness",
     "load_front",
@@ -214,6 +215,19 @@ def robustness_curve(bank: Union[Bank, Sequence[DeployedClassifier]], x, y,
     designs = bank.designs if isinstance(bank, Bank) else tuple(bank)
     return _deploy.robustness_curve(list(designs), x, y, sigmas, samples,
                                     **kw)
+
+
+def autotune(workloads=None, *, write: bool = True, path=None, **kw) -> Dict:
+    """Measure candidate ``block_m`` tiles for every kernel-dispatch entry
+    (or the given ``repro.perf.Workload`` list), persist the winners as
+    the tuned table next to the registry (kernels/tuned_tables.json by
+    default), and activate them in-process — subsequent ``dispatch()``
+    kernel resolutions use the tuned tile for matching shape classes and
+    log it; everything else keeps the VMEM heuristic (DESIGN.md §11).
+    Tuning changes speed only, never values. Returns the tuned table;
+    ``write=False`` measures without persisting."""
+    from repro.perf import autotune as _autotune
+    return _autotune.autotune(workloads, write=write, path=path, **kw)
 
 
 def quantize(x, mask, spec: AdcSpec, *, interpret: Optional[bool] = None):

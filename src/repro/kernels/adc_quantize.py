@@ -59,20 +59,12 @@ def _range_rows(bits: int, vmin, vmax, channels: int):
     return range_rows(bits, vmin, vmax, channels)
 
 
-# ~2 MB of f32 VMEM for x + out tiles and the resident table: half a
-# conservative 4 MB working budget, leaving room for the double-buffered
-# next tile the grid pipeline prefetches.
-_VMEM_BUDGET_F32 = (1 << 21) // 4
-
-
-def _auto_block_m(m: int, c: int, n: int) -> int:
-    """Largest M-tile (f32-sublane aligned, <= 4096) such that the
-    (bm, C) x-tile + (bm, C) out-tile + the resident (C, 2^N) table fit
-    the VMEM budget. Clamped to m (a single tile covers small batches)."""
-    avail = max(_VMEM_BUDGET_F32 - c * n, 0)
-    bm = max(avail // (2 * c), 8)
-    bm = max((bm // 8) * 8, 8)
-    return min(bm, 4096, m)
+def auto_block_m(m: int, c: int, n: int) -> int:
+    """VMEM-heuristic M-tile for the quantizer family: the resident
+    operands are the (C, 2^N) table plus the two (1, C) range rows
+    (envelope.auto_block_m owns the shared budget split)."""
+    from repro.kernels import envelope
+    return envelope.auto_block_m(m, c, c * n + 2 * c)
 
 
 def _dequant_tile(x, table, lo, scale, *, bits: int):
@@ -120,7 +112,7 @@ def adc_quantize_pallas(x: jnp.ndarray, table: jnp.ndarray, *, bits: int,
         interpret = envelope.interpret_default()
     m, c = x.shape
     lo, scale = _range_rows(bits, vmin, vmax, c)          # (1, C) f32 each
-    bm = min(block_m, m) if block_m else _auto_block_m(m, c, 2 ** bits)
+    bm = min(block_m, m) if block_m else auto_block_m(m, c, 2 ** bits)
     pad = (-m) % bm
     if pad:
         x = jnp.pad(x, ((0, pad), (0, 0)))
@@ -165,7 +157,7 @@ def adc_quantize_pallas_population(x: jnp.ndarray, tables: jnp.ndarray, *,
     m, c = x.shape
     p = tables.shape[0]
     lo, scale = _range_rows(bits, vmin, vmax, c)          # (1, C) f32 each
-    bm = min(block_m, m) if block_m else _auto_block_m(m, c, 2 ** bits)
+    bm = min(block_m, m) if block_m else auto_block_m(m, c, 2 ** bits)
     pad = (-m) % bm
     if pad:
         x = jnp.pad(x, ((0, pad), (0, 0)))

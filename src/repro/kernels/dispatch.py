@@ -32,6 +32,17 @@ time a distinct (entry, path) pair is chosen, DEBUG after), and
 ``resolve()`` returns the machine-readable ``Resolution`` record the
 benchmark harness persists so perf regressions are attributable to the
 path actually taken.
+
+Kernel-path resolutions also pick the M-tile (DESIGN.md §11): a **tuned
+policy** — by default the autotuned table persisted next to this module
+(``tuned_tables.json``, written by repro/perf/autotune.py) — is consulted
+first; when it has no entry for the (entry, shape class) pair, or the
+table is missing/corrupt/stale, the kernels' own VMEM-budget heuristic
+applies (``block_m=None`` forwarded to the kernel). The choice and its
+provenance (``block_m_source``: 'tuned' | 'heuristic') ride on the
+``Resolution`` record and are logged like the path decision. Tuning can
+only change speed: ``block_m`` never enters the kernels' math, so the
+bitwise kernel==oracle parity contract holds under every tuned table.
 """
 from __future__ import annotations
 
@@ -46,6 +57,7 @@ from repro.kernels.mc_eval import (mc_adc_eval_pallas,
                                    mc_adc_eval_pallas_population)
 from repro.kernels.qmlp import (bespoke_mlp_bank_pallas, bespoke_mlp_pallas,
                                 bespoke_svm_bank_pallas, bespoke_svm_pallas)
+from repro.perf.workload import Workload, workload_of
 
 log = logging.getLogger(__name__)
 
@@ -78,12 +90,17 @@ class KernelEntry:
 @dataclasses.dataclass(frozen=True)
 class Resolution:
     """The routing decision for one call — stable, JSON-able provenance
-    (benchmarks/run.py records it next to every timing)."""
+    (benchmarks/run.py records it next to every timing). ``block_m`` is
+    the tuned M-tile on kernel paths resolved with a workload (None means
+    'kernel picks its own VMEM heuristic'); ``block_m_source`` says where
+    it came from ('tuned' | 'heuristic', None on oracle paths)."""
     entry: str
     path: str                       # 'oracle' | 'kernel'
     interpret: Optional[bool]       # None for the oracle path
     sharded: bool
     reason: str
+    block_m: Optional[int] = None
+    block_m_source: Optional[str] = None
 
     def as_dict(self) -> Dict:
         return dataclasses.asdict(self)
@@ -91,6 +108,54 @@ class Resolution:
 
 _REGISTRY: Dict[str, KernelEntry] = {}
 _LOGGED: set = set()
+
+# ------------------------------------------------------------ tuned policy
+# policy(entry_name, Workload) -> Optional[int]. Default: lazily load the
+# committed tuned_tables.json via repro/perf/autotune.load_policy (which
+# validates version/backend and degrades to None on any problem).
+_TUNED_POLICY: Optional[Callable] = None
+_TUNED_LOADED = False
+
+
+def set_tuned_policy(policy: Optional[Callable]) -> None:
+    """Install ``policy(entry, workload) -> Optional[int]`` as the tuned
+    block_m source (None disables tuning; the heuristic then always
+    applies). Overrides the default table-file lookup."""
+    global _TUNED_POLICY, _TUNED_LOADED
+    _TUNED_POLICY = policy
+    _TUNED_LOADED = True
+
+
+def reset_tuned_policy() -> None:
+    """Forget any installed/cached policy; the next resolution re-reads
+    the default table file."""
+    global _TUNED_POLICY, _TUNED_LOADED
+    _TUNED_POLICY = None
+    _TUNED_LOADED = False
+
+
+def _tuned_policy() -> Optional[Callable]:
+    global _TUNED_POLICY, _TUNED_LOADED
+    if not _TUNED_LOADED:
+        from repro.perf import autotune
+        _TUNED_POLICY = autotune.load_policy()
+        _TUNED_LOADED = True
+    return _TUNED_POLICY
+
+
+def tuned_block_m(name: str, workload: Optional[Workload]
+                  ) -> Tuple[Optional[int], Optional[str]]:
+    """The (block_m, source) pair a kernel-path resolution stamps: the
+    tuned table's choice when it has one for this (entry, shape class),
+    else (None, 'heuristic') — the kernel then applies its own VMEM
+    heuristic."""
+    if workload is not None:
+        policy = _tuned_policy()
+        if policy is not None:
+            bm = policy(name, workload)
+            if bm is not None:
+                return int(bm), "tuned"
+    return None, "heuristic"
 
 
 def register(entry: KernelEntry) -> KernelEntry:
@@ -117,47 +182,70 @@ def entries() -> Tuple[str, ...]:
 
 def resolve(name: str, spec, channels: int,
             interpret: Optional[bool] = None,
-            sharded: bool = False) -> Resolution:
+            sharded: bool = False,
+            workload: Optional[Workload] = None) -> Resolution:
     """The routing decision alone (no execution) — also the benchmark
-    harness' provenance hook."""
+    harness' provenance hook. Pass the call's ``workload`` to have
+    kernel-path resolutions also pick the M-tile (tuned table first,
+    VMEM heuristic fallback); without one, ``block_m`` stays None and
+    the kernel applies its own heuristic."""
     entry = get(name)
     if not entry.envelope_predicate(spec, channels):
         return Resolution(name, "oracle", None, sharded,
                           f"outside kernel envelope (bits={spec.bits}, "
                           f"C={channels})")
+    bm, bm_src = tuned_block_m(name, workload)
     if interpret is not None:
         return Resolution(name, "kernel", bool(interpret), sharded,
-                          f"explicit interpret={bool(interpret)}")
+                          f"explicit interpret={bool(interpret)}",
+                          bm, bm_src)
     if not envelope.interpret_default():
         return Resolution(name, "kernel", False, sharded,
-                          "auto: TPU backend, compiled kernel")
+                          "auto: TPU backend, compiled kernel", bm, bm_src)
     if entry.interpret_policy == "oracle":
         return Resolution(name, "oracle", None, sharded,
                           "auto off-TPU: interpret grids run per-tile "
                           "Python, jnp oracle instead")
     return Resolution(name, "kernel", True, sharded,
-                      "auto off-TPU: interpret kernel")
+                      "auto off-TPU: interpret kernel", bm, bm_src)
 
 
 def _log(res: Resolution) -> None:
-    key = (res.entry, res.path, res.interpret, res.sharded)
+    key = (res.entry, res.path, res.interpret, res.sharded,
+           res.block_m, res.block_m_source)
     level = logging.DEBUG if key in _LOGGED else logging.INFO
     _LOGGED.add(key)
-    log.log(level, "dispatch %s -> %s%s (%s)", res.entry, res.path,
+    tile = ("" if res.block_m_source is None
+            else f"[block_m={res.block_m or 'auto'}:{res.block_m_source}]")
+    log.log(level, "dispatch %s -> %s%s%s (%s)", res.entry, res.path,
             "" if res.interpret is None else f"[interpret={res.interpret}]",
-            res.reason)
+            tile, res.reason)
+
+
+def _workload_of(name: str, x, tables, weights, spec
+                 ) -> Optional[Workload]:
+    """Best-effort shape readout for tuned-tile lookup; entries the perf
+    layer doesn't know (e.g. test doubles registered on the fly) resolve
+    without one and keep the kernel's own heuristic."""
+    try:
+        return workload_of(name, tuple(x.shape), tuple(tables.shape),
+                           tuple(tuple(w.shape) for w in weights),
+                           spec.bits)
+    except (ValueError, IndexError, AttributeError):
+        return None
 
 
 def _run(name: str, x, tables, *weights, spec,
          interpret: Optional[bool], log_resolution: bool):
     entry = get(name)
-    res = resolve(name, spec, x.shape[-1], interpret)
+    res = resolve(name, spec, x.shape[-1], interpret,
+                  workload=_workload_of(name, x, tables, weights, spec))
     if log_resolution:
         _log(res)
     if res.path == "oracle":
         return entry.oracle(x, tables, *weights, spec=spec)
     return entry.kernel(x, tables, *weights, spec=spec,
-                        interpret=res.interpret)
+                        interpret=res.interpret, block_m=res.block_m)
 
 
 def dispatch(name: str, x, tables, *weights, spec,
@@ -224,18 +312,19 @@ register(KernelEntry(
     name="adc_quantize",
     oracle=lambda x, t, *, spec: ref.adc_quantize_ref(
         x, t, spec.bits, spec.vmin, spec.vmax),
-    kernel=lambda x, t, *, spec, interpret: adc_quantize_pallas(
+    kernel=lambda x, t, *, spec, interpret, block_m=None: adc_quantize_pallas(
         x, t, bits=spec.bits, vmin=spec.vmin, vmax=spec.vmax,
-        interpret=interpret),
+        interpret=interpret, block_m=block_m),
 ))
 
 register(KernelEntry(
     name="adc_quantize_population",
     oracle=lambda x, t, *, spec: ref.adc_quantize_ref_population(
         x, t, spec.bits, spec.vmin, spec.vmax),
-    kernel=lambda x, t, *, spec, interpret: adc_quantize_pallas_population(
-        x, t, bits=spec.bits, vmin=spec.vmin, vmax=spec.vmax,
-        interpret=interpret),
+    kernel=lambda x, t, *, spec, interpret, block_m=None:
+        adc_quantize_pallas_population(
+            x, t, bits=spec.bits, vmin=spec.vmin, vmax=spec.vmax,
+            interpret=interpret, block_m=block_m),
     sharded_axes=_population_axes,
 ))
 
@@ -248,46 +337,48 @@ register(KernelEntry(
     name="mc_eval",
     oracle=lambda x, lb, ub, v, lo, sc, *, spec: ref.mc_adc_eval_ref(
         x, lb, ub, v, lo, sc),
-    kernel=lambda x, lb, ub, v, lo, sc, *, spec, interpret:
-        mc_adc_eval_pallas(x, lb, ub, v, lo, sc, interpret=interpret),
+    kernel=lambda x, lb, ub, v, lo, sc, *, spec, interpret, block_m=None:
+        mc_adc_eval_pallas(x, lb, ub, v, lo, sc, interpret=interpret,
+                           block_m=block_m),
 ))
 
 register(KernelEntry(
     name="mc_eval_population",
     oracle=lambda x, lb, ub, v, lo, sc, *, spec:
         ref.mc_adc_eval_ref_population(x, lb, ub, v, lo, sc),
-    kernel=lambda x, lb, ub, v, lo, sc, *, spec, interpret:
+    kernel=lambda x, lb, ub, v, lo, sc, *, spec, interpret, block_m=None:
         mc_adc_eval_pallas_population(x, lb, ub, v, lo, sc,
-                                      interpret=interpret),
+                                      interpret=interpret, block_m=block_m),
 ))
 
 register(KernelEntry(
     name="bespoke_mlp",
     oracle=lambda x, t, w1, b1, w2, b2, *, spec: ref.bespoke_mlp_ref(
         x, t, spec.bits, w1, b1, w2, b2, spec.vmin, spec.vmax),
-    kernel=lambda x, t, w1, b1, w2, b2, *, spec, interpret:
+    kernel=lambda x, t, w1, b1, w2, b2, *, spec, interpret, block_m=None:
         bespoke_mlp_pallas(x, t, w1, b1, w2, b2, bits=spec.bits,
                            vmin=spec.vmin, vmax=spec.vmax,
-                           interpret=interpret),
+                           interpret=interpret, block_m=block_m),
 ))
 
 register(KernelEntry(
     name="bespoke_svm",
     oracle=lambda x, t, w, b, *, spec: ref.bespoke_svm_ref(
         x, t, spec.bits, w, b, spec.vmin, spec.vmax),
-    kernel=lambda x, t, w, b, *, spec, interpret:
+    kernel=lambda x, t, w, b, *, spec, interpret, block_m=None:
         bespoke_svm_pallas(x, t, w, b, bits=spec.bits, vmin=spec.vmin,
-                           vmax=spec.vmax, interpret=interpret),
+                           vmax=spec.vmax, interpret=interpret,
+                           block_m=block_m),
 ))
 
 register(KernelEntry(
     name="classifier_bank_mlp",
     oracle=lambda x, t, w1, b1, w2, b2, *, spec: ref.bespoke_mlp_bank_ref(
         x, t, spec.bits, w1, b1, w2, b2, spec.vmin, spec.vmax),
-    kernel=lambda x, t, w1, b1, w2, b2, *, spec, interpret:
+    kernel=lambda x, t, w1, b1, w2, b2, *, spec, interpret, block_m=None:
         bespoke_mlp_bank_pallas(x, t, w1, b1, w2, b2, bits=spec.bits,
                                 vmin=spec.vmin, vmax=spec.vmax,
-                                interpret=interpret),
+                                interpret=interpret, block_m=block_m),
     sharded_axes=_design_bank_axes,
 ))
 
@@ -295,8 +386,9 @@ register(KernelEntry(
     name="classifier_bank_svm",
     oracle=lambda x, t, w, b, *, spec: ref.bespoke_svm_bank_ref(
         x, t, spec.bits, w, b, spec.vmin, spec.vmax),
-    kernel=lambda x, t, w, b, *, spec, interpret:
+    kernel=lambda x, t, w, b, *, spec, interpret, block_m=None:
         bespoke_svm_bank_pallas(x, t, w, b, bits=spec.bits, vmin=spec.vmin,
-                                vmax=spec.vmax, interpret=interpret),
+                                vmax=spec.vmax, interpret=interpret,
+                                block_m=block_m),
     sharded_axes=_design_bank_axes,
 ))

@@ -1,6 +1,6 @@
 """Shared static limits + backend detection for the fused kernel family.
 
-One place answers the two questions the dispatch registry
+One place answers the three questions the dispatch registry
 (kernels/dispatch.py) asks for every registered entry:
 
 * ``interpret_default()`` — compiled (non-interpret) Pallas kernels are the
@@ -12,6 +12,13 @@ One place answers the two questions the dispatch registry
   (C, 2^N) table plus a (block_m, C) tile must fit a VMEM budget
   (``MAX_CHANNELS``). Outside the envelope the registry routes to the jnp
   oracles (kernels/ref.py) — same math, no tiling assumptions.
+* the VMEM-budget M-tile heuristic (``auto_block_m``) every kernel family
+  sizes its grid from when no explicit/tuned ``block_m`` is given: each
+  family states only its resident-operand footprint (tables, weights,
+  interval tables) and the shared formula splits the remaining budget
+  between the streamed x/out tiles. The perf layer (repro/perf) uses the
+  SAME helper as the fallback the autotuner must beat, so heuristic and
+  tuned choices are always comparable.
 """
 from __future__ import annotations
 
@@ -19,6 +26,11 @@ import jax
 
 MAX_UNROLL_BITS = 6
 MAX_CHANNELS = 4096
+
+# ~2 MB of f32 VMEM for the streamed x + out tiles and the resident
+# operands: half a conservative 4 MB working budget, leaving room for the
+# double-buffered next tile the grid pipeline prefetches.
+VMEM_BUDGET_F32 = (1 << 21) // 4
 
 
 def interpret_default() -> bool:
@@ -30,3 +42,16 @@ def outside_envelope(bits: int, channels: int) -> bool:
     """True when (bits, C) exceeds what the fused kernels statically
     unroll/tile — callers then use the jnp oracle instead."""
     return bits > MAX_UNROLL_BITS or channels > MAX_CHANNELS
+
+
+def auto_block_m(m: int, c: int, resident_floats: int) -> int:
+    """Largest M-tile (f32-sublane aligned, <= 4096) such that the (bm, C)
+    x-tile + (bm, C) out-tile + ``resident_floats`` grid-constant operands
+    (tables/weights/rows, fetched once per outer grid index) fit
+    ``VMEM_BUDGET_F32``. Clamped to ``m`` — a single tile covers small
+    batches. This is the one VMEM heuristic every kernel family falls back
+    to when the dispatch registry has no tuned ``block_m`` for the shape."""
+    avail = max(VMEM_BUDGET_F32 - resident_floats, 0)
+    bm = max(avail // (2 * c), 8)
+    bm = max((bm // 8) * 8, 8)
+    return min(bm, 4096, m)

@@ -42,17 +42,15 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-# MC VMEM residency per grid step: x + out tiles, two (C, 2^N) interval
-# tables, the (C, 2^N) ladder and two (1, C) rows — reuse the quantizer's
-# budget split (see adc_quantize._VMEM_BUDGET_F32) with the 3x table cost.
-from repro.kernels.adc_quantize import _VMEM_BUDGET_F32
+from repro.kernels import envelope
 
 
-def _auto_block_m(m: int, c: int, n: int) -> int:
-    avail = max(_VMEM_BUDGET_F32 - 3 * c * n - 2 * c, 0)
-    bm = max(avail // (2 * c), 8)
-    bm = max((bm // 8) * 8, 8)
-    return min(bm, 4096, m)
+def auto_block_m(m: int, c: int, n: int) -> int:
+    """VMEM-heuristic M-tile for the MC family: per grid step the two
+    (C, 2^N) interval tables, the (C, 2^N) ladder and the two (1, C)
+    drifted rows stay resident (envelope.auto_block_m owns the shared
+    budget split)."""
+    return envelope.auto_block_m(m, c, 3 * c * n + 2 * c)
 
 
 def _mc_tile(x, lb, ub, values, lo, scale):
@@ -97,7 +95,7 @@ def mc_adc_eval_pallas(x: jnp.ndarray, lb: jnp.ndarray, ub: jnp.ndarray,
         interpret = envelope.interpret_default()
     m, c = x.shape
     s, _, n = lb.shape
-    bm = min(block_m, m) if block_m else _auto_block_m(m, c, n)
+    bm = min(block_m, m) if block_m else auto_block_m(m, c, n)
     pad = (-m) % bm
     if pad:
         x = jnp.pad(x, ((0, pad), (0, 0)))
@@ -138,7 +136,7 @@ def mc_adc_eval_pallas_population(x: jnp.ndarray, lb: jnp.ndarray,
         interpret = envelope.interpret_default()
     m, c = x.shape
     p, s, _, n = lb.shape
-    bm = min(block_m, m) if block_m else _auto_block_m(m, c, n)
+    bm = min(block_m, m) if block_m else auto_block_m(m, c, n)
     pad = (-m) % bm
     if pad:
         x = jnp.pad(x, ((0, pad), (0, 0)))

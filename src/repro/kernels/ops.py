@@ -1,76 +1,43 @@
-"""Back-compat entry points over the declarative dispatch registry
+"""Named entry points over the declarative dispatch registry
 (kernels/dispatch.py — DESIGN.md §9).
 
 These wrappers exist for two reasons only:
 
-* they keep the pre-AdcSpec call signatures (``bits=, vmin=, vmax=,
-  mode=`` loose kwargs) working as **deprecation shims** — new code
-  passes ``spec=AdcSpec(...)`` (or uses the ``repro.api`` facade) and the
-  loose form emits a ``DeprecationWarning`` (removal timeline in
-  CHANGES.md);
+* they fix the **calling convention**: every entry takes ``spec=`` (a
+  required ``AdcSpec`` keyword — the loose ``bits=/vmin=/vmax=/mode=``
+  kwargs were deprecation shims through PR 5 and are gone; passing them
+  now raises ``TypeError`` like any unknown kwarg, see CHANGES.md);
 * they own the mask -> baked-value-table decode, so the registry itself
   only ever sees tables (the deployment path hands it baked tables
   directly).
 
 All routing — envelope fallback to the jnp oracles, interpret
-autodetection, the oracle-vs-interpret-kernel auto policy (now identical
-for single-sample, population and bank paths), shard_map partitioning of
-the population/design axis — lives in ``dispatch.dispatch`` /
-``dispatch.dispatch_sharded`` and is logged there.
+autodetection, the oracle-vs-interpret-kernel auto policy (identical for
+single-sample, population and bank paths), tuned-vs-heuristic ``block_m``
+selection, shard_map partitioning of the population/design axis — lives
+in ``dispatch.dispatch`` / ``dispatch.dispatch_sharded`` and is logged
+there.
 """
 from __future__ import annotations
-
-import sys
-import warnings
-from typing import Optional
 
 import jax.numpy as jnp
 
 from repro.core.spec import AdcSpec, as_spec
 from repro.kernels import dispatch
 
-# (shim name, caller filename, caller lineno) triples already warned —
-# each loose-kwarg call SITE warns exactly once per process regardless of
-# the active warnings filters (pytest's 'always' filter would otherwise
-# re-emit on every call and a hot loop would spam; python's own 'default'
-# dedup keys on the warning line, not the caller). Tests reset this set.
-_WARNED_SITES: set = set()
 
-
-def _spec_of(fn: str, spec: Optional[AdcSpec], bits, vmin, vmax, mode
-             ) -> AdcSpec:
-    """spec= wins; the loose-kwarg form still works but is deprecated
-    (removal timeline in CHANGES.md: loose kwargs drop at PR >= 6 and
-    ``spec=`` becomes required)."""
-    if spec is None and bits is not None:
-        caller = sys._getframe(2)
-        site = (fn, caller.f_code.co_filename, caller.f_lineno)
-        if site not in _WARNED_SITES:
-            _WARNED_SITES.add(site)
-            warnings.warn(
-                f"ops.{fn}(bits=..., vmin=..., vmax=..., mode=...) loose "
-                f"kwargs are deprecated; pass spec=AdcSpec(...) instead "
-                f"(see CHANGES.md for the removal timeline)",
-                DeprecationWarning, stacklevel=3)
-    return as_spec(spec, bits=bits, vmin=vmin, vmax=vmax, mode=mode)
-
-
-def adc_quantize(x: jnp.ndarray, mask: jnp.ndarray, *,
-                 spec: Optional[AdcSpec] = None, bits: Optional[int] = None,
-                 vmin=0.0, vmax=1.0, mode: str = "tree",
+def adc_quantize(x: jnp.ndarray, mask: jnp.ndarray, *, spec: AdcSpec,
                  interpret: bool | None = None) -> jnp.ndarray:
     """Quantize (M, C) samples through per-channel pruned binary-search
     ADCs (kernel when the registry resolves one, jnp oracle otherwise)."""
-    spec = _spec_of("adc_quantize", spec, bits, vmin, vmax, mode)
+    spec = as_spec(spec)
     table = spec.value_table(mask)
     return dispatch.dispatch("adc_quantize", x, table, spec=spec,
                              interpret=interpret)
 
 
 def adc_quantize_population(x: jnp.ndarray, masks: jnp.ndarray, *,
-                            spec: Optional[AdcSpec] = None,
-                            bits: Optional[int] = None,
-                            vmin=0.0, vmax=1.0, mode: str = "tree",
+                            spec: AdcSpec,
                             interpret: bool | None = None) -> jnp.ndarray:
     """Quantize one shared (M, C) sample batch through an entire NSGA-II
     population of pruned ADC banks. masks: (P, C, 2^bits). Returns
@@ -78,16 +45,14 @@ def adc_quantize_population(x: jnp.ndarray, masks: jnp.ndarray, *,
     per-individual value table resident in VMEM), batched jnp oracle
     otherwise — the auto (interpret=None) policy is the registry's,
     identical to every other entry."""
-    spec = _spec_of("adc_quantize_population", spec, bits, vmin, vmax, mode)
+    spec = as_spec(spec)
     tables = spec.value_table(masks)                      # (P, C, n)
     return dispatch.dispatch("adc_quantize_population", x, tables,
                              spec=spec, interpret=interpret)
 
 
 def adc_quantize_population_sharded(x: jnp.ndarray, masks: jnp.ndarray, *,
-                                    mesh, spec: Optional[AdcSpec] = None,
-                                    bits: Optional[int] = None, axes=None,
-                                    vmin=0.0, vmax=1.0, mode: str = "tree",
+                                    mesh, spec: AdcSpec, axes=None,
                                     interpret: bool | None = None
                                     ) -> jnp.ndarray:
     """``adc_quantize_population`` with the population axis partitioned
@@ -102,8 +67,7 @@ def adc_quantize_population_sharded(x: jnp.ndarray, masks: jnp.ndarray, *,
     from repro.compat import shard_map
     from repro.distributed import sharding as sharding_lib
 
-    spec = _spec_of("adc_quantize_population_sharded", spec, bits, vmin,
-                    vmax, mode)
+    spec = as_spec(spec)
     p = masks.shape[0]
     if axes is None:
         axes = sharding_lib.population_axes(mesh, p)
@@ -124,24 +88,22 @@ def adc_quantize_population_sharded(x: jnp.ndarray, masks: jnp.ndarray, *,
 
 
 # ------------------------------------------------ fused classifier serving
-def bespoke_mlp(x, mask, w1, b1, w2, b2, *, spec: Optional[AdcSpec] = None,
-                bits: Optional[int] = None, vmin=0.0, vmax=1.0,
-                mode: str = "tree", interpret: bool | None = None):
+def bespoke_mlp(x, mask, w1, b1, w2, b2, *, spec: AdcSpec,
+                interpret: bool | None = None):
     """Fused ADC + 1-hidden-layer printed MLP inference (mask-based: the
     value table is built here; deployment passes baked tables through
     ``classifier_bank``)."""
-    spec = _spec_of("bespoke_mlp", spec, bits, vmin, vmax, mode)
+    spec = as_spec(spec)
     table = spec.value_table(mask)
     return dispatch.dispatch("bespoke_mlp", x, table, w1, b1, w2, b2,
                              spec=spec, interpret=interpret)
 
 
-def bespoke_svm(x, mask, w, b, *, spec: Optional[AdcSpec] = None,
-                bits: Optional[int] = None, vmin=0.0, vmax=1.0,
-                mode: str = "tree", interpret: bool | None = None):
+def bespoke_svm(x, mask, w, b, *, spec: AdcSpec,
+                interpret: bool | None = None):
     """Fused ADC + linear-SVM inference (the paper's second model family),
     same registry contract as ``bespoke_mlp``."""
-    spec = _spec_of("bespoke_svm", spec, bits, vmin, vmax, mode)
+    spec = as_spec(spec)
     table = spec.value_table(mask)
     return dispatch.dispatch("bespoke_svm", x, table, w, b, spec=spec,
                              interpret=interpret)
@@ -153,9 +115,7 @@ def _bank_entry(kind: str) -> str:
     return f"classifier_bank_{kind}"
 
 
-def classifier_bank(x, tables, weights, *, kind: str,
-                    spec: Optional[AdcSpec] = None,
-                    bits: Optional[int] = None, vmin=0.0, vmax=1.0,
+def classifier_bank(x, tables, weights, *, kind: str, spec: AdcSpec,
                     interpret: bool | None = None):
     """One shared (M, C) sample batch through a deployed multi-design bank.
 
@@ -165,15 +125,13 @@ def classifier_bank(x, tables, weights, *, kind: str,
     kind='svm'. Returns (D, M, O) logits. Kernel-vs-oracle routing is the
     registry's ((D, M/block_m) grid, per-design table+weights resident in
     VMEM when the kernel applies)."""
-    spec = _spec_of("classifier_bank", spec, bits, vmin, vmax, "tree")
+    spec = as_spec(spec)
     return dispatch.dispatch(_bank_entry(kind), x, tables, *weights,
                              spec=spec, interpret=interpret)
 
 
 def classifier_bank_sharded(x, tables, weights, *, mesh, kind: str,
-                            spec: Optional[AdcSpec] = None,
-                            bits: Optional[int] = None, axes=None,
-                            vmin=0.0, vmax=1.0,
+                            spec: AdcSpec, axes=None,
                             interpret: bool | None = None):
     """``classifier_bank`` with the design axis partitioned over ``mesh``:
     each device holds only its (D/Dev, ...) slice of tables and weights
@@ -182,8 +140,7 @@ def classifier_bank_sharded(x, tables, weights, *, mesh, kind: str,
     axis rule reuses the population rules
     (distributed/sharding.design_bank_axes). When nothing divides D the
     single-device bank runs unsharded (same results)."""
-    spec = _spec_of("classifier_bank_sharded", spec, bits, vmin, vmax,
-                    "tree")
+    spec = as_spec(spec)
     return dispatch.dispatch_sharded(_bank_entry(kind), x, tables,
                                      *weights, spec=spec, mesh=mesh,
                                      axes=axes, interpret=interpret)

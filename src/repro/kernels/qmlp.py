@@ -43,6 +43,22 @@ from repro.kernels import envelope
 from repro.kernels.adc_quantize import _range_rows
 
 
+def auto_block_m_mlp(m: int, f: int, n: int, h: int, o: int) -> int:
+    """VMEM-heuristic M-tile for the fused MLP entries: the (F, 2^N)
+    table, both weight matrices/biases and the two (1, F) range rows stay
+    resident per grid step (envelope.auto_block_m owns the budget split).
+    Bank launches keep one design's operands resident at a time, so the
+    same footprint applies."""
+    resident = f * n + f * h + h + h * o + o + 2 * f
+    return envelope.auto_block_m(m, f, resident)
+
+
+def auto_block_m_svm(m: int, f: int, n: int, o: int) -> int:
+    """VMEM-heuristic M-tile for the fused SVM entries (resident: table,
+    (F, O) weights, bias, range rows)."""
+    return envelope.auto_block_m(m, f, f * n + f * o + o + 2 * f)
+
+
 def _dequant(x, table, lo, scale, *, bits: int):
     """(bm, F) tile + (F, 2^bits) table + (1, F) range rows -> quantized
     tile, as the one-hot selection sum (gathers are weak on the TPU VPU;
@@ -123,15 +139,18 @@ def _row_specs(c: int, ngrid: int):
                                     "interpret"))
 def bespoke_mlp_pallas(x, table, w1, b1, w2, b2, *, bits: int,
                        vmin=0.0, vmax=1.0,
-                       block_m: int = 256, interpret: bool | None = None):
-    """x (M, F), table (F, 2^bits), 1-hidden-layer weights -> (M, O) logits."""
+                       block_m: int | None = None,
+                       interpret: bool | None = None):
+    """x (M, F), table (F, 2^bits), 1-hidden-layer weights -> (M, O) logits.
+    ``block_m=None`` auto-sizes the tile from the VMEM budget (the
+    dispatch registry may override it with a tuned value)."""
     if interpret is None:
         interpret = envelope.interpret_default()
     m, f = x.shape
     h = w1.shape[1]
     o = w2.shape[1]
     lo, scale = _range_rows(bits, vmin, vmax, f)
-    x, bm = _pad_batch(x, block_m)
+    x, bm = _pad_batch(x, block_m or auto_block_m_mlp(m, f, 2 ** bits, h, o))
     grid = (x.shape[0] // bm,)
     out = pl.pallas_call(
         functools.partial(_mlp_kernel, bits=bits),
@@ -158,14 +177,15 @@ def bespoke_mlp_pallas(x, table, w1, b1, w2, b2, *, bits: int,
                                     "interpret"))
 def bespoke_svm_pallas(x, table, w, b, *, bits: int,
                        vmin=0.0, vmax=1.0,
-                       block_m: int = 256, interpret: bool | None = None):
+                       block_m: int | None = None,
+                       interpret: bool | None = None):
     """x (M, F), table (F, 2^bits), SVM weights (F, O)/(O,) -> (M, O)."""
     if interpret is None:
         interpret = envelope.interpret_default()
     m, f = x.shape
     o = w.shape[1]
     lo, scale = _range_rows(bits, vmin, vmax, f)
-    x, bm = _pad_batch(x, block_m)
+    x, bm = _pad_batch(x, block_m or auto_block_m_svm(m, f, 2 ** bits, o))
     grid = (x.shape[0] // bm,)
     out = pl.pallas_call(
         functools.partial(_svm_kernel, bits=bits),
@@ -189,7 +209,7 @@ def bespoke_svm_pallas(x, table, w, b, *, bits: int,
                                     "interpret"))
 def bespoke_mlp_bank_pallas(x, tables, w1, b1, w2, b2, *, bits: int,
                             vmin=0.0, vmax=1.0,
-                            block_m: int = 256,
+                            block_m: int | None = None,
                             interpret: bool | None = None):
     """Shared x (M, F); per-design tables (D, F, 2^bits) and weights
     (D, F, H)/(D, H)/(D, H, O)/(D, O). Returns (D, M, O) — the whole
@@ -202,7 +222,7 @@ def bespoke_mlp_bank_pallas(x, tables, w1, b1, w2, b2, *, bits: int,
     h = w1.shape[2]
     o = w2.shape[2]
     lo, scale = _range_rows(bits, vmin, vmax, f)
-    x, bm = _pad_batch(x, block_m)
+    x, bm = _pad_batch(x, block_m or auto_block_m_mlp(m, f, 2 ** bits, h, o))
     grid = (d, x.shape[0] // bm)
     out = pl.pallas_call(
         functools.partial(_mlp_bank_kernel, bits=bits),
@@ -229,7 +249,7 @@ def bespoke_mlp_bank_pallas(x, tables, w1, b1, w2, b2, *, bits: int,
                                     "interpret"))
 def bespoke_svm_bank_pallas(x, tables, w, b, *, bits: int,
                             vmin=0.0, vmax=1.0,
-                            block_m: int = 256,
+                            block_m: int | None = None,
                             interpret: bool | None = None):
     """Shared x (M, F); per-design tables (D, F, 2^bits), w (D, F, O),
     b (D, O). Returns (D, M, O)."""
@@ -239,7 +259,7 @@ def bespoke_svm_bank_pallas(x, tables, w, b, *, bits: int,
     d = tables.shape[0]
     o = w.shape[2]
     lo, scale = _range_rows(bits, vmin, vmax, f)
-    x, bm = _pad_batch(x, block_m)
+    x, bm = _pad_batch(x, block_m or auto_block_m_svm(m, f, 2 ** bits, o))
     grid = (d, x.shape[0] // bm)
     out = pl.pallas_call(
         functools.partial(_svm_bank_kernel, bits=bits),

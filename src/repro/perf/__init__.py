@@ -1,0 +1,23 @@
+"""Performance layer: workload vocabulary, analytic cost/roofline model,
+and the block_m autotuner (DESIGN.md §11).
+
+Import-light on purpose: kernels/dispatch.py imports the workload
+vocabulary at module import time, so only ``workload`` symbols load
+eagerly; ``cost_model`` and ``autotune`` resolve lazily on first
+attribute access.
+"""
+from repro.perf.workload import (Workload, shape_class,  # noqa: F401
+                                 workload_of)
+
+_LAZY = ("cost_model", "autotune")
+
+
+def __getattr__(name):
+    if name in _LAZY:
+        import importlib
+        return importlib.import_module(f"repro.perf.{name}")
+    raise AttributeError(f"module 'repro.perf' has no attribute {name!r}")
+
+
+def __dir__():
+    return sorted(list(globals()) + list(_LAZY))

@@ -1,0 +1,279 @@
+"""Autotuned ``block_m`` selection for the dispatch registry
+(DESIGN.md §11).
+
+The kernels' VMEM-budget heuristic (kernels/envelope.auto_block_m) picks
+one tile size per shape from a static model; this module *measures*
+instead: per registry entry and shape class it times the kernel at every
+candidate tile, picks the winner, and persists the choices as a JSON
+table next to the registry (``kernels/tuned_tables.json``), which
+``dispatch()`` consults before falling back to the heuristic
+(kernels/dispatch.tuned_block_m). Guarantees:
+
+* the heuristic tile is always among the candidates, so the tuned choice
+  never measures worse than the fallback on the tuning run;
+* selection is deterministic — candidates are measured in sorted order
+  and ties break toward the smaller tile — so identical measurements
+  produce byte-identical tables (the determinism contract the tests
+  pin);
+* tuning can only change *speed*: ``block_m`` never reaches the kernels'
+  math, so the bitwise kernel==oracle parity contract is untouched.
+
+Tables are validated on load (``load_table``): wrong version, wrong
+backend (a table tuned on another machine is stale, not wrong), or a
+malformed document all degrade to "no tuned entry" — the dispatch layer
+then logs the heuristic fallback like any other routing decision.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import logging
+import os
+import time
+from pathlib import Path
+from typing import Callable, Dict, Iterable, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.perf import cost_model
+from repro.perf.workload import Workload, shape_class
+
+log = logging.getLogger(__name__)
+
+TABLE_VERSION = 1
+
+# the default persisted location — next to the dispatch registry, so the
+# tuned table travels with the kernels it describes
+DEFAULT_TABLE_PATH = (Path(__file__).resolve().parent.parent / "kernels"
+                      / "tuned_tables.json")
+TABLE_ENV_VAR = "REPRO_TUNED_TABLE"
+
+
+def candidate_block_ms(w: Workload, limit: int = 4096) -> Tuple[int, ...]:
+    """Sorted candidate tiles for one workload: powers of two from 8 up
+    to min(M, limit), plus M itself and the heuristic choice (dedup'd) —
+    the heuristic must be in the race so 'tuned beats or matches
+    heuristic' holds by construction."""
+    cap = min(w.m, limit)
+    cands = {min(w.m, 8)}
+    b = 8
+    while b <= cap:
+        cands.add(b)
+        b <<= 1
+    cands.add(cap)
+    cands.add(min(cost_model.heuristic_block_m(w), cap))
+    return tuple(sorted(cands))
+
+
+def _default_measure(entry_name: str, w: Workload, block_m: int,
+                     operands: tuple, *, spec, interpret: Optional[bool],
+                     reps: int, warmup: int) -> float:
+    """Wall-time one kernel launch (us/call), blocking on the result."""
+    import jax
+
+    from repro.kernels import dispatch
+    entry = dispatch.get(entry_name)
+    x, tables, *weights = operands
+    fn = lambda: entry.kernel(x, tables, *weights, spec=spec,
+                              interpret=interpret, block_m=block_m)
+    for _ in range(warmup):
+        jax.block_until_ready(fn())
+    t0 = time.perf_counter()
+    for _ in range(max(reps, 1)):
+        jax.block_until_ready(fn())
+    return (time.perf_counter() - t0) / max(reps, 1) * 1e6
+
+
+def _tuning_operands(w: Workload, seed: int = 0) -> Tuple[tuple, object]:
+    """Synthetic operands for one workload, in registry order (x, tables,
+    *weights), plus the AdcSpec driving them. Deterministic in ``seed``."""
+    import jax.numpy as jnp
+
+    from repro.core import adc, nonideal
+    from repro.core.spec import AdcSpec
+    rng = np.random.default_rng(seed)
+    spec = AdcSpec(bits=w.bits)
+    x = jnp.asarray(rng.random((w.m, w.c)), jnp.float32)
+    n = w.levels
+
+    def masks(*lead):
+        raw = (rng.random(lead + (w.c, n)) < 0.6).astype(np.int32)
+        return adc.repair_mask(jnp.asarray(raw))
+
+    def weights(*shape):
+        return jnp.asarray(rng.standard_normal(shape), jnp.float32)
+
+    if w.entry == "adc_quantize":
+        return (x, spec.value_table(masks())), spec
+    if w.entry == "adc_quantize_population":
+        return (x, spec.value_table(masks(w.p))), spec
+    if w.entry in ("mc_eval", "mc_eval_population"):
+        ni = nonideal.NonIdealSpec(sigma_offset=0.3, sigma_range=0.01,
+                                   fault_rate=0.02, seed=seed)
+        lead = (w.p,) if w.entry == "mc_eval_population" else ()
+        ops_mc = nonideal.mc_operands(spec, ni, masks(*lead), samples=w.s)
+        return (x,) + tuple(ops_mc), spec
+    if w.entry == "bespoke_mlp":
+        return (x, spec.value_table(masks()), weights(w.c, w.h),
+                weights(w.h), weights(w.h, w.o), weights(w.o)), spec
+    if w.entry == "bespoke_svm":
+        return (x, spec.value_table(masks()), weights(w.c, w.o),
+                weights(w.o)), spec
+    if w.entry == "classifier_bank_mlp":
+        return (x, spec.value_table(masks(w.d)), weights(w.d, w.c, w.h),
+                weights(w.d, w.h), weights(w.d, w.h, w.o),
+                weights(w.d, w.o)), spec
+    if w.entry == "classifier_bank_svm":
+        return (x, spec.value_table(masks(w.d)), weights(w.d, w.c, w.o),
+                weights(w.d, w.o)), spec
+    raise ValueError(f"no tuning-operand rule for entry {w.entry!r}")
+
+
+# the default per-entry tuning sweep: one modest shape class per entry —
+# small enough to tune in seconds even in interpret mode, representative
+# of the smoke/bench shapes the CI lane tracks
+def default_workloads(m: int = 256, c: int = 8, bits: int = 3
+                      ) -> Tuple[Workload, ...]:
+    return (
+        Workload("adc_quantize", m=m, c=c, bits=bits),
+        Workload("adc_quantize_population", m=m, c=c, bits=bits, p=8),
+        Workload("mc_eval", m=m, c=c, bits=bits, s=4),
+        Workload("mc_eval_population", m=m, c=c, bits=bits, p=4, s=4),
+        Workload("bespoke_mlp", m=m, c=c, bits=bits, h=4, o=3),
+        Workload("bespoke_svm", m=m, c=c, bits=bits, o=3),
+        Workload("classifier_bank_mlp", m=m, c=c, bits=bits, d=4, h=4, o=3),
+        Workload("classifier_bank_svm", m=m, c=c, bits=bits, d=4, o=3),
+    )
+
+
+def tune(workloads: Optional[Iterable[Workload]] = None, *,
+         backend: Optional[str] = None,
+         interpret: Optional[bool] = None,
+         reps: int = 3, warmup: int = 1, seed: int = 0,
+         measure_fn: Optional[Callable] = None) -> Dict:
+    """Measure every candidate ``block_m`` for every workload and return
+    the tuned table (see ``save_table`` for the JSON form).
+
+    ``measure_fn(entry, workload, block_m) -> us`` overrides the built-in
+    wall-time measurement (tests inject deterministic measurements; the
+    table derived from a fixed measurement set is byte-identical across
+    runs). ``interpret=None`` resolves to the backend default — compiled
+    on TPU, interpret elsewhere (tuning the interpret path is only
+    meaningful as a plumbing check; real tables come from TPU runs).
+    """
+    import jax
+
+    from repro.kernels import dispatch, envelope
+    if backend is None:
+        backend = jax.default_backend()
+    if interpret is None:
+        interpret = envelope.interpret_default()
+    entries: Dict[str, Dict] = {}
+    for w in (workloads if workloads is not None else default_workloads()):
+        dispatch.get(w.entry)                   # unknown entry -> loud error
+        if not envelope.outside_envelope(w.bits, w.c):
+            operands = spec = None
+            if measure_fn is None:
+                operands, spec = _tuning_operands(w, seed)
+            heuristic = cost_model.heuristic_block_m(w)
+            results: Dict[str, float] = {}
+            best_bm, best_us = None, None
+            for bm in candidate_block_ms(w):
+                if measure_fn is not None:
+                    us = float(measure_fn(w.entry, w, bm))
+                else:
+                    us = _default_measure(w.entry, w, bm, operands,
+                                          spec=spec, interpret=interpret,
+                                          reps=reps, warmup=warmup)
+                results[str(bm)] = us
+                if best_us is None or us < best_us:   # tie -> smaller bm
+                    best_bm, best_us = bm, us
+            key = shape_class(w)
+            entries.setdefault(w.entry, {})[key] = {
+                "block_m": best_bm,
+                "us": best_us,
+                "heuristic_block_m": heuristic,
+                "heuristic_us": results[str(min(heuristic, w.m))],
+                "workload": w.to_meta(),
+                "candidates_us": results,
+            }
+            log.info("autotune %s[%s]: block_m=%d (%.1fus) vs heuristic "
+                     "%d (%.1fus)", w.entry, key, best_bm, best_us,
+                     heuristic, entries[w.entry][key]["heuristic_us"])
+    return {"version": TABLE_VERSION, "backend": backend,
+            "interpret": bool(interpret), "entries": entries}
+
+
+def save_table(table: Dict, path=None) -> Path:
+    """Persist a tuned table as sorted-key JSON (atomic replace), default
+    next to kernels/dispatch.py, and reset the dispatch layer's cached
+    policy so the new table takes effect in-process."""
+    path = Path(path) if path else DEFAULT_TABLE_PATH
+    tmp = path.with_suffix(".tmp")
+    tmp.write_text(json.dumps(table, indent=1, sort_keys=True) + "\n")
+    os.replace(tmp, path)
+    from repro.kernels import dispatch
+    dispatch.reset_tuned_policy()
+    return path
+
+
+def load_table(path=None) -> Optional[Dict]:
+    """Read + validate a tuned table. Returns None (with a WARNING log)
+    for a missing, corrupt (unparseable / wrong schema / wrong version)
+    or stale (tuned for another backend) table — the dispatch layer then
+    falls back to the VMEM heuristic."""
+    import jax
+    path = Path(path) if path else Path(
+        os.environ.get(TABLE_ENV_VAR, DEFAULT_TABLE_PATH))
+    if not path.exists():
+        return None
+    try:
+        table = json.loads(path.read_text())
+    except (OSError, ValueError) as e:
+        log.warning("tuned table %s is corrupt (%s) — falling back to the "
+                    "VMEM heuristic", path, e)
+        return None
+    if (not isinstance(table, dict)
+            or table.get("version") != TABLE_VERSION
+            or not isinstance(table.get("entries"), dict)):
+        log.warning("tuned table %s has unknown schema/version — falling "
+                    "back to the VMEM heuristic", path)
+        return None
+    if table.get("backend") != jax.default_backend():
+        log.warning("tuned table %s is stale (tuned for backend=%r, "
+                    "running %r) — falling back to the VMEM heuristic",
+                    path, table.get("backend"), jax.default_backend())
+        return None
+    return table
+
+
+@dataclasses.dataclass(frozen=True)
+class TablePolicy:
+    """The ``dispatch.set_tuned_policy`` adapter over a loaded table:
+    entry + shape class -> tuned block_m, else None (heuristic)."""
+    table: Dict
+
+    def __call__(self, entry: str, w: Workload) -> Optional[int]:
+        rec = self.table.get("entries", {}).get(entry, {}).get(
+            shape_class(w))
+        if not isinstance(rec, dict):
+            return None
+        bm = rec.get("block_m")
+        return int(bm) if isinstance(bm, (int, float)) and bm >= 1 else None
+
+
+def load_policy(path=None) -> Optional[TablePolicy]:
+    """``load_table`` wrapped as a dispatch policy (None when the table
+    is absent/corrupt/stale)."""
+    table = load_table(path)
+    return TablePolicy(table) if table is not None else None
+
+
+def autotune(workloads: Optional[Sequence[Workload]] = None, *,
+             write: bool = True, path=None, **kw) -> Dict:
+    """Tune + (by default) persist + activate: the one-call form
+    ``repro.api.autotune`` exposes. Returns the tuned table."""
+    table = tune(workloads, **kw)
+    if write:
+        save_table(table, path)
+    return table

@@ -1,0 +1,113 @@
+"""Workload — the shape vocabulary shared by the dispatch registry and
+the performance layer (DESIGN.md §11).
+
+A ``Workload`` names everything the cost model and the autotuner need to
+reason about one kernel launch: which registry entry, and the
+(P, D, S, C, M, bits, H, O) extents of its operands. The dispatch
+registry builds one per call (``workload_of`` reads the extents straight
+off the operand shapes, per entry family), the cost model prices it, and
+the autotuner buckets it into a **shape class** — the granularity tuned
+``block_m`` choices are keyed by in the persisted table. Batch-like axes
+(M, P, S, D) bucket to the next power of two so neighbouring launch sizes
+share one tuned choice; structural extents (C, bits, H, O) stay exact
+because they change the kernel's resident footprint.
+
+This module is import-light on purpose: kernels/dispatch.py pulls it in
+at module import, so it must not drag jax/pallas or the rest of
+repro.perf along.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Tuple
+
+
+@dataclasses.dataclass(frozen=True)
+class Workload:
+    """One kernel launch, shape-wise. Leading axes default to 1 so every
+    entry family shares the same record: population entries set ``p``,
+    bank entries ``d``, Monte-Carlo entries ``s``; classifier entries
+    carry their hidden/output extents in ``h``/``o`` (0 where absent)."""
+    entry: str
+    m: int                  # samples in the shared batch
+    c: int                  # channels / features
+    bits: int               # ADC resolution (2^bits table columns)
+    p: int = 1              # population size
+    d: int = 1              # deployed bank designs
+    s: int = 1              # Monte-Carlo instances
+    h: int = 0              # hidden units (MLP entries)
+    o: int = 0              # output classes (classifier entries)
+
+    def __post_init__(self):
+        for name in ("m", "c", "bits", "p", "d", "s"):
+            if getattr(self, name) < 1:
+                raise ValueError(f"Workload.{name} must be >= 1, got "
+                                 f"{getattr(self, name)}")
+
+    @property
+    def levels(self) -> int:
+        return 2 ** self.bits
+
+    def replace(self, **kw) -> "Workload":
+        return dataclasses.replace(self, **kw)
+
+    def to_meta(self) -> Dict:
+        return dataclasses.asdict(self)
+
+    @classmethod
+    def from_meta(cls, meta: Dict) -> "Workload":
+        return cls(**{k: (v if k == "entry" else int(v))
+                      for k, v in meta.items()})
+
+
+def _pow2_bucket(n: int) -> int:
+    """Smallest power of two >= n (the shape-class bucket for batch-like
+    axes)."""
+    b = 1
+    while b < n:
+        b <<= 1
+    return b
+
+
+def shape_class(w: Workload) -> str:
+    """The stable string key a tuned table stores one ``block_m`` choice
+    under. Deterministic, order-fixed, JSON-safe."""
+    return (f"m{_pow2_bucket(w.m)}-c{w.c}-b{w.bits}-p{_pow2_bucket(w.p)}"
+            f"-d{_pow2_bucket(w.d)}-s{_pow2_bucket(w.s)}-h{w.h}-o{w.o}")
+
+
+def workload_of(entry: str, x_shape: Tuple[int, ...],
+                table_shape: Tuple[int, ...],
+                weight_shapes: Tuple[Tuple[int, ...], ...],
+                bits: int) -> Workload:
+    """Read a ``Workload`` off the operand shapes of one dispatch call.
+
+    ``table_shape`` is the first post-x operand — the baked value table
+    for the ideal entries, the lb interval table for the MC entries —
+    whose leading axes carry P/S/D; ``weight_shapes`` are the rest, in
+    registry order. Mirrors the registry entry set by name; the perf
+    test-sweep asserts every registered entry is covered here.
+    """
+    m, c = int(x_shape[0]), int(x_shape[1])
+    w = dict(m=m, c=c, bits=bits)
+    if entry == "adc_quantize":
+        pass
+    elif entry == "adc_quantize_population":
+        w["p"] = int(table_shape[0])
+    elif entry == "mc_eval":
+        w["s"] = int(table_shape[0])
+    elif entry == "mc_eval_population":
+        w["p"], w["s"] = int(table_shape[0]), int(table_shape[1])
+    elif entry == "bespoke_mlp":
+        w["h"], w["o"] = int(weight_shapes[0][1]), int(weight_shapes[2][1])
+    elif entry == "bespoke_svm":
+        w["o"] = int(weight_shapes[0][1])
+    elif entry == "classifier_bank_mlp":
+        w["d"] = int(table_shape[0])
+        w["h"], w["o"] = int(weight_shapes[0][2]), int(weight_shapes[2][2])
+    elif entry == "classifier_bank_svm":
+        w["d"] = int(table_shape[0])
+        w["o"] = int(weight_shapes[0][2])
+    else:
+        raise ValueError(f"no workload rule for kernel entry {entry!r}")
+    return Workload(entry=entry, **w)

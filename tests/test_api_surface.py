@@ -21,6 +21,7 @@ API_SURFACE = {
     "Front",
     "NonIdealSpec",
     "SearchConfig",
+    "autotune",
     "deploy",
     "evaluate_robustness",
     "load_front",

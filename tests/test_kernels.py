@@ -6,6 +6,7 @@ import numpy as np
 import pytest
 from hypothesis_compat import given, settings, st
 
+from repro.core.spec import AdcSpec
 from repro.core import adc
 from repro.kernels import ops, ref
 from repro.kernels.adc_quantize import adc_quantize_pallas
@@ -57,7 +58,8 @@ def test_kernel_matches_core_adc(bits):
     x = jnp.asarray(rng.random((64, c)), jnp.float32)
     mask = _rand_mask(rng, c, 2 ** bits)
     via_core = adc.adc_quantize(x, mask, bits=bits, mode="tree", ste=False)
-    via_ops = ops.adc_quantize(x, mask, bits=bits, interpret=True)
+    via_ops = ops.adc_quantize(x, mask, spec=AdcSpec(bits=bits),
+                               interpret=True)
     np.testing.assert_allclose(np.asarray(via_ops), np.asarray(via_core),
                                rtol=1e-6)
 
@@ -150,7 +152,7 @@ def test_ops_bespoke_mlp_fallback_outside_envelope(bits, c):
     x = jnp.asarray(rng.random((m, c)), jnp.float32)
     mask = _rand_mask(rng, c, 2 ** bits)
     w1, b1, w2, b2 = _mlp_weights(rng, c, h, o)
-    got = ops.bespoke_mlp(x, mask, w1, b1, w2, b2, bits=bits)
+    got = ops.bespoke_mlp(x, mask, w1, b1, w2, b2, spec=AdcSpec(bits=bits))
     table = ref.value_table(mask, bits)
     want = ref.bespoke_mlp_ref(x, table, bits, w1, b1, w2, b2)
     np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
@@ -174,7 +176,8 @@ def test_bespoke_svm_kernel_matches_ref(bits):
                              interpret=True)
     np.testing.assert_allclose(np.asarray(got), np.asarray(want),
                                rtol=1e-5, atol=1e-5)
-    via_ops = ops.bespoke_svm(x, mask, w, b, bits=bits, interpret=True)
+    via_ops = ops.bespoke_svm(x, mask, w, b, spec=AdcSpec(bits=bits),
+                              interpret=True)
     np.testing.assert_allclose(np.asarray(via_ops), np.asarray(want),
                                rtol=1e-5, atol=1e-5)
 
@@ -239,16 +242,19 @@ def test_ops_classifier_bank_envelope(kind):
             weights = (jnp.asarray(rng.normal(size=(d, f, o)), jnp.float32),
                        jnp.asarray(rng.normal(size=(d, o)), jnp.float32))
             want = ref.bespoke_svm_bank_ref(x, tables, bits, *weights)
-        got = ops.classifier_bank(x, tables, weights, kind=kind, bits=bits)
+        got = ops.classifier_bank(x, tables, weights, kind=kind,
+                                  spec=AdcSpec(bits=bits))
         np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
         if bits <= 6:
             via_kernel = ops.classifier_bank(x, tables, weights, kind=kind,
-                                             bits=bits, interpret=True)
+                                             spec=AdcSpec(bits=bits),
+                                             interpret=True)
             np.testing.assert_allclose(np.asarray(via_kernel),
                                        np.asarray(want), rtol=1e-5,
                                        atol=1e-5)
     with pytest.raises(ValueError):
-        ops.classifier_bank(x, tables, weights, kind="tree", bits=3)
+        ops.classifier_bank(x, tables, weights, kind="tree",
+                            spec=AdcSpec(bits=3))
 
 
 # ---------------------------------------------------------- flash attention

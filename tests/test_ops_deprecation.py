@@ -1,8 +1,9 @@
-"""PR 4's deprecation timeline, enforced: every loose-kwarg ops.py shim
-warns exactly once per call SITE (not per call, not per process), so a
-hot loop cannot spam and every distinct legacy caller still gets told
-once. Removal is documented in CHANGES.md: the shims survive through
-PR 5; at PR >= 6 the loose kwargs drop and ``spec=`` becomes required."""
+"""PR 4's deprecation timeline, executed: the loose-kwarg ops.py shims
+(``bits=/vmin=/vmax=/mode=``) warned through PR 5 and were removed at
+PR 6 as committed in CHANGES.md. ``spec=`` is now a required keyword —
+the loose forms fail like any unknown kwarg (TypeError), not with a
+warning, and the spec form never warns."""
+import inspect
 import warnings
 
 import jax.numpy as jnp
@@ -25,83 +26,73 @@ W1 = jnp.asarray(RNG.random((4, 5)), jnp.float32)
 B1 = jnp.zeros((5,), jnp.float32)
 W2 = jnp.asarray(RNG.random((5, 3)), jnp.float32)
 B2 = jnp.zeros((3,), jnp.float32)
+SPEC = AdcSpec(bits=3)
+TABLES = jnp.stack([SPEC.value_table(MASK)])
 
-# every shim exercised through its loose-kwarg form, TWO distinct source
-# lines per entry (a call site is the literal (file, line) the shim is
-# invoked from, so the second-site lambda must live on its own line)
-SHIMS = {
-    "adc_quantize": (
-        lambda: ops.adc_quantize(X, MASK, bits=3),
-        lambda: ops.adc_quantize(X, MASK, bits=3),
-    ),
-    "adc_quantize_population": (
+# every former shim exercised through its (removed) loose-kwarg form
+LOOSE_CALLS = {
+    "adc_quantize": lambda: ops.adc_quantize(X, MASK, bits=3),
+    "adc_quantize_population":
         lambda: ops.adc_quantize_population(X, MASKS, bits=3),
-        lambda: ops.adc_quantize_population(X, MASKS, bits=3),
-    ),
-    "bespoke_mlp": (
-        lambda: ops.bespoke_mlp(X, MASK, W1, B1, W2, B2, bits=3),
-        lambda: ops.bespoke_mlp(X, MASK, W1, B1, W2, B2, bits=3),
-    ),
-    "bespoke_svm": (
-        lambda: ops.bespoke_svm(X, MASK, W, B, bits=3),
-        lambda: ops.bespoke_svm(X, MASK, W, B, bits=3),
-    ),
-    "classifier_bank": (
-        lambda: ops.classifier_bank(
-            X, jnp.stack([AdcSpec(bits=3).value_table(MASK)]),
-            (W[None], B[None]), kind="svm", bits=3),
-        lambda: ops.classifier_bank(
-            X, jnp.stack([AdcSpec(bits=3).value_table(MASK)]),
-            (W[None], B[None]), kind="svm", bits=3),
-    ),
+    "bespoke_mlp": lambda: ops.bespoke_mlp(X, MASK, W1, B1, W2, B2, bits=3),
+    "bespoke_svm": lambda: ops.bespoke_svm(X, MASK, W, B, bits=3),
+    "classifier_bank": lambda: ops.classifier_bank(
+        X, TABLES, (W[None], B[None]), kind="svm", bits=3),
+}
+
+# the same entries through the one supported calling convention
+SPEC_CALLS = {
+    "adc_quantize": lambda: ops.adc_quantize(X, MASK, spec=SPEC),
+    "adc_quantize_population":
+        lambda: ops.adc_quantize_population(X, MASKS, spec=SPEC),
+    "bespoke_mlp":
+        lambda: ops.bespoke_mlp(X, MASK, W1, B1, W2, B2, spec=SPEC),
+    "bespoke_svm": lambda: ops.bespoke_svm(X, MASK, W, B, spec=SPEC),
+    "classifier_bank": lambda: ops.classifier_bank(
+        X, TABLES, (W[None], B[None]), kind="svm", spec=SPEC),
 }
 
 
-def _caught(fn):
-    with warnings.catch_warnings(record=True) as w:
-        # 'always' would re-emit on every call if the shims relied on
-        # python's default once-per-location filter — the dedup under
-        # test is the shims' own per-call-site registry
+@pytest.mark.parametrize("name", sorted(LOOSE_CALLS))
+def test_loose_kwargs_removed(name):
+    """bits= (and friends) are gone — unknown-kwarg TypeError, not a
+    DeprecationWarning-carrying shim."""
+    with pytest.raises(TypeError):
+        LOOSE_CALLS[name]()
+
+
+@pytest.mark.parametrize("kw", ["bits", "vmin", "vmax", "mode"])
+def test_no_loose_parameters_survive(kw):
+    """No public ops entry point advertises any loose kwarg."""
+    for name, fn in inspect.getmembers(ops, inspect.isfunction):
+        if name.startswith("_") or fn.__module__ != ops.__name__:
+            continue
+        assert kw not in inspect.signature(fn).parameters, (
+            f"ops.{name} still accepts {kw}=")
+
+
+@pytest.mark.parametrize("name", sorted(SPEC_CALLS))
+def test_spec_form_works_and_never_warns(name):
+    with warnings.catch_warnings(record=True) as caught:
         warnings.simplefilter("always")
-        fn()
-    return [x for x in w if issubclass(x.category, DeprecationWarning)]
+        out = SPEC_CALLS[name]()
+    assert out is not None
+    assert [w for w in caught
+            if issubclass(w.category, DeprecationWarning)] == []
 
 
-@pytest.mark.parametrize("name", sorted(SHIMS))
-def test_each_shim_warns_exactly_once_per_call_site(name):
-    ops._WARNED_SITES.clear()
-    first, second = SHIMS[name]
-    assert len(_caught(first)) == 1, f"{name}: first call must warn"
-    assert len(_caught(first)) == 0, f"{name}: same site must not re-warn"
-    assert len(_caught(first)) == 0
-    # a DIFFERENT call site of the same shim warns again, once
-    assert len(_caught(second)) == 1
-    assert len(_caught(second)) == 0
-
-
-def test_spec_form_never_warns():
-    ops._WARNED_SITES.clear()
-    spec = AdcSpec(bits=3)
-    assert _caught(lambda: ops.adc_quantize(X, MASK, spec=spec)) == []
-    assert _caught(lambda: ops.classifier_bank(
-        X, jnp.stack([spec.value_table(MASK)]), (W[None], B[None]),
-        kind="svm", spec=spec)) == []
-
-
-def test_sites_are_tracked_per_shim():
-    """Two different shims called from the same line each warn (the site
-    key includes the shim name)."""
-    ops._WARNED_SITES.clear()
-    both = lambda: (ops.adc_quantize(X, MASK, bits=3),
-                    ops.adc_quantize_population(X, MASKS, bits=3))
-    assert len(_caught(both)) == 2
-    assert len(_caught(both)) == 0
+def test_spec_is_required():
+    """Omitting spec= entirely is also a TypeError (it has no default)."""
+    with pytest.raises(TypeError):
+        ops.adc_quantize(X, MASK)
+    assert ops.adc_quantize.__kwdefaults__ is None or \
+        "spec" not in (ops.adc_quantize.__kwdefaults__ or {})
 
 
 def test_removal_timeline_documented():
-    """CHANGES.md must carry the PR >= 6 removal commitment the shims
-    reference in their warning text."""
+    """CHANGES.md must record both the PR >= 6 commitment and that PR 6
+    executed it."""
     import pathlib
     changes = (pathlib.Path(__file__).resolve().parent.parent
                / "CHANGES.md").read_text()
-    assert "PR >= 6" in changes or "PR >= 6".replace(" ", "") in changes
+    assert "PR >= 6" in changes or "PR>=6" in changes

@@ -1,0 +1,147 @@
+"""The perf-regression CI gate (benchmarks/regression.py): passes inside
+the tolerance band, fails on slowdowns / missing entries / FAILED rows
+with an actionable offender list, and supports per-entry bands and
+baseline refresh."""
+import json
+
+import pytest
+
+from benchmarks import regression
+
+
+def _doc(rows, backend="cpu", failures=0, **extra):
+    doc = {"backend": backend, "device_count": 1, "smoke": True,
+           "failures": failures,
+           "rows": [{"name": n, "us_per_call": us, "derived": d}
+                    for n, us, d in rows]}
+    doc.update(extra)
+    return doc
+
+
+BASELINE = _doc([("search_adc", 1000.0, "pop=8"),
+                 ("serve_classifier", 2000.0, "D=3"),
+                 ("mc_robustness", 500.0, "P=4,S=4")])
+
+
+def test_identical_run_passes():
+    rep = regression.compare(BASELINE, BASELINE)
+    assert rep.ok and rep.failures == []
+    assert rep.checked == 3
+
+
+def test_within_band_passes_and_counts():
+    cur = _doc([("search_adc", 1400.0, ""), ("serve_classifier", 1500.0, ""),
+                ("mc_robustness", 600.0, "")])
+    rep = regression.compare(cur, BASELINE)
+    assert rep.ok
+    assert rep.checked == 3
+
+
+def test_injected_2x_slowdown_fails_with_offender_named():
+    """The acceptance fixture: a >= 2x slowdown on one entry must breach
+    the default 1.75x band and name the offender with both timings."""
+    cur = _doc([("search_adc", 2000.0, ""), ("serve_classifier", 2000.0, ""),
+                ("mc_robustness", 500.0, "")])
+    rep = regression.compare(cur, BASELINE)
+    assert not rep.ok
+    assert len(rep.failures) == 1
+    msg = rep.failures[0]
+    assert "search_adc" in msg and "2.00x" in msg and "1000" in msg
+    assert "refresh the baseline" in rep.render()
+
+
+def test_missing_entry_fails():
+    cur = _doc([("search_adc", 1000.0, ""),
+                ("serve_classifier", 2000.0, "")])
+    rep = regression.compare(cur, BASELINE)
+    assert not rep.ok
+    assert any("mc_robustness" in f and "missing" in f
+               for f in rep.failures)
+
+
+def test_failed_row_fails():
+    cur = _doc([("search_adc", None, "FAILED ValueError: boom"),
+                ("serve_classifier", 2000.0, ""),
+                ("mc_robustness", 500.0, "")], failures=1)
+    rep = regression.compare(cur, BASELINE)
+    assert not rep.ok
+    assert any("search_adc" in f and "FAILED" in f for f in rep.failures)
+
+
+def test_new_entry_is_note_not_failure():
+    cur = _doc([("search_adc", 1000.0, ""), ("serve_classifier", 2000.0, ""),
+                ("mc_robustness", 500.0, ""),
+                ("autotune", 300.0, "new bench")])
+    rep = regression.compare(cur, BASELINE)
+    assert rep.ok
+    assert any("autotune" in n for n in rep.notes)
+
+
+def test_per_entry_tolerance_bands():
+    cur = _doc([("search_adc", 2500.0, ""), ("serve_classifier", 2000.0, ""),
+                ("mc_robustness", 500.0, "")])
+    # default band fails...
+    assert not regression.compare(cur, BASELINE).ok
+    # ...a widened per-entry band passes (CLI form)
+    rep = regression.compare(cur, BASELINE,
+                             entry_tolerances={"search_adc": 3.0})
+    assert rep.ok
+    # ...and the baseline file itself can carry the band
+    base = dict(BASELINE)
+    base["tolerances"] = {"search_adc": 3.0}
+    assert regression.compare(cur, base).ok
+
+
+def test_backend_mismatch_fails():
+    cur = _doc([("search_adc", 1000.0, ""), ("serve_classifier", 2000.0, ""),
+                ("mc_robustness", 500.0, "")], backend="tpu")
+    rep = regression.compare(cur, BASELINE)
+    assert not rep.ok
+    assert any("backend mismatch" in f for f in rep.failures)
+
+
+def test_cli_pass_and_fail_and_refresh(tmp_path, capsys):
+    cur_ok = tmp_path / "ok.json"
+    cur_bad = tmp_path / "bad.json"
+    base = tmp_path / "base.json"
+    base.write_text(json.dumps(BASELINE))
+    cur_ok.write_text(json.dumps(BASELINE))
+    bad = _doc([("search_adc", 5000.0, ""),
+                ("serve_classifier", 2000.0, ""),
+                ("mc_robustness", 500.0, "")])
+    cur_bad.write_text(json.dumps(bad))
+
+    assert regression.main([str(cur_ok), "--baseline", str(base)]) == 0
+    assert "PASS" in capsys.readouterr().out
+    assert regression.main([str(cur_bad), "--baseline", str(base)]) == 1
+    out = capsys.readouterr().out
+    assert "FAIL" in out and "search_adc" in out
+
+    # --write-baseline refreshes instead of gating, then the gate passes
+    assert regression.main([str(cur_bad), "--baseline", str(base),
+                            "--write-baseline"]) == 0
+    assert regression.main([str(cur_bad), "--baseline", str(base)]) == 0
+
+
+def test_cli_missing_baseline_is_actionable(tmp_path):
+    cur = tmp_path / "cur.json"
+    cur.write_text(json.dumps(BASELINE))
+    with pytest.raises(SystemExit, match="write-baseline"):
+        regression.main([str(cur), "--baseline",
+                         str(tmp_path / "nope.json")])
+
+
+def test_cli_entry_tolerance_parsing(tmp_path):
+    cur = tmp_path / "cur.json"
+    base = tmp_path / "base.json"
+    base.write_text(json.dumps(BASELINE))
+    bad = _doc([("search_adc", 2500.0, ""),
+                ("serve_classifier", 2000.0, ""),
+                ("mc_robustness", 500.0, "")])
+    cur.write_text(json.dumps(bad))
+    assert regression.main([str(cur), "--baseline", str(base)]) == 1
+    assert regression.main([str(cur), "--baseline", str(base),
+                            "--entry-tolerance", "search_adc=3.0"]) == 0
+    with pytest.raises(SystemExit, match="name=ratio"):
+        regression.main([str(cur), "--baseline", str(base),
+                         "--entry-tolerance", "search_adc"])

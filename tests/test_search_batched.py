@@ -5,6 +5,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro.core.spec import AdcSpec
 from repro.core import adc, nsga2, search
 from repro.kernels import ops, ref
 from repro.kernels.adc_quantize import adc_quantize_pallas_population
@@ -47,7 +48,8 @@ def test_population_kernel_rows_match_single_kernel(bits):
     pop = adc_quantize_pallas_population(x, tables, bits=bits, block_m=8,
                                          interpret=True)
     for i in range(p):
-        one = ops.adc_quantize(x, masks[i], bits=bits, interpret=True)
+        one = ops.adc_quantize(x, masks[i], spec=AdcSpec(bits=bits),
+                               interpret=True)
         np.testing.assert_allclose(np.asarray(pop[i]), np.asarray(one),
                                    rtol=1e-6)
 
@@ -59,7 +61,7 @@ def test_ops_population_wrapper_matches_oracle():
     masks = _rand_masks(rng, p, c, 2 ** bits)
     tables = ref.value_table(masks, bits)
     want = ref.adc_quantize_ref_population(x, tables, bits)
-    got = ops.adc_quantize_population(x, masks, bits=bits)
+    got = ops.adc_quantize_population(x, masks, spec=AdcSpec(bits=bits))
     np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-6)
 
 

@@ -16,6 +16,7 @@ import pytest
 
 from repro.checkpoint import manager
 from repro.checkpoint.manager import CheckpointManager
+from repro.core.spec import AdcSpec
 from repro.core import nsga2, search
 from repro.distributed import sharding
 
@@ -102,8 +103,9 @@ def test_ops_population_sharded_matches_unsharded():
     masks[..., -1] = 1
     masks = jnp.asarray(masks)
     mesh = search.default_search_mesh()
-    want = ops.adc_quantize_population(x, masks, bits=2)
-    got = ops.adc_quantize_population_sharded(x, masks, mesh=mesh, bits=2)
+    want = ops.adc_quantize_population(x, masks, spec=AdcSpec(bits=2))
+    got = ops.adc_quantize_population_sharded(x, masks, mesh=mesh,
+                                               spec=AdcSpec(bits=2))
     np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-6)
 
 

@@ -252,18 +252,19 @@ def test_dispatch_logs_chosen_path(caplog):
     assert "dispatch adc_quantize ->" in text
 
 
-def test_loose_kwargs_emit_deprecation_warning():
+def test_loose_kwargs_are_rejected():
+    """The PR 4 deprecation shims are gone (PR 6): every loose-kwarg form
+    is a plain TypeError and spec= is required."""
     rng = np.random.default_rng(1)
     x = jnp.asarray(rng.random((8, 4)), jnp.float32)
     mask = _rand_mask(rng, 4, 8)
-    with pytest.warns(DeprecationWarning, match="loose"):
-        ops.adc_quantize(x, mask, bits=3)
     with pytest.raises(TypeError):
-        ops.adc_quantize(x, mask)                        # neither form
+        ops.adc_quantize(x, mask, bits=3)                # loose form
+    with pytest.raises(TypeError):
+        ops.adc_quantize(x, mask)                        # spec omitted
     with pytest.raises(TypeError):
         ops.adc_quantize(x, mask, spec=AdcSpec(bits=3), bits=3)  # both
     with pytest.raises(TypeError):
-        # a loose range alongside spec= would be silently ignored
         ops.adc_quantize(x, mask, spec=AdcSpec(bits=3), vmax=2.0)
     with pytest.raises(TypeError):
         ops.adc_quantize(x, mask, spec=AdcSpec(bits=3), mode="nearest")
