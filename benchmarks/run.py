@@ -413,6 +413,152 @@ def bench_serve_classifier(smoke=False):
             f"parity_ok={report['parity_ok']}")
 
 
+_FAILOVER_SUBPROC = r'''
+import os, sys
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=2"
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+import json
+import numpy as np
+import jax
+from repro.core import deploy
+from repro.data import tabular
+from repro.launch import loadgen, serving_engine
+
+front_dir, dataset = sys.argv[1], sys.argv[2]
+designs = deploy.load_front(front_dir)
+data = tabular.make_dataset(dataset)
+tenant = serving_engine.Tenant(
+    name=dataset, designs=designs,
+    parity_data=(data["x_test"], data["y_test"]))
+# generous deadlines: the criterion under test is that a mid-stream
+# device loss drops NO accepted in-deadline request, so every request
+# must survive the recovery stall and complete
+wl = loadgen.make_workload(data["x_test"], 32, tenant=dataset,
+                           rate_rps=300.0, request_size=8,
+                           deadline_ms=10000.0, shape="bursty", seed=0)
+rep = serving_engine.run_workload(
+    [tenant], wl, sharded=True, target_latency_ms=25.0,
+    inject_device_failure=lambda launch: 0 if launch == 2 else None)
+slo = rep["tenants"][dataset]
+assert rep["recoveries"] >= 1, "no recovery ran"
+assert rep["devices"]["lost"] == 1 and rep["devices"]["alive"] == 1
+assert slo["shed"] == 0 and slo["rejected"] == 0, slo
+assert slo["completed"] == len(wl), slo
+served = deploy.served_accuracies(designs, data["x_test"], data["y_test"])
+exported = np.array([d.accuracy for d in designs])
+assert np.array_equal(served, exported), (served, exported)
+print("SERVE_SCALE_FAILOVER " + json.dumps({
+    "devices_before": 2, "devices_after": rep["devices"]["alive"],
+    "recoveries": rep["recoveries"], "requests": len(wl),
+    "completed": slo["completed"], "shed": slo["shed"],
+    "p50_ms": slo["p50_ms"], "p99_ms": slo["p99_ms"],
+    "parity_after_recovery": True}))
+'''
+
+
+def _serve_scale_failover(front, dataset="seeds"):
+    """The elasticity cell of serve_scale: a forced-2-device CPU
+    subprocess (device counts are fixed at jax init, so the parent's
+    single-device CI runtime can't host it) loses device 0 mid-stream,
+    re-shards, and must complete every accepted in-deadline request with
+    bit-for-bit parity after recovery."""
+    import os
+    import subprocess
+    import sys
+    import tempfile
+    from repro.core import deploy
+    with tempfile.TemporaryDirectory() as td:
+        fdir = os.path.join(td, "front")
+        deploy.save_front(fdir, list(front),
+                          extra_meta={"dataset": dataset})
+        env = dict(os.environ,
+                   PYTHONPATH=os.pathsep.join(
+                       filter(None, ["src", os.environ.get("PYTHONPATH")])))
+        proc = subprocess.run(
+            [sys.executable, "-c", _FAILOVER_SUBPROC, fdir, dataset],
+            capture_output=True, text=True, env=env, timeout=600)
+    if proc.returncode != 0:
+        raise RuntimeError(f"failover subprocess failed:\n{proc.stdout}\n"
+                           f"{proc.stderr}")
+    for line in proc.stdout.splitlines():
+        if line.startswith("SERVE_SCALE_FAILOVER "):
+            return json.loads(line.split(" ", 1)[1])
+    raise RuntimeError(f"failover subprocess printed no marker:\n"
+                       f"{proc.stdout}")
+
+
+def bench_serve_scale(smoke=False):
+    """Production serving engine at scale (DESIGN.md §12): sustained
+    bursty open-loop serving through launch/serving_engine — p50/p99
+    latency, achieved throughput, and shed counts vs bank size D and
+    offered load (launch/loadgen's mean-preserving bursty envelope), at
+    the recorded device count — plus the elasticity cell: a forced
+    2-device subprocess that loses a device mid-stream and must recover
+    without dropping any accepted in-deadline request, bit-for-bit
+    served==exported parity re-asserted after the re-shard. Writes
+    serve_scale.json; the CI bench-smoke lane tracks the headline p99
+    (latency entries carry a widened tolerance band in the regression
+    baseline — see benchmarks/README.md)."""
+    from benchmarks import paper_tables
+    from repro.core import deploy, search
+    from repro.data import tabular
+    from repro.launch import loadgen, serving_engine
+    data = tabular.make_dataset("seeds")
+    sizes = (7, 4, 3)
+    base = _search_bench_base(8, smoke)
+    cfg = search.SearchConfig(**base)
+    pg, _, _ = search.run_search(data, sizes, cfg)
+    front = deploy.export_front(pg, data, sizes, cfg)
+    x = data["x_test"].astype(np.float32)
+    n_req, req_sz = (48, 8) if smoke else (256, 8)
+    rates = (150.0, 600.0) if smoke else (200.0, 800.0, 3200.0)
+    deadline_ms = 250.0 if smoke else 500.0
+    report = {"dataset": "seeds", "smoke": smoke,
+              "backend": jax.default_backend(),
+              "device_count": len(jax.devices()),
+              "traffic": "bursty", "requests": n_req,
+              "request_size": req_sz, "deadline_ms": deadline_ms,
+              "front": [{"area_tc": d.area_tc, "accuracy": d.accuracy}
+                        for d in front]}
+    cells = {}
+    for d_sz in sorted({1, len(front)}):
+        for rate in rates:
+            wl = loadgen.make_workload(
+                x, n_req, tenant="seeds", rate_rps=rate,
+                request_size=req_sz, deadline_ms=deadline_ms,
+                shape="bursty", seed=0)
+            rep = serving_engine.run_workload(
+                [serving_engine.Tenant(name="seeds",
+                                       designs=front[:d_sz])],
+                wl, target_latency_ms=25.0, max_batch=256)
+            slo = rep["tenants"]["seeds"]
+            bs = rep["batch_sizes"]["seeds"]
+            cells[f"D={d_sz},rate={rate:g}"] = {
+                "offered": loadgen.describe(wl),
+                "p50_ms": slo["p50_ms"], "p95_ms": slo["p95_ms"],
+                "p99_ms": slo["p99_ms"],
+                "requests_per_s": slo["requests_per_s"],
+                "samples_per_s": slo["samples_per_s"],
+                "completed": slo["completed"], "shed": slo["shed"],
+                "batches": rep["batches"],
+                "pad_fraction": rep["pad_fraction"],
+                "batch_quantum": bs["quantum"],
+                "batch_quantum_source": bs["quantum_source"],
+                "batch_final": bs["final"]}
+    report["cells"] = cells
+    report["failure_recovery"] = _serve_scale_failover(front)
+    paper_tables.save("serve_scale", report)
+    key = f"D={len(front)},rate={max(rates):g}"
+    top = cells[key]
+    fr = report["failure_recovery"]
+    return (top["p99_ms"] * 1e3,
+            f"{key}: p50={top['p50_ms']:.1f}ms p99={top['p99_ms']:.1f}ms "
+            f"{top['samples_per_s']:.0f} samples/s "
+            f"({top['completed']}/{n_req} ok, {top['shed']} shed); "
+            f"failover: {fr['completed']}/{fr['requests']} ok across "
+            f"{fr['recoveries']} recovery, parity_ok")
+
+
 def bench_lm_train_step():
     from repro.launch.train import build
     import repro.models.steps as steps
@@ -466,6 +612,7 @@ def main() -> None:
         ("search_adc", lambda: bench_search_adc(smoke=smoke)),
         ("search_adc_sharded", lambda: bench_search_adc_sharded(smoke=smoke)),
         ("serve_classifier", lambda: bench_serve_classifier(smoke=smoke)),
+        ("serve_scale", lambda: bench_serve_scale(smoke=smoke)),
         ("mc_robustness", lambda: bench_mc_robustness(smoke=smoke)),
         ("autotune", lambda: bench_autotune(smoke=smoke)),
         ("lm_train_step_smoke", bench_lm_train_step),

@@ -17,6 +17,10 @@ fused multi-design serving — behind four verbs and one spec object::
     rep = api.evaluate_robustness(bank, ni, x, y)     # MC yield report
     api.robustness_curve(bank, x, y, [0, 0.5, 1.0])   # accuracy vs sigma
 
+    trace = api.make_workload(x, 256, rate_rps=500, shape="bursty")
+    slo = api.serve_stream(bank, trace)               # async serving engine
+    slo["tenants"]["default"]["p99_ms"]               # + SLO snapshot (§12)
+
 Everything here is a thin composition of the subsystem modules
 (core/search, core/deploy, kernels/dispatch) — no logic of its own — so
 the bit-for-bit search -> export -> load -> serve parity contract
@@ -49,11 +53,13 @@ __all__ = [
     "deploy",
     "evaluate_robustness",
     "load_front",
+    "make_workload",
     "quantize",
     "robustness_curve",
     "save_front",
     "search",
     "serve",
+    "serve_stream",
 ]
 
 
@@ -174,6 +180,58 @@ def serve(bank: Union[Bank, Sequence[DeployedClassifier]], x, *, mesh=None,
     registry routes oracle/kernel/sharded)."""
     designs = bank.designs if isinstance(bank, Bank) else tuple(bank)
     return _deploy.serve_bank(designs, x, mesh=mesh, interpret=interpret)
+
+
+def make_workload(x, num_requests: int, *, tenant: str = "default",
+                  rate_rps: float = 200.0, shape: str = "uniform",
+                  **kw):
+    """A seeded open-loop request trace for ``serve_stream`` (DESIGN.md
+    §12): ``num_requests`` small requests drawn from ``x``, arriving per
+    a shaped Poisson process (``uniform`` | ``bursty`` | ``diurnal``,
+    mean rate ``rate_rps``), each with a deadline. Deterministic under
+    ``seed``; full knob set in ``repro.launch.loadgen.make_workload``."""
+    from repro.launch import loadgen
+    return loadgen.make_workload(x, num_requests, tenant=tenant,
+                                 rate_rps=rate_rps, shape=shape, **kw)
+
+
+def serve_stream(bank: Union[Bank, Sequence[DeployedClassifier], Dict],
+                 workload, *, parity_data=None, **engine_kw) -> Dict:
+    """Serve an open-loop request trace through the production engine
+    (DESIGN.md §12): asyncio ingestion with deadlines + counted shedding,
+    adaptive microbatching on the tuned block_m ladder, per-tenant
+    p50/p95/p99 SLO snapshot, elastic device-pool recovery.
+
+    ``bank`` is one deployed bank (single tenant, name taken from the
+    workload's requests) or a ``{tenant_name: bank}`` dict for
+    multi-tenant serving; ``parity_data`` — (x, y) or a per-tenant dict
+    of them — arms the post-recovery bit-for-bit parity re-assert.
+    Returns the structured metrics snapshot (``tenants`` SLO stats,
+    batching counters, device-pool state, per-request ``responses``).
+    Engine knobs (``target_latency_ms``, ``max_batch``, ``sharded``,
+    ``inject_device_failure``...) pass through."""
+    from repro.launch import serving_engine
+
+    def _designs(b):
+        return tuple(b.designs) if isinstance(b, Bank) else tuple(b)
+
+    if isinstance(bank, dict):
+        banks = {name: _designs(b) for name, b in bank.items()}
+    else:
+        names = {r.tenant for r in workload}
+        if len(names) != 1:
+            raise ValueError(
+                f"single-bank serve_stream needs a single-tenant workload; "
+                f"got tenants {sorted(names)} — pass a {{tenant: bank}} "
+                f"dict to route")
+        banks = {next(iter(names)): _designs(bank)}
+    if parity_data is not None and not isinstance(parity_data, dict):
+        parity_data = {name: parity_data for name in banks}
+    tenants = [serving_engine.Tenant(
+        name=name, designs=designs,
+        parity_data=(parity_data or {}).get(name))
+        for name, designs in banks.items()]
+    return serving_engine.run_workload(tenants, workload, **engine_kw)
 
 
 def save_front(directory, bank: Union[Bank, Sequence[DeployedClassifier]],

@@ -68,6 +68,12 @@ class DeployedClassifier:
         return AdcSpec(bits=self.bits, mode=self.mode, vmin=self.vmin,
                        vmax=self.vmax)
 
+    @property
+    def channels(self) -> int:
+        """Input channel count C — the serving engine's wrong-domain
+        check compares request width against this."""
+        return int(self.table.shape[0])
+
     def logits(self, x, interpret: Optional[bool] = None) -> np.ndarray:
         """(M, C) samples -> (M, O) logits, served as a size-1 bank through
         the fused kernel registry."""

@@ -1,12 +1,20 @@
 """Elastic scaling: rebuild the mesh from the devices that are actually
-alive and reshard state through the checkpoint (DESIGN.md §4).
+alive (DESIGN.md §4, §12).
 
-Policy (matches how large pod jobs degrade in practice): the 'model' axis is
-pinned by the architecture's TP factor and must survive; capacity loss is
-absorbed by shrinking the 'data' (and 'pod') axes to the largest full
-multiple available. Restart then reshards the latest checkpoint against the
-new mesh (CheckpointManager.restore with the new shardings) and the
-data pipeline re-derives per-shard batches from the step number.
+**What the classifier serving engine uses** (launch/serving_engine.py,
+since the PR that grew serve_classifier into the async driver):
+``bank_pool_mesh`` — the serving ``DevicePool`` calls it after a
+simulated device loss to re-mesh the design bank over the survivors
+(shrinking the bank shard, down to unsharded single-device serving when
+one device remains), after which the bit-for-bit served==exported parity
+contract is re-asserted before serving resumes.
+
+**What remains dormant** (LM-training substrate, exercised only by its
+own tests): ``plan_mesh`` / ``make_elastic_mesh`` implement the
+TP-pinned (pod, data, model) degradation policy for large pod jobs, and
+``reshard_state`` restores a checkpoint against the shrunken mesh. The
+classifier bank has no TP axis, so serving deliberately does not reuse
+that policy.
 """
 from __future__ import annotations
 
@@ -15,6 +23,20 @@ from typing import Optional, Sequence
 import jax
 
 from repro.launch import mesh as mesh_lib
+
+
+def bank_pool_mesh(devices: Sequence):
+    """1-axis ('data',) mesh over an explicit list of surviving devices —
+    the serving engine's re-shard target. The design-bank population
+    rules (distributed/sharding.design_bank_axes) partition the bank's D
+    axis over 'data' when it divides, else fall back to replicated; the
+    same divisibility contract a fresh mesh gets, applied to survivors."""
+    devices = list(devices)
+    if not devices:
+        raise ValueError("bank_pool_mesh needs at least one device")
+    from repro import compat
+    return compat.make_mesh((len(devices), 1), ("data", "model"),
+                            devices=devices)
 
 
 def plan_mesh(n_devices: int, *, model: int = 16, chips_per_pod: int = 256):

@@ -1,17 +1,21 @@
-"""Fault-tolerant training loop: watchdog, retry-from-checkpoint, and
-deterministic data-skip on restart (DESIGN.md §4).
+"""Fault tolerance: watchdog, device-loss signalling, and
+retry-from-checkpoint recovery (DESIGN.md §4, §12).
 
-On a real 1000+-node cluster the failure modes are process crashes, device
-loss and stragglers. The recovery contract implemented here:
+**What the classifier serving engine uses** (launch/serving_engine.py):
+``StepWatchdog`` — per-microbatch straggler detection, same
+factor-x-running-median rule as training steps — and ``DeviceLoss``, the
+typed exception a failed bank launch surfaces as. The engine's recovery
+path is the `run_with_recovery` contract re-applied to serving: catch
+the loss, shrink the pool, re-shard (elastic.bank_pool_mesh), re-assert
+bit-for-bit parity, and re-dispatch the interrupted microbatch — bounded
+by ``max_recoveries`` exactly as ``max_failures`` bounds crash loops
+here.
 
-  * every K steps the TrainState is checkpointed (atomic, keep-N);
-  * any exception inside the step (device failure surfaces as one) triggers
-    restore-from-latest + replay; the data pipeline is seeded by step
-    number, so replayed batches are bit-identical (no double-consume);
-  * a StepWatchdog flags straggling steps (> threshold x median) — on TPU
-    pods, persistent stragglers are handled by excluding the slow host at
-    the next restart boundary (elastic.py re-meshes);
-  * max_failures bounds crash loops.
+**What remains dormant** (LM-training substrate): ``run_with_recovery``
+itself — the every-K-steps checkpoint + restore-from-latest + replay
+loop with deterministic per-step batches. Classifier serving is
+stateless between microbatches, so it needs the protocol's shape, not
+its checkpoint machinery.
 """
 from __future__ import annotations
 
@@ -21,6 +25,20 @@ from dataclasses import dataclass, field
 from typing import Callable, List, Optional
 
 log = logging.getLogger("repro.fault")
+
+
+class DeviceLoss(RuntimeError):
+    """A device dropped out from under a launched computation.
+
+    Real accelerator loss surfaces as a backend-specific RuntimeError
+    mid-launch; tests and the serving engine's failure-injection hook
+    raise this typed stand-in instead so recovery paths can be exercised
+    deterministically. ``device_index`` is the position of the lost
+    device in the *alive* pool at failure time."""
+
+    def __init__(self, device_index: int, message: str = "") -> None:
+        self.device_index = int(device_index)
+        super().__init__(message or f"device {device_index} lost")
 
 
 @dataclass

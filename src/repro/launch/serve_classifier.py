@@ -1,15 +1,29 @@
-"""Serving launcher for deployed ADC+classifier fronts (DESIGN.md §8): a
-continuous-batching driver over the fused multi-design bank kernel.
+"""Serving launcher for deployed ADC+classifier fronts.
 
-A request is a small batch of sensor samples; the server drains a request
-queue into fixed-size microbatches (one compiled program — a microbatch
-may span many small requests or a slice of one large request, tail padded),
-pushes each microbatch through the *whole* deployed front in one fused
-bank launch (every response carries all D designs' predictions, so the
-accuracy/area trade-off is selectable per response), and reports
-requests/sec + samples/sec. With ``--sharded`` the design bank partitions
-D/device over the mesh (ops.classifier_bank_sharded via
-distributed/sharding.design_bank_axes).
+Two drivers:
+
+* ``--driver async`` (DESIGN.md §12) — the production serving engine
+  (launch/serving_engine.py): asyncio ingestion of an open-loop load
+  trace (launch/loadgen.py: ``--rate``, ``--traffic
+  uniform|bursty|diurnal``), per-request deadlines with counted
+  shedding, per-tenant p50/p95/p99 SLO snapshot, adaptive microbatch
+  sizing on the tuned block_m ladder, multi-tenant routing (repeat
+  ``--front-dir`` to make several exported fronts resident — each
+  front's ``front_meta`` dataset names its tenant), and elastic
+  device-pool recovery (``--fail-device-at N`` simulates a device loss
+  at batch N: the bank re-shards over the survivors and bit-for-bit
+  parity is re-asserted before serving resumes).
+* ``--driver batch`` (default; DESIGN.md §8) — the fixed-microbatch
+  continuous-batching loop: drain a request list into ``--batch``-row
+  microbatches (a microbatch may span many small requests or a slice of
+  one large request, tail padded), one fused bank launch each, report
+  requests/sec + samples/sec.
+
+Both push every microbatch through the *whole* deployed front in one
+fused bank launch (every response carries all D designs' predictions, so
+the accuracy/area trade-off is selectable per response). With
+``--sharded`` the design bank partitions D/device over the mesh
+(ops.classifier_bank_sharded via distributed/sharding.design_bank_axes).
 
   # search + export first:
   PYTHONPATH=src python -m repro.launch.train --adc-search --dataset seeds \
@@ -17,6 +31,10 @@ distributed/sharding.design_bank_axes).
   # then serve the exported front:
   PYTHONPATH=src python -m repro.launch.serve_classifier \
       --front-dir /tmp/adc/front --requests 64 --batch 128
+  # production driver, bursty open-loop traffic at 500 req/s:
+  PYTHONPATH=src python -m repro.launch.serve_classifier \
+      --front-dir /tmp/adc/front --driver async --rate 500 \
+      --traffic bursty --deadline-ms 100
 
 ``--smoke`` (no --front-dir needed) searches a tiny fixed-seed front
 inline and serves it — the CI lane; every derived field except wall-clock
@@ -138,17 +156,98 @@ def _smoke_front(dataset: str):
     return deploy.export_front(pg, data, sizes, cfg), data
 
 
+def _serve_async(fronts, args):
+    """The --driver async path: one Tenant per loaded front, an open-loop
+    load trace per tenant, merged into one stream through the engine."""
+    from repro.launch import loadgen, serving_engine
+
+    tenants, traces = [], []
+    for name, designs, data in fronts:
+        tenants.append(serving_engine.Tenant(
+            name=name, designs=designs,
+            parity_data=(data["x_test"], data["y_test"])))
+        traces.append(loadgen.make_workload(
+            data["x_test"], args.requests, tenant=name,
+            rate_rps=args.rate, request_size=args.request_size,
+            deadline_ms=args.deadline_ms, shape=args.traffic,
+            seed=args.seed))
+    workload = loadgen.merge_workloads(*traces)
+    print(f"  load: {loadgen.describe(workload)}")
+
+    inject = None
+    if args.fail_device_at is not None:
+        fail_at = args.fail_device_at
+        inject = lambda b: 0 if b == fail_at else None   # noqa: E731
+
+    rep = serving_engine.run_workload(
+        tenants, workload,
+        target_latency_ms=args.target_latency_ms,
+        max_batch=args.max_batch, sharded=args.sharded,
+        inject_device_failure=inject)
+    for name, slo in sorted(rep["tenants"].items()):
+        print(f"  tenant {name}: {slo['completed']}/{slo['requests']} ok "
+              f"({slo['shed']} shed, {slo['rejected']} rejected)  "
+              f"p50={slo['p50_ms']:.1f}ms p95={slo['p95_ms']:.1f}ms "
+              f"p99={slo['p99_ms']:.1f}ms  "
+              f"{slo['requests_per_s']:.1f} req/s "
+              f"{slo['samples_per_s']:.0f} samples/s")
+    bs = rep["batch_sizes"]
+    print(f"  {rep['batches']} batches "
+          f"({rep['pad_fraction'] * 100:.1f}% pad, "
+          f"{rep['stragglers']} stragglers); batch ladders: "
+          + ", ".join(f"{n}: quantum {v['quantum']} ({v['quantum_source']})"
+                      f" -> final {v['final']}" for n, v in sorted(bs.items())))
+    dv = rep["devices"]
+    print(f"  devices: {dv['alive']} alive, {dv['lost']} lost, "
+          f"{rep['recoveries']} recoveries (sharded={dv['sharded']})")
+    if args.fail_device_at is not None and rep["recoveries"] < 1:
+        raise SystemExit("requested --fail-device-at but no recovery ran "
+                         "(stream ended before the failing batch?)")
+    # post-run parity: served accuracies on the CURRENT pool reproduce the
+    # export bit-for-bit (after a recovery this re-checks the re-shard)
+    for name, designs, data in fronts:
+        served = deploy.served_accuracies(designs, data["x_test"],
+                                          data["y_test"])
+        exported = np.array([d.accuracy for d in designs])
+        if not np.array_equal(served, exported):
+            raise SystemExit(f"tenant {name}: served accuracies diverge "
+                             f"from the exported front: {served} != "
+                             f"{exported}")
+    print("  parity OK: served == exported accuracy for every tenant")
+    return rep
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
-    ap.add_argument("--front-dir",
+    ap.add_argument("--front-dir", action="append",
                     help="exported front (launch.train --export-front); "
-                         "omit with --smoke to search one inline")
+                         "omit with --smoke to search one inline; repeat "
+                         "with --driver async for multi-tenant serving")
     ap.add_argument("--dataset", default="seeds",
                     help="sample stream + labels for the parity check")
     ap.add_argument("--requests", type=int, default=64)
     ap.add_argument("--request-size", type=int, default=8)
     ap.add_argument("--batch", type=int, default=128,
                     help="compiled microbatch rows (continuous batching)")
+    ap.add_argument("--driver", choices=("batch", "async"), default="batch",
+                    help="batch: fixed-microbatch loop (§8); async: the "
+                         "production serving engine (§12)")
+    ap.add_argument("--rate", type=float, default=200.0,
+                    help="[async] offered load, requests/s (open loop)")
+    ap.add_argument("--traffic", choices=("uniform", "bursty", "diurnal"),
+                    default="uniform", help="[async] arrival-rate envelope")
+    ap.add_argument("--deadline-ms", type=float, default=100.0,
+                    help="[async] per-request deadline budget")
+    ap.add_argument("--target-latency-ms", type=float, default=50.0,
+                    help="[async] adaptive batcher's latency target")
+    ap.add_argument("--max-batch", type=int, default=512,
+                    help="[async] batch-ladder ceiling")
+    ap.add_argument("--seed", type=int, default=0,
+                    help="[async] load-generator seed")
+    ap.add_argument("--fail-device-at", type=int, default=None,
+                    help="[async] simulate losing device 0 at this "
+                         "bank-launch index (elastic recovery demo; "
+                         "needs >= 2 devices)")
     ap.add_argument("--sharded", action="store_true",
                     help="shard the design bank D/device over the mesh")
     ap.add_argument("--smoke", action="store_true",
@@ -177,25 +276,39 @@ def main(argv=None):
     if args.smoke:
         args.requests, args.request_size = 16, 4
         args.batch = min(args.batch, 32)
+        args.rate = min(args.rate, 400.0)
+    fronts = []          # (tenant name, designs, data) per resident front
     if args.front_dir:
-        designs = deploy.load_front(args.front_dir)
-        data = tabular.make_dataset(args.dataset)
-        meta = deploy.front_meta(args.front_dir)
-        trained_on = meta.get("dataset")
-        if trained_on is not None and trained_on != args.dataset:
-            ap.error(f"front at {args.front_dir} was exported from dataset "
-                     f"{trained_on!r}; serving {args.dataset!r} traffic "
-                     f"through it would be wrong-domain (pass --dataset "
-                     f"{trained_on})")
-        channels = designs[0].table.shape[0]
-        if channels != data["x_test"].shape[1]:
-            ap.error(f"front expects {channels} sensor channels but "
-                     f"dataset {args.dataset!r} has "
-                     f"{data['x_test'].shape[1]}")
+        if args.driver == "batch" and len(args.front_dir) > 1:
+            ap.error("--driver batch serves one front; repeat --front-dir "
+                     "only with --driver async (multi-tenant routing)")
+        for fdir in args.front_dir:
+            designs = deploy.load_front(fdir)
+            meta = deploy.front_meta(fdir)
+            trained_on = meta.get("dataset")
+            # --driver async routes by front provenance: the tenant IS
+            # the front's dataset. The batch driver keeps the CLI-level
+            # wrong-domain check against --dataset.
+            name = trained_on or args.dataset
+            if (args.driver == "batch" and trained_on is not None
+                    and trained_on != args.dataset):
+                ap.error(f"front at {fdir} was exported from dataset "
+                         f"{trained_on!r}; serving {args.dataset!r} "
+                         f"traffic through it would be wrong-domain "
+                         f"(pass --dataset {trained_on})")
+            data = tabular.make_dataset(name if args.driver == "async"
+                                        else args.dataset)
+            channels = designs[0].channels
+            if channels != data["x_test"].shape[1]:
+                ap.error(f"front expects {channels} sensor channels but "
+                         f"dataset {name!r} has {data['x_test'].shape[1]}")
+            fronts.append((name, designs, data))
     elif args.smoke:
         designs, data = _smoke_front(args.dataset)
+        fronts.append((args.dataset, designs, data))
     else:
         ap.error("--front-dir is required unless --smoke is given")
+    designs, data = fronts[0][1], fronts[0][2]
 
     nonideal = None
     if (args.nonideal_sigma > 0 or args.fault_rate > 0
@@ -206,17 +319,25 @@ def main(argv=None):
                                 fault_rate=args.fault_rate,
                                 seed=args.nonideal_seed)
 
+    if args.driver == "async" and nonideal is not None:
+        ap.error("--driver async serves the ideal-hardware parity "
+                 "contract; --nonideal-* needs --driver batch")
+
     mesh = None
-    if args.sharded:
+    if args.sharded and args.driver == "batch":
         if nonideal is not None:
             ap.error("--sharded and --nonideal-* are mutually exclusive")
         from repro.core import search
         mesh = search.default_search_mesh()
-    print(f"serve_classifier[D={len(designs)} {designs[0].kind} "
-          f"{designs[0].spec.describe()}] dataset={args.dataset} "
+    print(f"serve_classifier[driver={args.driver} "
+          f"tenants={[f[0] for f in fronts]} D={len(designs)} "
+          f"{designs[0].kind} {designs[0].spec.describe()}] "
           f"devices={len(jax.devices())} sharded={args.sharded}"
           + (f" nonideal=({nonideal.describe()} "
              f"instance={args.nonideal_instance})" if nonideal else ""))
+
+    if args.driver == "async":
+        return _serve_async(fronts, args)
 
     nonideal_fn = None
     if nonideal is not None:

@@ -1,0 +1,625 @@
+"""Production serving engine for deployed classifier fronts
+(DESIGN.md §12): asyncio ingestion with per-request deadlines and
+shedding, per-tenant latency/throughput SLO tracking, adaptive
+microbatch sizing, multi-tenant routing, and an elastic fault-tolerant
+device pool.
+
+The continuous-batching driver of §8 (launch/serve_classifier.py,
+``--driver batch``) replays a fixed request list through fixed-size
+microbatches and reports aggregate throughput. This engine is what the
+north-star workloads (always-on wearable/stress-monitor streams) need
+instead:
+
+* **Ingestion** — requests arrive through ``asyncio`` on their own
+  schedule (the open-loop load generator, launch/loadgen.py, or
+  closed-loop client tasks). Each carries a tenant name and an absolute
+  deadline; requests already past deadline at batch-formation time are
+  **shed** — counted per tenant in the SLO snapshot, never silently
+  dropped. Unknown tenants and channel-count mismatches are **rejected**
+  up front (the §8 wrong-domain contract, preserved per request).
+* **SLO accounting** — ``SLOTracker`` records per-request latency
+  (completion minus arrival, queue wait included) per tenant and
+  snapshots nearest-rank p50/p95/p99 plus completed/shed/rejected counts
+  and achieved request/sample throughput — the structured metrics
+  artifact the `serve_scale` benchmark persists.
+* **Adaptive batching** — ``AdaptiveBatcher`` is a target-latency
+  controller: microbatch sizes move along a power-of-two ladder whose
+  quantum is the tuned ``block_m`` for this bank's shape class
+  (kernels/dispatch tuned tables, DESIGN.md §11; VMEM-heuristic fallback
+  off-table), stepping down when observed batch latency overshoots the
+  target and up when latency headroom and queue depth both allow. Each
+  ladder size is one compiled shape (bank closures cache per size).
+* **Multi-tenant routing** — several exported fronts are resident at
+  once; requests route to their tenant's bank by ``front_meta``
+  provenance (dataset name). Microbatches never mix tenants.
+* **Elasticity + recovery** — a ``DevicePool`` (harvesting
+  distributed/elastic.py's surviving-device mesh policy via
+  ``elastic.bank_pool_mesh``) owns the serving mesh. A device loss
+  mid-stream (simulated: ``DeviceLoss`` from distributed/fault.py,
+  raised inside a bank launch) triggers the fault.py recovery contract
+  re-applied to serving: the pool drops the device, every tenant's bank
+  re-shards over the survivors, the **bit-for-bit served==exported
+  parity contract is re-asserted** on the new mesh, and the interrupted
+  microbatch is re-dispatched — accepted in-deadline requests are never
+  dropped by a recovery. ``fault.StepWatchdog`` flags straggler batches.
+
+``run_workload`` / ``run_closed_loop`` are the synchronous entry points
+(launch/serve_classifier ``--driver async`` and benchmarks/run.py
+``serve_scale`` drive them).
+"""
+from __future__ import annotations
+
+import asyncio
+import dataclasses
+import logging
+import math
+import time
+from collections import deque
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core import deploy
+from repro.distributed import fault
+from repro.distributed.fault import DeviceLoss
+from repro.launch.loadgen import Request
+
+log = logging.getLogger("repro.serving")
+
+
+# ------------------------------------------------------------ SLO tracking
+def percentile(values: Sequence[float], q: float) -> float:
+    """Nearest-rank percentile: the smallest observed value such that at
+    least ``q`` percent of the sample is <= it (rank ``ceil(q/100 * n)``,
+    1-indexed). Exact on small samples — no interpolation — so tests can
+    pin it against known traces."""
+    n = len(values)
+    if n == 0:
+        return float("nan")
+    rank = min(max(1, math.ceil(q / 100.0 * n)), n)
+    return float(sorted(values)[rank - 1])
+
+
+class SLOTracker:
+    """Per-tenant request accounting: latencies of completed requests,
+    shed (deadline-expired) and rejected (wrong-domain) counts, sample
+    totals — snapshotted as the structured SLO report."""
+
+    def __init__(self) -> None:
+        self._lat: Dict[str, List[float]] = {}
+        self._counts: Dict[str, Dict[str, int]] = {}
+
+    def _tenant(self, tenant: str) -> Dict[str, int]:
+        if tenant not in self._counts:
+            self._counts[tenant] = {"completed": 0, "shed": 0,
+                                    "rejected": 0, "samples": 0}
+            self._lat[tenant] = []
+        return self._counts[tenant]
+
+    def record(self, tenant: str, latency_s: float, rows: int) -> None:
+        c = self._tenant(tenant)
+        c["completed"] += 1
+        c["samples"] += rows
+        self._lat[tenant].append(float(latency_s))
+
+    def shed(self, tenant: str, n: int = 1) -> None:
+        self._tenant(tenant)["shed"] += n
+
+    def reject(self, tenant: str, n: int = 1) -> None:
+        self._tenant(tenant)["rejected"] += n
+
+    def latencies(self, tenant: str) -> List[float]:
+        return list(self._lat.get(tenant, ()))
+
+    def snapshot(self, wall_s: float) -> Dict[str, Dict]:
+        """Per-tenant SLO metrics over the run: nearest-rank p50/p95/p99
+        latency (ms), completed/shed/rejected counts, achieved
+        throughput. ``wall_s`` is the serving wall time the throughput
+        numbers normalize by."""
+        out: Dict[str, Dict] = {}
+        wall = max(wall_s, 1e-9)
+        for tenant, c in self._counts.items():
+            lat = self._lat[tenant]
+            out[tenant] = {
+                "requests": c["completed"] + c["shed"] + c["rejected"],
+                "completed": c["completed"],
+                "shed": c["shed"],
+                "rejected": c["rejected"],
+                "samples": c["samples"],
+                "p50_ms": percentile(lat, 50) * 1e3,
+                "p95_ms": percentile(lat, 95) * 1e3,
+                "p99_ms": percentile(lat, 99) * 1e3,
+                "max_ms": (max(lat) * 1e3 if lat else float("nan")),
+                "requests_per_s": c["completed"] / wall,
+                "samples_per_s": c["samples"] / wall,
+            }
+        return out
+
+
+# -------------------------------------------------------- adaptive batching
+class AdaptiveBatcher:
+    """Target-latency microbatch controller (DESIGN.md §12).
+
+    Batch sizes live on a power-of-two ladder ``quantum * 2^k`` clipped
+    to ``[quantum, max_batch]`` — ``quantum`` is the tuned ``block_m``
+    for the bank's shape class (each ladder rung is a whole number of
+    kernel tiles, and each rung is one compiled shape). The controller
+    is deterministic AIMD-flavored: an EWMA of observed batch latency
+    steps the rung down when it overshoots ``target_latency_s``, and up
+    when there is both latency headroom (< ``step_up_frac`` of target)
+    and enough queued rows to fill the larger rung — growing the batch
+    under a thin queue would only add padding and queue wait."""
+
+    def __init__(self, *, quantum: int, max_batch: int = 1024,
+                 target_latency_s: float = 0.05, ewma: float = 0.4,
+                 step_up_frac: float = 0.25) -> None:
+        if quantum < 1:
+            raise ValueError(f"quantum must be >= 1, got {quantum}")
+        self.sizes: List[int] = []
+        b = quantum
+        while b <= max(max_batch, quantum):
+            self.sizes.append(b)
+            if b == max_batch:
+                break
+            b = min(b * 2, max_batch) if b * 2 <= max_batch else b * 2
+            if self.sizes and b <= self.sizes[-1]:
+                break
+        if self.sizes[-1] > max_batch and len(self.sizes) > 1:
+            self.sizes.pop()
+        self._idx = 0
+        self.target = float(target_latency_s)
+        self._alpha = float(ewma)
+        self._frac = float(step_up_frac)
+        self._ewma: Optional[float] = None
+        self.history: List[int] = []
+
+    @property
+    def batch(self) -> int:
+        return self.sizes[self._idx]
+
+    @property
+    def latency_ewma(self) -> Optional[float]:
+        return self._ewma
+
+    def observe(self, batch_latency_s: float, queued_rows: int) -> int:
+        """Feed one batch's wall time + current queue depth; returns the
+        batch size to use next."""
+        lat = float(batch_latency_s)
+        self._ewma = (lat if self._ewma is None
+                      else self._alpha * lat + (1 - self._alpha) * self._ewma)
+        if self._ewma > self.target and self._idx > 0:
+            self._idx -= 1
+        elif (self._ewma < self.target * self._frac
+              and self._idx + 1 < len(self.sizes)
+              and queued_rows >= self.sizes[self._idx + 1]):
+            self._idx += 1
+        self.history.append(self.batch)
+        return self.batch
+
+
+def bank_quantum(designs: Sequence[deploy.DeployedClassifier],
+                 max_batch: int, *, default: int = 32) -> Tuple[int, str]:
+    """The batch-ladder quantum for a front: the tuned ``block_m`` the
+    dispatch registry would pick for this bank's shape class at
+    ``max_batch`` rows (DESIGN.md §11), else ``default`` (oracle paths
+    and untuned tables carry no tile size)."""
+    from repro.kernels import dispatch
+    from repro.perf.workload import Workload
+    d0 = designs[0]
+    c = d0.table.shape[0]
+    if d0.kind == "mlp":
+        h, o = d0.weights[0].shape[1], d0.weights[2].shape[1]
+    else:
+        h, o = 0, d0.weights[0].shape[1]
+    w = Workload(entry=f"classifier_bank_{d0.kind}", m=max_batch, c=c,
+                 bits=d0.bits, d=len(designs), h=h, o=o)
+    res = dispatch.resolve(f"classifier_bank_{d0.kind}", d0.spec, c,
+                           workload=w)
+    if res.block_m:
+        return int(res.block_m), "tuned"
+    return int(default), "default"
+
+
+# ------------------------------------------------------------- device pool
+class DevicePool:
+    """Elastic pool of serving devices. Owns the (survivors-only) mesh
+    the sharded design banks partition over; ``fail()`` simulates a
+    device loss (the recovery path re-meshes via
+    distributed/elastic.bank_pool_mesh — capacity loss shrinks the bank
+    shard, down to unsharded single-device serving)."""
+
+    def __init__(self, devices: Optional[Sequence] = None, *,
+                 sharded: bool = False) -> None:
+        import jax
+        self.devices = list(devices if devices is not None else
+                            jax.devices())
+        self.lost: List = []
+        self.sharded = bool(sharded)
+
+    @property
+    def alive(self) -> int:
+        return len(self.devices)
+
+    def fail(self, index: int = 0) -> None:
+        """Drop the device at position ``index`` of the *alive* list."""
+        if not 0 <= index < len(self.devices):
+            raise ValueError(f"no alive device at index {index} "
+                             f"(pool has {len(self.devices)})")
+        self.lost.append(self.devices.pop(index))
+        if not self.devices:
+            raise RuntimeError("device pool exhausted: no survivors to "
+                               "re-shard the bank over")
+
+    def mesh(self):
+        """Mesh over the surviving devices, or None when the bank should
+        serve unsharded (pool not in sharded mode, or one survivor)."""
+        if not self.sharded or len(self.devices) < 2:
+            return None
+        from repro.distributed import elastic
+        return elastic.bank_pool_mesh(self.devices)
+
+
+# ------------------------------------------------------------------ tenants
+@dataclasses.dataclass
+class Tenant:
+    """One resident exported front: the routing key is the front's
+    provenance (``front_meta``'s dataset name). ``parity_data`` is the
+    (x_test, y_test) pair the recovery path re-asserts the bit-for-bit
+    served==exported contract against after a re-shard."""
+    name: str
+    designs: Sequence[deploy.DeployedClassifier]
+    parity_data: Optional[Tuple[np.ndarray, np.ndarray]] = None
+
+    @property
+    def channels(self) -> int:
+        return self.designs[0].channels
+
+
+class _TenantState:
+    """Engine-internal per-tenant runtime: request queue, batcher, and
+    the per-batch-size cache of compiled bank closures."""
+
+    def __init__(self, tenant: Tenant, *, target_latency_s: float,
+                 max_batch: int, interpret: Optional[bool]) -> None:
+        self.tenant = tenant
+        quantum, src = bank_quantum(tenant.designs, max_batch)
+        self.quantum_source = src
+        self.batcher = AdaptiveBatcher(quantum=quantum, max_batch=max_batch,
+                                       target_latency_s=target_latency_s)
+        self.interpret = interpret
+        self.queue: deque = deque()       # (Request, future, enq_wall_s)
+        self.bank_fn = None               # rebuilt on (re-)shard
+
+    @property
+    def queued_rows(self) -> int:
+        return sum(r.rows for r, _, _ in self.queue)
+
+    def build_bank(self, mesh) -> None:
+        self.bank_fn = deploy.make_bank_fn(self.tenant.designs, mesh=mesh,
+                                           interpret=self.interpret)
+
+    def assert_parity(self, mesh) -> None:
+        """Re-assert the §8 bit-for-bit contract on the (new) mesh —
+        the recovery protocol's exit criterion."""
+        if self.tenant.parity_data is None:
+            return
+        x, y = self.tenant.parity_data
+        served = deploy.served_accuracies(self.tenant.designs, x, y,
+                                          mesh=mesh,
+                                          interpret=self.interpret)
+        exported = np.array([d.accuracy for d in self.tenant.designs])
+        if not np.array_equal(served, exported):
+            raise RuntimeError(
+                f"post-recovery parity violated for tenant "
+                f"{self.tenant.name!r}: served {served} != exported "
+                f"{exported}")
+
+
+# ------------------------------------------------------------------- engine
+class ServingEngine:
+    """The asyncio serving loop. One engine holds N resident tenants and
+    one device pool; ``run_workload``/``run_closed_loop`` wrap the async
+    interface for synchronous callers."""
+
+    def __init__(self, tenants: Sequence[Tenant], *,
+                 target_latency_ms: float = 50.0, max_batch: int = 512,
+                 devices: Optional[Sequence] = None, sharded: bool = False,
+                 interpret: Optional[bool] = None,
+                 max_recoveries: int = 3,
+                 gather_window_s: Optional[float] = None) -> None:
+        if not tenants:
+            raise ValueError("serving engine needs at least one tenant")
+        names = [t.name for t in tenants]
+        if len(set(names)) != len(names):
+            raise ValueError(f"duplicate tenant names: {names}")
+        self.pool = DevicePool(devices, sharded=sharded)
+        self.slo = SLOTracker()
+        self.watchdog = fault.StepWatchdog()
+        self.max_recoveries = int(max_recoveries)
+        self.recoveries = 0
+        self.batches = 0
+        self.launches = 0           # incl. failed launches (inject index)
+        self.padded_rows = 0
+        self.dispatched_rows = 0
+        self._gather_s = (gather_window_s if gather_window_s is not None
+                          else min(target_latency_ms / 4e3, 0.005))
+        self._tenants: Dict[str, _TenantState] = {
+            t.name: _TenantState(t, target_latency_s=target_latency_ms / 1e3,
+                                 max_batch=max_batch, interpret=interpret)
+            for t in tenants}
+        mesh = self.pool.mesh()
+        for ts in self._tenants.values():
+            ts.build_bank(mesh)
+        self._work: Optional[asyncio.Event] = None        # set per run
+        self._draining = False
+        self._inject: Optional[Callable[[int], Optional[int]]] = None
+
+    # ------------------------------------------------------------ ingestion
+    def submit(self, req: Request, t0: float) -> "asyncio.Future":
+        """Route one request (asyncio-side): validate tenant + channel
+        count, enqueue, wake the batcher. Returns a future resolving to
+        the (D, rows) predicted classes — or None if shed/rejected."""
+        loop = asyncio.get_running_loop()
+        fut: asyncio.Future = loop.create_future()
+        ts = self._tenants.get(req.tenant)
+        if ts is None:
+            self.slo.reject(req.tenant)
+            log.warning("rejected request %d: unknown tenant %r "
+                        "(resident: %s)", req.rid, req.tenant,
+                        sorted(self._tenants))
+            fut.set_result(None)
+            return fut
+        if req.x.shape[1] != ts.tenant.channels:
+            self.slo.reject(req.tenant)
+            log.warning("rejected request %d: %d channels, tenant %r "
+                        "serves %d (wrong-domain)", req.rid, req.x.shape[1],
+                        req.tenant, ts.tenant.channels)
+            fut.set_result(None)
+            return fut
+        ts.queue.append((req, fut, time.perf_counter() - t0))
+        if self._work is not None:
+            self._work.set()
+        return fut
+
+    # ------------------------------------------------------------- batching
+    def _form_batch(self, ts: _TenantState, now_s: float
+                    ) -> Tuple[Optional[np.ndarray], List[Tuple]]:
+        """Drain the tenant queue into one microbatch: shed requests
+        already past deadline (counted), continuous-batch the rest up to
+        the controller's current size (a large request carries over)."""
+        batch = ts.batcher.batch
+        rows: List[np.ndarray] = []
+        meta: List[Tuple] = []          # (req, fut, start_row, n_rows)
+        filled = 0
+        while filled < batch and ts.queue:
+            req, fut, _enq = ts.queue[0]
+            if now_s > req.deadline_s and not fut.done():
+                ts.queue.popleft()
+                self.slo.shed(req.tenant)
+                log.info("shed request %d (tenant %s): %.1fms past "
+                         "deadline", req.rid, req.tenant,
+                         (now_s - req.deadline_s) * 1e3)
+                fut.set_result(None)
+                continue
+            take = min(batch - filled, len(req.x))
+            rows.append(req.x[:take])
+            meta.append((req, fut, filled, take))
+            filled += take
+            if take < len(req.x):
+                # carry: replace the head with the unserved tail (a
+                # request we started serving is never shed mid-flight)
+                ts.queue[0] = (dataclasses.replace(
+                    req, x=req.x[take:],
+                    deadline_s=float("inf")), fut, _enq)
+            else:
+                ts.queue.popleft()
+        if not rows:
+            return None, []
+        xb = np.concatenate(rows, axis=0)
+        pad = batch - len(xb)
+        if pad:
+            xb = np.pad(xb, ((0, pad), (0, 0)))
+            self.padded_rows += pad
+        return xb, meta
+
+    def _warmup(self) -> None:
+        """Compile each tenant's bank at its starting batch size before
+        the serving clock starts (same contract as the batch driver: the
+        SLO numbers time serving, not compilation)."""
+        import jax
+        import jax.numpy as jnp
+        for ts in self._tenants.values():
+            z = jnp.zeros((ts.batcher.batch, ts.tenant.channels),
+                          jnp.float32)
+            jax.block_until_ready(ts.bank_fn(z))
+
+    def _dispatch(self, ts: _TenantState, xb: np.ndarray) -> np.ndarray:
+        """One bank launch (runs in a worker thread). The injection hook
+        models a device failing mid-launch — the exception surfaces here
+        exactly like a real device loss would."""
+        import jax
+        import jax.numpy as jnp
+        launch = self.launches
+        self.launches += 1
+        if self._inject is not None:
+            lost = self._inject(launch)
+            if lost is not None:
+                raise DeviceLoss(lost)
+        logits = np.asarray(jax.block_until_ready(ts.bank_fn(
+            jnp.asarray(xb))))
+        return np.argmax(logits, axis=-1)        # (D, batch)
+
+    def _recover(self, e: DeviceLoss) -> None:
+        """The fault.py recovery contract, serving flavor: drop the lost
+        device, re-shard every tenant's bank over the survivors, and
+        re-assert the bit-for-bit parity contract before serving resumes
+        (the interrupted microbatch is re-dispatched by the caller)."""
+        self.recoveries += 1
+        if self.recoveries > self.max_recoveries:
+            raise RuntimeError(
+                f"{self.recoveries} device losses exceed "
+                f"max_recoveries={self.max_recoveries}") from e
+        self.pool.fail(e.device_index)
+        mesh = self.pool.mesh()
+        log.warning("device %d lost mid-stream; re-sharding %d tenant "
+                    "bank(s) over %d survivor(s) (recovery %d/%d)",
+                    e.device_index, len(self._tenants), self.pool.alive,
+                    self.recoveries, self.max_recoveries)
+        for ts in self._tenants.values():
+            ts.build_bank(mesh)
+            ts.assert_parity(mesh)
+        self._warmup()
+        log.info("recovery complete: served==exported parity re-asserted "
+                 "for %d tenant(s)", len(self._tenants))
+
+    async def _serve_one(self, ts: _TenantState, t0: float) -> None:
+        now = time.perf_counter() - t0
+        xb, meta = self._form_batch(ts, now)
+        if xb is None:
+            return
+        while True:
+            bt0 = time.perf_counter()
+            try:
+                preds = await asyncio.to_thread(self._dispatch, ts, xb)
+                break
+            except DeviceLoss as e:
+                # recovery never drops the in-flight microbatch: the
+                # same rows re-dispatch on the re-sharded bank
+                await asyncio.to_thread(self._recover, e)
+        batch_s = time.perf_counter() - bt0
+        self.watchdog.observe(batch_s)
+        self.batches += 1
+        self.dispatched_rows += len(xb)
+        done_s = time.perf_counter() - t0
+        for req, fut, start, take in meta:
+            chunk = preds[:, start:start + take]
+            chunks = getattr(fut, "_chunks", None)
+            if chunks is None:
+                fut._chunks = chunks = []
+            chunks.append(chunk)
+            still_queued = any(f is fut for _, f, _ in ts.queue)
+            if not still_queued and not fut.done():
+                self.slo.record(req.tenant, done_s - req.arrival_s,
+                                sum(c.shape[1] for c in chunks))
+                fut.set_result(np.concatenate(chunks, axis=1))
+        ts.batcher.observe(batch_s, ts.queued_rows)
+
+    async def _consume(self, t0: float) -> None:
+        while True:
+            pending = [ts for ts in self._tenants.values() if ts.queue]
+            if not pending:
+                if self._draining:
+                    return
+                self._work.clear()
+                await self._work.wait()
+                continue
+            # small gather window: under-full queues wait briefly for
+            # more arrivals before paying a padded launch
+            ts = min(pending, key=lambda s: s.queue[0][2])
+            if (not self._draining and ts.queued_rows < ts.batcher.batch
+                    and self._gather_s > 0):
+                await asyncio.sleep(self._gather_s)
+            await self._serve_one(ts, t0)
+
+    # ------------------------------------------------------------- run APIs
+    async def serve(self, workload: Sequence[Request], *,
+                    inject_device_failure: Optional[Callable] = None
+                    ) -> Dict:
+        """Replay an open-loop workload trace: arrivals paced by each
+        request's ``arrival_s``, deadlines enforced, SLO tracked.
+        Returns the structured metrics snapshot."""
+        self._inject = inject_device_failure
+        self._work = asyncio.Event()
+        self._draining = False
+        self._warmup()
+        t0 = time.perf_counter()
+        consumer = asyncio.ensure_future(self._consume(t0))
+        futures = []
+        warm = sorted(workload, key=lambda r: r.arrival_s)
+        for req in warm:
+            delay = req.arrival_s - (time.perf_counter() - t0)
+            if delay > 0:
+                await asyncio.sleep(delay)
+            futures.append(self.submit(req, t0))
+        self._draining = True
+        self._work.set()
+        await consumer
+        await asyncio.gather(*futures)
+        return self.report(time.perf_counter() - t0, futures=futures,
+                           workload=warm)
+
+    async def serve_closed_loop(self, payloads: Sequence[Sequence[Request]],
+                                *, think_s: float = 0.0) -> Dict:
+        """Closed-loop mode: each client task issues its next request
+        only after the previous response lands (deadlines are budgets
+        applied at issue time). Arrival-independent of service rate —
+        measures capacity, never sheds under overload."""
+        self._inject = None
+        self._work = asyncio.Event()
+        self._draining = False
+        self._warmup()
+        t0 = time.perf_counter()
+
+        async def client(reqs: Sequence[Request]) -> None:
+            for req in reqs:
+                now = time.perf_counter() - t0
+                live = dataclasses.replace(req, arrival_s=now,
+                                           deadline_s=now + req.deadline_s)
+                await self.submit(live, t0)
+                if think_s:
+                    await asyncio.sleep(think_s)
+
+        consumer = asyncio.ensure_future(self._consume(t0))
+        await asyncio.gather(*(client(r) for r in payloads))
+        self._draining = True
+        self._work.set()
+        await consumer
+        return self.report(time.perf_counter() - t0)
+
+    def report(self, wall_s: float, futures=None, workload=None) -> Dict:
+        """The structured metrics snapshot: per-tenant SLO stats plus
+        engine-level batching/elasticity counters."""
+        rep = {
+            "wall_s": wall_s,
+            "tenants": self.slo.snapshot(wall_s),
+            "batches": self.batches,
+            "pad_fraction": (self.padded_rows
+                             / max(self.dispatched_rows, 1)),
+            "stragglers": self.watchdog.stragglers,
+            "recoveries": self.recoveries,
+            "devices": {"alive": self.pool.alive,
+                        "lost": len(self.pool.lost),
+                        "sharded": self.pool.mesh() is not None},
+            "batch_sizes": {
+                name: {"quantum": ts.batcher.sizes[0],
+                       "quantum_source": ts.quantum_source,
+                       "ladder": ts.batcher.sizes,
+                       "final": ts.batcher.batch,
+                       "trajectory_tail": ts.batcher.history[-8:]}
+                for name, ts in self._tenants.items()},
+        }
+        if futures is not None and workload is not None:
+            responses = {req.rid: f.result()
+                         for req, f in zip(workload, futures)}
+            rep["responses"] = responses
+        return rep
+
+
+# ------------------------------------------------------------ sync wrappers
+def run_workload(tenants: Sequence[Tenant], workload: Sequence[Request],
+                 **kw) -> Dict:
+    """Synchronous convenience: build an engine over ``tenants`` and
+    replay an open-loop ``workload`` through it. Engine kwargs pass
+    through; ``inject_device_failure`` goes to ``serve``."""
+    inject = kw.pop("inject_device_failure", None)
+    engine = ServingEngine(tenants, **kw)
+    return asyncio.run(engine.serve(workload,
+                                    inject_device_failure=inject))
+
+
+def run_closed_loop(tenants: Sequence[Tenant],
+                    payloads: Sequence[Sequence[Request]], *,
+                    think_s: float = 0.0, **kw) -> Dict:
+    """Synchronous closed-loop driver (see ``serve_closed_loop``)."""
+    engine = ServingEngine(tenants, **kw)
+    return asyncio.run(engine.serve_closed_loop(payloads, think_s=think_s))

@@ -1,4 +1,16 @@
-"""Serving paths: prefill (build KV/SSM caches) and single-token decode.
+"""LM serving paths: prefill (build KV/SSM caches) and single-token
+decode.
+
+**Scope note (DESIGN.md §12).** This module is the *language-model*
+decode substrate and is NOT used by the classifier serving engine: the
+production classifier path (launch/serving_engine.py +
+launch/serve_classifier.py) serves frozen `DeployedClassifier` banks
+through the fused stateless bank kernel — no KV/SSM cache, no
+prefill/decode split — and takes only `StepWatchdog`/`DeviceLoss`
+(distributed/fault.py) and `bank_pool_mesh` (distributed/elastic.py)
+from the shared serving machinery. Everything below remains dormant
+until the LM-with-ADC-frontend path (launch/serve.py) is productionized
+the same way.
 
 Cache layouts (leading L = stacked layers, scanned):
   attention: ring buffers k/v (L, B, C, KV, hd) with C = min(S, window or S),

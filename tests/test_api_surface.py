@@ -25,11 +25,13 @@ API_SURFACE = {
     "deploy",
     "evaluate_robustness",
     "load_front",
+    "make_workload",
     "quantize",
     "robustness_curve",
     "save_front",
     "search",
     "serve",
+    "serve_stream",
 }
 
 

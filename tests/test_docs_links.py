@@ -1,0 +1,61 @@
+"""Docs-link checker (tier-1 face of the CI docs-links job): the repo's
+actual doc surfaces must pass, and the checker itself must catch broken
+relative links, broken anchors, and dangling DESIGN.md §N references."""
+import sys
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parents[1]
+sys.path.insert(0, str(REPO / "tools"))
+
+import check_doc_links as cdl  # noqa: E402
+
+
+def test_repo_docs_all_resolve():
+    errors = cdl.run(list(cdl.DEFAULT_SURFACES))
+    assert not errors, "\n".join(errors)
+
+
+def test_architecture_md_exists_and_is_checked():
+    files = [str(p) for p in cdl.collect_files(list(cdl.DEFAULT_SURFACES))]
+    assert any(f.endswith("docs/ARCHITECTURE.md") for f in files), files
+
+
+def test_github_slug_rules():
+    assert cdl.github_slug("Quickstart") == "quickstart"
+    assert cdl.github_slug("## not used") == "-not-used"
+    assert cdl.github_slug("SLO fields (JSON)") == "slo-fields-json"
+    assert cdl.github_slug("`serve_scale` / load-gen") == (
+        "serve_scale--load-gen")
+
+
+def test_checker_catches_broken_link_anchor_and_section(tmp_path):
+    good = tmp_path / "GOOD.md"
+    good.write_text("# Title\n## Real Heading\nbody\n")
+    bad = tmp_path / "BAD.md"
+    bad.write_text(
+        "[ok](GOOD.md) [ok2](GOOD.md#real-heading)\n"
+        "[missing](NOPE.md)\n"
+        "[bad anchor](GOOD.md#no-such-heading)\n"
+        "see DESIGN.md §999 for details\n"
+        "```\n[inside code fence](ALSO_NOPE.md) is not checked\n```\n")
+    sections = {1, 2, 3}
+    errors = cdl.check_file(bad, sections, {})
+    msgs = "\n".join(errors)
+    assert len(errors) == 3, msgs
+    assert "NOPE.md" in msgs
+    assert "no-such-heading" in msgs
+    assert "§999" in msgs
+    assert "ALSO_NOPE" not in msgs
+    assert not cdl.check_file(good, sections, {})
+
+
+def test_section_range_references(tmp_path):
+    doc = tmp_path / "D.md"
+    doc.write_text("covered in DESIGN.md §§1–3\n")
+    assert not cdl.check_file(doc, {1, 2, 3}, {})
+    assert len(cdl.check_file(doc, {1, 3}, {})) == 1   # §2 missing
+
+
+def test_design_sections_parser():
+    secs = cdl.design_sections(REPO / "DESIGN.md")
+    assert secs and 1 in secs and 8 in secs

@@ -1,0 +1,83 @@
+"""Elastic serving recovery (DESIGN.md §12, acceptance): on a forced
+2-device CPU host, the serving engine loses a device mid-stream
+(fault.DeviceLoss injected into a bank launch), re-shards the bank over
+the survivor (elastic.bank_pool_mesh -> unsharded fallback at 1 device),
+completes every accepted in-deadline request, and reproduces the
+exported accuracies bit-for-bit after recovery. jax pins the device
+count at init, so the engine runs in a subprocess with XLA_FLAGS set
+(the test_deploy_serve 2x1-mesh pattern)."""
+import os
+import subprocess
+import sys
+import textwrap
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parents[1]
+
+_SUBPROC = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=2"
+    import numpy as np, jax
+    from repro.core import deploy, search
+    from repro.data import tabular
+    from repro.distributed.fault import DeviceLoss
+    from repro.launch import loadgen, serving_engine
+
+    assert len(jax.devices()) == 2, jax.devices()
+    data = tabular.make_dataset("seeds")
+    cfg = search.SearchConfig(bits=2, pop_size=6, generations=1,
+                              train_steps=20)
+    pg, pf, _ = search.run_search(data, (7, 4, 3), cfg)
+    front = deploy.export_front(pg, data, (7, 4, 3), cfg)
+    exported = np.array([d.accuracy for d in front])
+
+    tenant = serving_engine.Tenant(
+        name="seeds", designs=front,
+        parity_data=(data["x_test"], data["y_test"]))
+    # deadlines far beyond the recovery stall: the criterion is that the
+    # device loss drops NOTHING accepted and in-deadline
+    wl = loadgen.make_workload(data["x_test"], 24, tenant="seeds",
+                               rate_rps=400.0, request_size=8,
+                               deadline_ms=30000.0, shape="bursty",
+                               seed=0)
+    rep = serving_engine.run_workload(
+        [tenant], wl, sharded=True, target_latency_ms=25.0,
+        inject_device_failure=lambda launch: 0 if launch == 1 else None)
+    slo = rep["tenants"]["seeds"]
+    assert rep["recoveries"] == 1, rep["recoveries"]
+    assert rep["devices"]["alive"] == 1 and rep["devices"]["lost"] == 1
+    assert slo["completed"] == len(wl), slo
+    assert slo["shed"] == 0 and slo["rejected"] == 0, slo
+    # responses survived the mid-batch retry and match the direct bank
+    fn = deploy.make_bank_fn(front)
+    for req in wl:
+        want = np.argmax(np.asarray(fn(req.x)), axis=-1)
+        np.testing.assert_array_equal(rep["responses"][req.rid], want)
+    # post-recovery parity on the shrunken pool, bit for bit
+    served = deploy.served_accuracies(front, data["x_test"],
+                                      data["y_test"])
+    np.testing.assert_array_equal(served, exported)
+
+    # losing the LAST device must fail loudly, not serve garbage
+    try:
+        serving_engine.run_workload(
+            [serving_engine.Tenant(name="seeds", designs=front)],
+            wl[:4], sharded=True, target_latency_ms=25.0,
+            inject_device_failure=lambda launch: 0)
+    except RuntimeError as e:
+        assert "exhausted" in str(e) or "max_recoveries" in str(e), e
+    else:
+        raise AssertionError("pool exhaustion did not raise")
+    print("OK-ELASTIC-RECOVERY")
+""")
+
+
+def test_device_loss_mid_stream_recovers_with_parity():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = str(REPO / "src") + os.pathsep + env.get(
+        "PYTHONPATH", "")
+    env.setdefault("JAX_PLATFORMS", "cpu")
+    out = subprocess.run([sys.executable, "-c", _SUBPROC], env=env,
+                         capture_output=True, text=True, timeout=600)
+    assert out.returncode == 0, (out.stdout[-2000:], out.stderr[-4000:])
+    assert "OK-ELASTIC-RECOVERY" in out.stdout

@@ -1,0 +1,269 @@
+"""Production serving engine + load generator (DESIGN.md §12): SLO
+percentile math pinned against known traces, deadline shedding counted
+(never silently dropped), seeded load-generator determinism, the
+adaptive batch controller's ladder + step rules, multi-tenant routing
+with wrong-domain rejection, and end-to-end request/response parity
+through the asyncio engine."""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core import deploy, search
+from repro.data import tabular
+from repro.launch import loadgen
+from repro.launch import serving_engine as se
+
+SIZES = (7, 4, 3)
+
+
+@pytest.fixture(scope="module")
+def front_and_data():
+    data = tabular.make_dataset("seeds")
+    cfg = search.SearchConfig(bits=2, pop_size=6, generations=1,
+                              train_steps=30)
+    pg, _, _ = search.run_search(data, SIZES, cfg)
+    return deploy.export_front(pg, data, SIZES, cfg), data
+
+
+# ------------------------------------------------------------- percentiles
+def test_percentile_nearest_rank_known_trace():
+    trace = list(range(1, 101))                       # 1..100 ms
+    assert se.percentile(trace, 50) == 50
+    assert se.percentile(trace, 95) == 95
+    assert se.percentile(trace, 99) == 99
+    assert se.percentile(trace, 100) == 100
+    # order-independent; exact on small samples (no interpolation)
+    assert se.percentile([7.0], 50) == 7.0
+    assert se.percentile([30, 10, 20], 50) == 20
+    assert se.percentile([30, 10, 20], 99) == 30
+    assert np.isnan(se.percentile([], 50))
+
+
+def test_slo_tracker_snapshot_accounting():
+    t = se.SLOTracker()
+    for ms in (10, 20, 30, 40):
+        t.record("a", ms / 1e3, rows=8)
+    t.shed("a")
+    t.shed("a")
+    t.reject("b")
+    snap = t.snapshot(wall_s=2.0)
+    a = snap["a"]
+    assert a["completed"] == 4 and a["shed"] == 2 and a["rejected"] == 0
+    assert a["requests"] == 6 and a["samples"] == 32
+    assert a["p50_ms"] == pytest.approx(20.0)
+    assert a["p99_ms"] == pytest.approx(40.0)
+    assert a["requests_per_s"] == pytest.approx(2.0)
+    assert a["samples_per_s"] == pytest.approx(16.0)
+    # rejected-only tenants still appear (nothing silently dropped)
+    b = snap["b"]
+    assert b["rejected"] == 1 and b["completed"] == 0
+    assert np.isnan(b["p50_ms"])
+
+
+# -------------------------------------------------------- adaptive batcher
+def test_adaptive_batcher_ladder_and_steps():
+    b = se.AdaptiveBatcher(quantum=32, max_batch=256,
+                           target_latency_s=0.05)
+    assert b.sizes == [32, 64, 128, 256]
+    assert b.batch == 32
+    # latency headroom + deep queue -> step up the pow2 ladder
+    for expect in (64, 128, 256, 256):
+        assert b.observe(0.001, queued_rows=10_000) == expect
+    # overshoot -> step back down
+    assert b.observe(1.0, queued_rows=10_000) == 128
+    # headroom but THIN queue -> hold (growing would only add padding)
+    b2 = se.AdaptiveBatcher(quantum=32, max_batch=256,
+                            target_latency_s=0.05)
+    assert b2.observe(0.001, queued_rows=8) == 32
+    with pytest.raises(ValueError):
+        se.AdaptiveBatcher(quantum=0)
+
+
+def test_adaptive_batcher_is_deterministic():
+    obs = [(0.001, 500), (0.002, 500), (0.5, 10), (0.001, 4)]
+    runs = []
+    for _ in range(2):
+        b = se.AdaptiveBatcher(quantum=16, max_batch=128,
+                               target_latency_s=0.05)
+        runs.append([b.observe(*o) for o in obs])
+    assert runs[0] == runs[1]
+
+
+def test_bank_quantum_from_dispatch(front_and_data):
+    front, _ = front_and_data
+    q, src = se.bank_quantum(front, max_batch=256)
+    assert q >= 1 and src in ("tuned", "default")
+
+
+# ------------------------------------------------------------ device pool
+def test_device_pool_fail_and_mesh():
+    pool = se.DevicePool(sharded=False)
+    assert pool.mesh() is None                       # unsharded mode
+    n = pool.alive
+    if n == 1:
+        with pytest.raises(RuntimeError, match="exhausted"):
+            pool.fail(0)
+    with pytest.raises(ValueError):
+        pool.fail(n + 5)
+
+
+# -------------------------------------------------------------- loadgen
+def test_loadgen_seeded_trace_is_reproducible():
+    x = np.random.default_rng(0).random((64, 7)).astype(np.float32)
+    kw = dict(tenant="t", rate_rps=500.0, request_size=4,
+              deadline_ms=50.0, shape="bursty", seed=7)
+    a = loadgen.make_workload(x, 32, **kw)
+    b = loadgen.make_workload(x, 32, **kw)
+    assert [r.arrival_s for r in a] == [r.arrival_s for r in b]
+    assert [r.deadline_s for r in a] == [r.deadline_s for r in b]
+    for ra, rb in zip(a, b):
+        np.testing.assert_array_equal(ra.x, rb.x)
+    c = loadgen.make_workload(x, 32, **{**kw, "seed": 8})
+    assert [r.arrival_s for r in a] != [r.arrival_s for r in c]
+    # arrivals sorted, deadlines = arrival + budget
+    arr = [r.arrival_s for r in a]
+    assert arr == sorted(arr)
+    for r in a:
+        assert r.deadline_s == pytest.approx(r.arrival_s + 0.05)
+
+
+@pytest.mark.parametrize("shape", loadgen.TRAFFIC_SHAPES)
+def test_rate_envelope_preserves_mean_rate(shape):
+    t = np.linspace(0.0, 4.0, 100_000, endpoint=False)
+    lam = loadgen.rate_envelope(t, 200.0, shape)
+    assert (lam >= 0).all()
+    assert float(lam.mean()) == pytest.approx(200.0, rel=0.02)
+
+
+def test_loadgen_validation_and_merge():
+    x = np.zeros((8, 7), np.float32)
+    with pytest.raises(ValueError, match="infeasible"):
+        loadgen.arrival_times(4, 100.0, "bursty", burst_factor=10.0,
+                              burst_fraction=0.5)
+    with pytest.raises(ValueError, match="unknown traffic shape"):
+        loadgen.make_workload(x, 4, shape="square")
+    a = loadgen.make_workload(x, 8, tenant="a", rate_rps=300.0, seed=0)
+    b = loadgen.make_workload(x, 8, tenant="b", rate_rps=300.0, seed=1)
+    m = loadgen.merge_workloads(a, b)
+    assert [r.rid for r in m] == list(range(16))
+    arr = [r.arrival_s for r in m]
+    assert arr == sorted(arr)
+    assert {r.tenant for r in m} == {"a", "b"}
+    d = loadgen.describe(m)
+    assert d["requests"] == 16 and d["tenants"] == ["a", "b"]
+
+
+# ------------------------------------------------------------ engine paths
+def _tenant(front, data, name="seeds"):
+    return se.Tenant(name=name, designs=front,
+                     parity_data=(data["x_test"], data["y_test"]))
+
+
+def test_deadline_shedding_is_counted_not_dropped(front_and_data):
+    front, data = front_and_data
+    x = data["x_test"].astype(np.float32)
+    wl = loadgen.make_workload(x, 6, tenant="seeds", rate_rps=5000.0,
+                               request_size=4, deadline_ms=1000.0, seed=0)
+    # expire half the deadlines before the stream even starts: those MUST
+    # be shed and counted, the rest must complete
+    expired = [dataclasses.replace(r, deadline_s=-1.0)
+               if r.rid % 2 == 0 else r for r in wl]
+    rep = se.run_workload([_tenant(front, data)], expired,
+                          target_latency_ms=50.0, gather_window_s=0.0)
+    slo = rep["tenants"]["seeds"]
+    assert slo["shed"] == 3 and slo["completed"] == 3
+    assert slo["requests"] == len(wl)            # every request accounted
+    for req in expired:
+        resp = rep["responses"][req.rid]
+        if req.deadline_s < 0:
+            assert resp is None                  # shed -> explicit None
+        else:
+            assert resp.shape == (len(front), req.rows)
+
+
+def test_multi_tenant_routing_and_wrong_domain_rejection(front_and_data):
+    front, data = front_and_data
+    x = data["x_test"].astype(np.float32)
+    wl_a = loadgen.make_workload(x, 4, tenant="a", rate_rps=2000.0,
+                                 request_size=4, deadline_ms=2000.0, seed=0)
+    wl_b = loadgen.make_workload(x, 4, tenant="b", rate_rps=2000.0,
+                                 request_size=4, deadline_ms=2000.0, seed=1)
+    # unknown tenant and a channel-count mismatch: both rejected, counted
+    stray = loadgen.Request(rid=0, tenant="zzz", arrival_s=0.0,
+                            deadline_s=9.0, x=x[:4])
+    narrow = loadgen.Request(rid=0, tenant="a", arrival_s=0.0,
+                             deadline_s=9.0,
+                             x=np.zeros((4, 3), np.float32))
+    wl = loadgen.merge_workloads(wl_a, wl_b, [stray, narrow])
+    tenants = [se.Tenant(name="a", designs=front),
+               se.Tenant(name="b", designs=front[:1])]
+    rep = se.run_workload(tenants, wl, target_latency_ms=100.0)
+    assert rep["tenants"]["a"]["completed"] == 4
+    assert rep["tenants"]["a"]["rejected"] == 1          # channel mismatch
+    assert rep["tenants"]["b"]["completed"] == 4
+    assert rep["tenants"]["zzz"]["rejected"] == 1        # unknown tenant
+    for req in wl:
+        resp = rep["responses"][req.rid]
+        if req.tenant == "zzz" or req.x.shape[1] != 7:
+            assert resp is None
+        else:
+            d = len(front) if req.tenant == "a" else 1
+            assert resp.shape == (d, req.rows)
+
+
+def test_engine_responses_match_direct_bank(front_and_data):
+    """End-to-end: every served response equals the direct fused-bank
+    prediction for that request's rows — adaptive batching, padding and
+    request carry never change values."""
+    front, data = front_and_data
+    x = data["x_test"].astype(np.float32)
+    wl = loadgen.make_workload(x, 10, tenant="seeds", rate_rps=3000.0,
+                               request_size=5, deadline_ms=5000.0,
+                               shape="diurnal", seed=3)
+    rep = se.run_workload([_tenant(front, data)], wl,
+                          target_latency_ms=50.0, max_batch=64)
+    slo = rep["tenants"]["seeds"]
+    assert slo["completed"] == len(wl) and slo["shed"] == 0
+    assert rep["batches"] >= 1
+    assert 0.0 <= rep["pad_fraction"] < 1.0
+    expect_fn = deploy.make_bank_fn(front)
+    for req in wl:
+        got = rep["responses"][req.rid]
+        want = np.argmax(np.asarray(expect_fn(req.x)), axis=-1)
+        np.testing.assert_array_equal(got, want)
+    # SLO snapshot is structurally complete
+    for k in ("p50_ms", "p95_ms", "p99_ms", "requests_per_s",
+              "samples_per_s"):
+        assert np.isfinite(slo[k])
+    assert rep["batch_sizes"]["seeds"]["quantum_source"] in ("tuned",
+                                                             "default")
+
+
+def test_closed_loop_serves_every_request(front_and_data):
+    front, data = front_and_data
+    x = data["x_test"].astype(np.float32)
+    payloads = loadgen.closed_loop_payloads(x, clients=3,
+                                            requests_per_client=4,
+                                            tenant="seeds",
+                                            request_size=4,
+                                            deadline_ms=5000.0, seed=0)
+    rep = se.run_closed_loop([_tenant(front, data)], payloads,
+                             target_latency_ms=50.0)
+    slo = rep["tenants"]["seeds"]
+    assert slo["completed"] == 12 and slo["shed"] == 0
+
+
+def test_api_serve_stream_facade(front_and_data):
+    from repro import api
+    front, data = front_and_data
+    bank = api.Bank(designs=tuple(front))
+    x = data["x_test"].astype(np.float32)
+    trace = api.make_workload(x, 6, tenant="seeds", rate_rps=2000.0,
+                              request_size=4, deadline_ms=5000.0, seed=0)
+    rep = api.serve_stream(bank, trace,
+                           parity_data=(data["x_test"], data["y_test"]))
+    assert rep["tenants"]["seeds"]["completed"] == 6
+    with pytest.raises(ValueError, match="single-tenant"):
+        mixed = trace + [dataclasses.replace(trace[0], tenant="other")]
+        api.serve_stream(bank, mixed)

@@ -1,0 +1,168 @@
+"""Docs-link checker (CI step + tier-1 test backend): every relative
+markdown link, every GitHub-style ``#anchor`` fragment, and every
+textual ``DESIGN.md §N`` section reference in the repo's doc surfaces
+must resolve.
+
+Checked surfaces (see --files): README.md, DESIGN.md, CHANGES.md,
+ROADMAP.md, benchmarks/README.md, and everything under docs/. External
+(http/https/mailto) links are skipped — CI must not flake on the
+network. Checked instead:
+
+* relative links ``[text](path)`` → the target file/dir exists (relative
+  to the linking file);
+* anchored links ``[text](path#anchor)`` / ``[text](#anchor)`` → the
+  anchor matches a heading in the target file, slugged the way GitHub
+  does (lowercase, punctuation stripped, spaces to dashes);
+* section references ``DESIGN.md §N`` (also ``§§M–N`` ranges and bare
+  ``§N`` inside DESIGN.md itself) → DESIGN.md actually has a ``## §N``
+  heading.
+
+Exit 0 when everything resolves; exit 1 with a per-offender list
+otherwise.
+
+  python tools/check_doc_links.py            # default surfaces
+  python tools/check_doc_links.py --files README.md docs/FOO.md
+"""
+from __future__ import annotations
+
+import argparse
+import re
+import sys
+from pathlib import Path
+from typing import Dict, List, Set
+
+REPO = Path(__file__).resolve().parent.parent
+
+DEFAULT_SURFACES = ("README.md", "DESIGN.md", "CHANGES.md", "ROADMAP.md",
+                    "PAPER.md", "benchmarks/README.md")
+
+# [text](target) — excluding images' srcsets etc.; target split on '#'
+_LINK = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+_HEADING = re.compile(r"^(#{1,6})\s+(.*?)\s*$", re.M)
+# DESIGN.md §N / §§M-N (en dash or hyphen); bare §N only scanned inside
+# DESIGN.md itself
+_SECTION_REF = re.compile(r"DESIGN\.md\s+§§?\s*(\d+)(?:\s*[–-]\s*(\d+))?")
+_BARE_REF = re.compile(r"§§?\s*(\d+)(?:\s*[–-]\s*(\d+))?")
+_CODE_FENCE = re.compile(r"```.*?```", re.S)
+
+
+def _rel(path: Path) -> str:
+    try:
+        return str(path.relative_to(REPO))
+    except ValueError:                      # e.g. tmp files in tests
+        return str(path)
+
+
+def github_slug(heading: str) -> str:
+    """GitHub's heading -> anchor slug: strip markdown emphasis/code
+    ticks, lowercase, drop punctuation except hyphens/spaces, spaces to
+    hyphens."""
+    h = re.sub(r"[`*]", "", heading.strip())
+    h = re.sub(r"\[([^\]]*)\]\([^)]*\)", r"\1", h)     # linked headings
+    h = h.lower()
+    h = re.sub(r"[^\w\- ]", "", h, flags=re.UNICODE)
+    return h.replace(" ", "-")
+
+
+def anchors_of(path: Path, cache: Dict[Path, Set[str]]) -> Set[str]:
+    if path not in cache:
+        text = path.read_text(encoding="utf-8")
+        slugs: Dict[str, int] = {}
+        out: Set[str] = set()
+        for m in _HEADING.finditer(text):
+            slug = github_slug(m.group(2))
+            n = slugs.get(slug, 0)
+            slugs[slug] = n + 1
+            out.add(slug if n == 0 else f"{slug}-{n}")
+        cache[path] = out
+    return cache[path]
+
+
+def design_sections(design_path: Path) -> Set[int]:
+    """The §N numbers DESIGN.md actually defines (## §N ... headings)."""
+    if not design_path.exists():
+        return set()
+    return {int(m.group(1)) for m in
+            re.finditer(r"^##\s+§(\d+)", design_path.read_text(), re.M)}
+
+
+def check_file(path: Path, sections: Set[int],
+               anchor_cache: Dict[Path, Set[str]]) -> List[str]:
+    errors: List[str] = []
+    raw = path.read_text(encoding="utf-8")
+    text = _CODE_FENCE.sub(lambda m: "\n" * m.group(0).count("\n"), raw)
+
+    for m in _LINK.finditer(text):
+        target = m.group(1)
+        line = text[:m.start()].count("\n") + 1
+        if target.startswith(("http://", "https://", "mailto:")):
+            continue
+        base, _, frag = target.partition("#")
+        dest = (path.parent / base).resolve() if base else path
+        if base and not dest.exists():
+            errors.append(f"{_rel(path)}:{line}: broken "
+                          f"relative link -> {target}")
+            continue
+        if frag and dest.is_file() and dest.suffix == ".md":
+            if frag not in anchors_of(dest, anchor_cache):
+                errors.append(f"{_rel(path)}:{line}: broken "
+                              f"anchor -> {target} (no heading slugs to "
+                              f"'#{frag}')")
+
+    refs = list(_SECTION_REF.finditer(text))
+    if path.name == "DESIGN.md":
+        refs += [m for m in _BARE_REF.finditer(text)]
+    for m in refs:
+        line = text[:m.start()].count("\n") + 1
+        lo = int(m.group(1))
+        hi = int(m.group(2)) if m.group(2) else lo
+        for n in range(lo, hi + 1):
+            if n not in sections:
+                errors.append(
+                    f"{_rel(path)}:{line}: reference to "
+                    f"DESIGN.md §{n} but DESIGN.md defines "
+                    f"§{{{','.join(map(str, sorted(sections)))}}}")
+    return errors
+
+
+def collect_files(names: List[str]) -> List[Path]:
+    files = []
+    for n in names:
+        p = (REPO / n) if not Path(n).is_absolute() else Path(n)
+        if p.exists():
+            files.append(p)
+    docs = REPO / "docs"
+    if docs.is_dir():
+        files += sorted(docs.rglob("*.md"))
+    return files
+
+
+def run(names: List[str]) -> List[str]:
+    sections = design_sections(REPO / "DESIGN.md")
+    cache: Dict[Path, Set[str]] = {}
+    errors: List[str] = []
+    for f in collect_files(names):
+        errors += check_file(f, sections, cache)
+    return errors
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--files", nargs="*", default=list(DEFAULT_SURFACES),
+                    help="doc surfaces to check (docs/*.md always added)")
+    args = ap.parse_args(argv)
+    errors = run(args.files)
+    checked = [str(_rel(p)) for p in collect_files(args.files)]
+    if errors:
+        print(f"docs-link check: FAIL ({len(errors)} broken reference(s) "
+              f"across {len(checked)} files)")
+        for e in errors:
+            print(f"  {e}")
+        return 1
+    print(f"docs-link check: OK ({len(checked)} files: "
+          f"{', '.join(checked)})")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())
