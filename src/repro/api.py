@@ -8,6 +8,8 @@ fused multi-design serving — behind four verbs and one spec object::
     spec = api.AdcSpec(bits=3, vmin=(0.0, -1.0, 0.2), vmax=(1.0, 1.0, 4.7))
     front = api.search(spec, data, sizes=(3, 4, 2), pop_size=16,
                        generations=8)                # NSGA-II x vmapped QAT
+    front = api.search_gradient(spec, data, sizes=(3, 4, 2),
+                                pop_size=16)         # one-train gate family
     bank = api.deploy(front)                          # frozen classifiers
     logits = api.serve(bank, x)                       # fused bank kernel
     api.save_front("/tmp/front", bank)
@@ -58,6 +60,7 @@ __all__ = [
     "robustness_curve",
     "save_front",
     "search",
+    "search_gradient",
     "serve",
     "serve_stream",
 ]
@@ -157,6 +160,28 @@ def search(spec: AdcSpec, data: Dict, sizes: Optional[Sequence[int]] = None,
     return Front(spec=spec, config=cfg, sizes=sizes,
                  genomes=np.asarray(pg, np.uint8),
                  fitness=np.asarray(pf, np.float64), trained=trained)
+
+
+def search_gradient(spec: AdcSpec, data: Dict,
+                    sizes: Optional[Sequence[int]] = None, *,
+                    model: str = "mlp", pop_size: int = 32,
+                    train_steps: int = 300, seed: int = 0,
+                    weight_bits: int = 8, hidden: int = 4, log=None,
+                    ckpt=None, resume: bool = False, **cfg_kw) -> Front:
+    """The gradient engine (DESIGN.md §13) behind the same Front contract
+    as ``search``: ONE jitted QAT run trains per-comparator gate logits
+    through a hard-sigmoid STE with a log-spaced area-regularizer sweep
+    across ``pop_size`` lanes (override with ``grad_points=...``), snaps
+    the family to genomes, and re-scores through the exact batched
+    fitness path — so the returned Front keeps the bit-for-bit
+    pure-function-of-genome contract. Prefer it when search throughput
+    is the bottleneck; prefer ``search`` when you want the evolutionary
+    engines' anytime front refinement or a robustness objective."""
+    return search(spec, data, sizes, model=model, pop_size=pop_size,
+                  generations=0, train_steps=train_steps,
+                  engine="gradient", seed=seed, weight_bits=weight_bits,
+                  hidden=hidden, log=log, ckpt=ckpt, resume=resume,
+                  **cfg_kw)
 
 
 def deploy(front: Front, data: Optional[Dict] = None) -> Bank:

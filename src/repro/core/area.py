@@ -67,6 +67,31 @@ def flash_full_tc(bits: int) -> int:
 
 
 # ------------------------------------------------------------- pruned model
+def stage_cost_coeffs(bits: int, d: int):
+    """Per-depth transistor-cost coefficients of the pruned proposed
+    design, shared between the exact integer walk (``pruned_binary_tc``)
+    and the differentiable relaxation (core/grad_gates.relaxed_area —
+    DESIGN.md §13). Depth ``d`` with ``cnt >= 1`` needed nodes costs
+
+        any_tc * [cnt > 0]  +  sel_tc * (2 * cnt - 2 * [cnt > 0])
+
+    where ``any_tc`` bundles everything paid once per live stage: the
+    stage output comparator, the two enable comparators + double
+    inversion of middle stages (the exact walk's ``min(cnt + 1, 2)``
+    equals 2 whenever the stage is live), and the TA amplifier of stages
+    >= 2; ``sel_tc`` prices the surviving V_ref select lines (rule r1).
+    The root (d = 0) has no selects — its only cost is COM0 (rule r3).
+    """
+    if d == 0:
+        return COMPARATOR_TC, 0
+    any_tc = COMPARATOR_TC
+    if d <= bits - 2:                                 # middle stages only
+        any_tc += 2 * COMPARATOR_TC + 2 * INVERTER_TC
+    if d >= 2:
+        any_tc += 1                                   # TA amplifier
+    return any_tc, SELECT_TC
+
+
 def _needed_tree(mask: np.ndarray) -> list:
     """Per-depth list of needed-node counts for a kept-level mask (2^N,)."""
     mask = np.asarray(mask).astype(bool)
@@ -96,16 +121,8 @@ def pruned_binary_tc(mask: np.ndarray) -> int:
     for d, cnt in enumerate(needed):
         if cnt == 0:
             continue
-        if d == 0:
-            tc += COMPARATOR_TC                       # root comparator (r3)
-        else:
-            tc += COMPARATOR_TC                       # stage output comparator
-            tc += SELECT_TC * max(2 * cnt - 2, 0)     # surviving V_ref selects (r1)
-            if d <= bits - 2:                         # middle stages only
-                tc += COMPARATOR_TC * min(cnt + 1, 2)  # enable comparators (r2)
-                tc += 2 * INVERTER_TC
-            if d >= 2:
-                tc += 1                               # TA amplifier
+        any_tc, sel_tc = stage_cost_coeffs(bits, d)
+        tc += any_tc + sel_tc * (2 * cnt - 2)
     return tc
 
 

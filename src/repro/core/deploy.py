@@ -139,6 +139,21 @@ def export_front(genomes: np.ndarray, data: Dict, sizes: Sequence[int],
     return designs
 
 
+def verify_front_parity(designs: Sequence[DeployedClassifier],
+                        genomes: np.ndarray, data: Dict,
+                        sizes: Sequence[int], cfg: SearchConfig) -> bool:
+    """Bit-for-bit contract check (DESIGN.md §8/§13): re-train the given
+    genomes through the exact batched fitness path and compare against
+    the accuracies the designs report. Every QAT lane is a pure function
+    of (genome, data, cfg), so this must hold exactly — for fronts from
+    the evolutionary engines AND for snapped gradient-engine designs
+    (their pool re-score IS this path). Exact float equality on purpose:
+    any drift means the purity contract broke, not a tolerance issue."""
+    accs, _, _, _ = train_pareto_front(genomes, data, sizes, cfg)
+    reported = np.array([d.accuracy for d in designs], np.float64)
+    return bool(np.array_equal(np.asarray(accs, np.float64), reported))
+
+
 def _po2(w, dp: float, weight_bits: int) -> np.ndarray:
     return np.asarray(qat.quantize_po2(np.asarray(w), dp, weight_bits),
                       np.float32)

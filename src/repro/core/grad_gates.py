@@ -1,0 +1,332 @@
+"""Gradient-based in-training ADC optimization (DESIGN.md §13).
+
+The NSGA-II engines (core/search.py) pay one compiled QAT train per
+genome per generation. This module makes the comparator keep/prune
+decision itself differentiable so ADC simplification rides a SINGLE
+jitted QAT loop: per-comparator gate logits pass through a hard-sigmoid
+straight-through estimator (the ``qat._ste`` pattern), the exact pruned
+comparator tree stays in the forward pass, and gradients flow through
+two smooth relaxations —
+
+* ``relaxed_area`` — a smooth surrogate of ``area.pruned_binary_tc``
+  built from the same per-depth coefficients
+  (``area.stage_cost_coeffs``): soft-OR subtree aliveness replaces the
+  integer needed-node walk. Exact at binary corners (0/1 arithmetic is
+  exact in float) and monotone in every gate, so the hard forward value
+  IS the integer transistor count of the snapped design;
+* ``soft_value_table`` — a distance-weighted soft assignment of codes
+  to kept levels, the backward linearization of the pruned tree's
+  code->value LUT (``adc.tree_lut`` stays the forward).
+
+A λ (area-regularizer) sweep across vmapped lanes plus a τ (gate
+temperature) anneal schedule makes ONE train produce a *family* of
+pruned designs along the accuracy/area front; per-chunk snapshots add
+intermediate operating points. ``snap_to_genomes`` then converts gate
+logits to ordinary search genomes, and core/search re-scores them
+through the exact batched fitness path — so exported fronts keep the
+bit-for-bit pure-function-of-genome contract (DESIGN.md §8).
+
+Training checkpoints in fixed chunk units through checkpoint/manager.py
+(gate logits, dp, model params, optimizer state, collected snapshots);
+a killed-and-resumed gate train replays the remaining chunks from the
+restored state bit-identically (the schedule is a pure function of
+(train_steps, grad_snapshots) and the data/λ/τ streams carry no
+run-time randomness).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import adc, area, qat
+from repro.models import mlp as mlp_lib
+from repro.optim import adamw
+
+DP_BITS = 4   # mirrors search.DP_BITS (no import: search.py imports us)
+
+
+# ----------------------------------------------------------- relaxations
+def relaxed_area(g: jnp.ndarray) -> jnp.ndarray:
+    """Differentiable transistor count of one pruned ADC: gates ``g``
+    (..., 2^N) in [0, 1] -> (...,) float.
+
+    The exact model walks the comparator tree counting nodes whose both
+    halves still hold kept levels (``area._needed_tree``). Here subtree
+    aliveness relaxes to a soft OR (``1 - prod(1 - g)``), a node's
+    needed-ness to the product of its halves' aliveness, and the
+    per-depth integer costs reuse ``area.stage_cost_coeffs`` verbatim:
+
+        any_tc * any(both) + sel_tc * (2 * sum(both) - 2 * any(both))
+
+    At binary corners every product/sum is exact 0/1 float arithmetic,
+    so the value equals ``area.pruned_binary_tc`` exactly (including the
+    kept <= 1 -> 0 degenerate case, where no node has two live halves);
+    d(2*cnt - 2*any)/d both_j = 2 * (1 - prod_{i!=j}(1 - both_i)) >= 0
+    and every other term is a monotone composition, so the proxy is
+    monotone in every gate (tests/test_grad_gates.py pins both)."""
+    n = g.shape[-1]
+    bits = n.bit_length() - 1
+    lead = g.shape[:-1]
+    tc = jnp.zeros(lead, g.dtype)
+    for d in range(bits):
+        halves = g.reshape(lead + (2 ** (d + 1), n // 2 ** (d + 1)))
+        alive = 1.0 - jnp.prod(1.0 - halves, axis=-1)     # soft OR
+        both = jnp.prod(alive.reshape(lead + (2 ** d, 2)), axis=-1)
+        cnt = both.sum(-1)
+        any_ = 1.0 - jnp.prod(1.0 - both, axis=-1)
+        any_tc, sel_tc = area.stage_cost_coeffs(bits, d)
+        tc = tc + any_tc * any_ + sel_tc * (2.0 * cnt - 2.0 * any_)
+    return tc
+
+
+def relaxed_area_norm(g: jnp.ndarray, bits: int) -> jnp.ndarray:
+    """Whole-classifier normalized area — gates (..., C, 2^N) -> (...,)
+    — the smooth counterpart of the search fitness's area column
+    (``system_tc / (flash_full_tc * C)``)."""
+    channels = g.shape[-2]
+    flash_full = max(area.flash_full_tc(bits) * channels, 1)
+    return relaxed_area(g).sum(-1) / flash_full
+
+
+def soft_value_table(g: jnp.ndarray, values: jnp.ndarray,
+                     beta: float) -> jnp.ndarray:
+    """Soft code->value map: gates (..., C, n) x level values ((n,) or
+    (C, n)) -> (..., C, n). Each original code k takes a gate-weighted,
+    distance-decayed (exp(-beta * |k - j|)) average over levels j — the
+    smooth stand-in for ``adc.tree_lut``'s routing whose gradients tell
+    a gate how much code k's reconstruction would move if level j were
+    (un)kept."""
+    n = g.shape[-1]
+    idx = jnp.arange(n, dtype=g.dtype)
+    kern = jnp.exp(-beta * jnp.abs(idx[:, None] - idx[None, :]))  # (k, j)
+    w = g[..., None, :] * kern
+    w = w / (w.sum(-1, keepdims=True) + 1e-9)
+    return (w * values[..., None, :]).sum(-1)
+
+
+def gate_soft(logits: jnp.ndarray, tau) -> jnp.ndarray:
+    """Hard-sigmoid gate relaxation: clip(logits / (2 tau) + 1/2, 0, 1).
+    tau -> 0 sharpens toward the binary mask ``logits > 0``."""
+    return jnp.clip(logits / (2.0 * tau) + 0.5, 0.0, 1.0)
+
+
+def hard_mask(logits: jnp.ndarray, min_levels: int) -> jnp.ndarray:
+    """The binary (repaired) mask a set of gate logits snaps to — the
+    same repair the genome decode applies, so the training forward sees
+    exactly the design the snapped genome will decode to."""
+    return adc.repair_mask((logits > 0).astype(jnp.int32), min_levels)
+
+
+# ------------------------------------------------------------ train step
+def _lane_loss(bundle: Dict, lam, tau, xcodes_tr, y_tr, values, sizes,
+               cfg) -> jnp.ndarray:
+    """One lane's loss: CE of the QAT forward on hard-pruned inputs +
+    lam * normalized area — both terms exact in the forward pass and
+    relaxed in the backward pass (``qat._ste``)."""
+    from repro.models import svm as svm_lib
+    logits, dpc, params = bundle["logits"], bundle["dp"], bundle["params"]
+    g = gate_soft(logits, tau)
+    hard = hard_mask(logits, cfg.min_levels)
+    # area: exact integer count forward, smooth relaxation backward
+    area_n = qat._ste(relaxed_area_norm(g, cfg.bits),
+                      relaxed_area_norm(hard.astype(g.dtype), cfg.bits))
+    # values: exact pruned-tree LUT forward, soft table backward
+    lut = adc.tree_lut(hard)                               # (C, n)
+    hard_tab = jnp.take_along_axis(values, lut, axis=-1)
+    tab = qat._ste(soft_value_table(g, values, cfg.grad_beta), hard_tab)
+    xq = jnp.take_along_axis(tab, xcodes_tr.T, axis=1).T   # (M, C)
+    # decimal position: continuous carrier, integer forward (STE round)
+    dp = qat._ste(dpc, jnp.round(jnp.clip(dpc, -8.0, 7.0)))
+    if cfg.model == "svm":
+        ce = svm_lib.svm_loss(params, xq, y_tr, dp,
+                              weight_bits=cfg.weight_bits)
+    else:
+        out = mlp_lib.apply_mlp(params, xq, dp, cfg.weight_bits)
+        logp = jax.nn.log_softmax(out)
+        onehot = jax.nn.one_hot(y_tr, sizes[-1])
+        ce = -(onehot * logp).sum(-1).mean()
+    return ce + lam * area_n
+
+
+@functools.lru_cache(maxsize=8)
+def _chunk_fn(chunk_len: int, total_steps: int, sizes, cfg):
+    """Jitted chunk of the multi-lane gate train: ``chunk_len`` scan
+    steps over all lanes at once (vmap over {logits, dp, params, opt,
+    lam}); the τ anneal is a pure function of the GLOBAL step index, so
+    chunked and unchunked schedules coincide and a resumed run replays
+    the identical remainder."""
+    denom = float(max(total_steps - 1, 1))
+
+    def run(bundle, opt, lams, step0, xcodes_tr, y_tr, values):
+        def one(carry, i):
+            b, o = carry
+            frac = (step0 + i).astype(jnp.float32) / denom
+            tau = cfg.grad_tau0 * (cfg.grad_tau1 / cfg.grad_tau0) ** frac
+
+            def lane(bl, ol, lam):
+                gr = jax.grad(_lane_loss)(bl, lam, tau, xcodes_tr, y_tr,
+                                          values, sizes, cfg)
+                return adamw.update(gr, ol, bl, lr=cfg.lr)
+
+            b, o = jax.vmap(lane)(b, o, lams)
+            return (b, o), ()
+
+        (bundle, opt), _ = jax.lax.scan(one, (bundle, opt),
+                                        jnp.arange(chunk_len))
+        return bundle, opt
+
+    return jax.jit(run)
+
+
+def lambda_sweep(cfg, lanes: int) -> np.ndarray:
+    """Per-lane area-regularizer weights, log-spaced over
+    [grad_lambda_lo, grad_lambda_hi] — the knob that spreads the lane
+    family along the accuracy/area front."""
+    if lanes == 1:
+        return np.array([cfg.grad_lambda_lo], np.float32)
+    return np.logspace(np.log10(cfg.grad_lambda_lo),
+                       np.log10(cfg.grad_lambda_hi), lanes).astype(np.float32)
+
+
+DP_INIT_GRID = (-3.0, -1.0, 1.0, 3.0)
+# lane keep-density strata (period 5 — coprime with the dp grid's 4)
+DENSITY_GRID = (1.0, 0.8, 0.6, 0.45, 0.3)
+
+
+def init_lanes(sizes, cfg, lanes: int):
+    """Initial (bundle, opt) stacks for ``lanes`` gate-train lanes:
+    gate logits start as a seeded random subnetwork whose keep-density
+    cycles over ``DENSITY_GRID`` (period 5, coprime with the dp grid's
+    period 4 so the strata don't align), dp cycling over
+    ``DP_INIT_GRID`` — the STE gradient moves dp only locally, so the
+    family covers the decimal-position axis by initialization, like it
+    covers the area axis by the λ sweep — and every lane shares the
+    classifier init the exact engines use (same cfg.seed).
+
+    Density stratification matters: an all-dense init (every gate just
+    inside keep) only ever *prunes down*, and the highest-accuracy
+    designs of a heavily-prunable problem live in sparse basins a
+    prune-down trajectory never visits. Sparse-init lanes still get full
+    gradients through dead gates — the STE backward runs on the soft
+    path — so they can grow gates back as well as drop them."""
+    from repro.models import svm as svm_lib
+    C, n = sizes[0], 2 ** cfg.bits
+    key = jax.random.PRNGKey(cfg.seed)
+    k_gate, k_model = jax.random.split(key)
+    k_u, k_n = jax.random.split(k_gate)
+    keep_p = jnp.asarray([DENSITY_GRID[i % len(DENSITY_GRID)]
+                          for i in range(lanes)],
+                         jnp.float32)[:, None, None]
+    u = jax.random.uniform(k_u, (lanes, C, n))
+    # 0.3 spread: enough symmetry breaking that lanes sharing a stratum
+    # commit to different masks (0.05 left the family collapsed onto one
+    # local optimum; see DESIGN.md §13 tuning notes)
+    logits = (jnp.where(u < keep_p, 0.8, -0.8)
+              + 0.3 * jax.random.normal(k_n, (lanes, C, n), jnp.float32))
+    dp = jnp.asarray([DP_INIT_GRID[i % len(DP_INIT_GRID)]
+                      for i in range(lanes)], jnp.float32)
+    if cfg.model == "svm":
+        params = svm_lib.init_svm(jax.random.PRNGKey(cfg.seed), sizes[0],
+                                  sizes[-1])
+    else:
+        params = mlp_lib.init_mlp(jax.random.PRNGKey(cfg.seed), sizes)
+    tile = lambda a: jnp.tile(a[None], (lanes,) + (1,) * a.ndim)
+    bundle = {"logits": logits, "dp": dp,
+              "params": jax.tree_util.tree_map(tile, params)}
+    # per-lane Adam step counter: the update runs under vmap, so every
+    # leaf — the scalar step included — must carry the lane axis
+    opt = adamw.init(bundle)._replace(step=jnp.zeros((lanes,), jnp.int32))
+    return bundle, opt
+
+
+def snap_to_genomes(logits, dp, channels: int, bits: int) -> np.ndarray:
+    """Gate logits (L, C, 2^N) + continuous dp (L,) -> ordinary search
+    genomes (L, C * 2^N + 4) uint8. No repair here: ``decode_genome``
+    applies the identical deterministic repair, so the decoded mask is
+    exactly the training forward's ``hard_mask``."""
+    masks = np.asarray(np.asarray(logits) > 0, np.uint8)
+    masks = masks.reshape(masks.shape[0], channels * 2 ** bits)
+    dp_i = (np.clip(np.round(np.asarray(dp)), -8, 7).astype(np.int64) + 8)
+    dpb = ((dp_i[:, None] >> np.arange(DP_BITS)) & 1).astype(np.uint8)
+    return np.concatenate([masks, dpb], axis=1)
+
+
+# ------------------------------------------------------- chunked driver
+def _chunk_bounds(train_steps: int, chunks: int) -> np.ndarray:
+    return np.linspace(0, train_steps, chunks + 1).round().astype(int)
+
+
+def _state_tree(bundle, opt, chunk: int, snaps: np.ndarray) -> Dict:
+    """Flat array tree the CheckpointManager persists: the (bundle, opt)
+    leaves under stable indexed keys plus the completed-chunk counter
+    and the snapshot genomes collected so far (shape grows per chunk —
+    restored via ``restore_flat``, which needs no like-tree)."""
+    leaves = jax.tree_util.tree_leaves((bundle, opt))
+    tree = {f"leaf_{i}": np.asarray(l) for i, l in enumerate(leaves)}
+    tree["chunk"] = np.asarray(chunk, np.int64)
+    tree["snap_genomes"] = np.asarray(snaps, np.uint8)
+    return tree
+
+
+def train_gate_family(data: Dict, sizes, cfg, *, lanes: int,
+                      ckpt=None, resume: bool = False,
+                      progress=None) -> Tuple[np.ndarray, Dict]:
+    """Run the chunked multi-lane gate train; returns ``(pool, diag)``
+    where ``pool`` ((K, G) uint8) holds every snapshot genome of every
+    lane (per-chunk family points + the final designs, duplicates
+    included — the caller dedups before the exact re-score) and
+    ``diag`` records the schedule. ``ckpt``/``resume`` give chunk-level
+    bit-identical restart (core/search.run_search wires the manager)."""
+    C = sizes[0]
+    chunks = max(int(cfg.grad_snapshots), 1)
+    # the gate train learns masks AND weights jointly in one run, so it
+    # gets its own (longer) budget; the snapped designs still re-score at
+    # the exact cfg.train_steps QAT the fitness contract defines
+    total_steps = (cfg.grad_train_steps if cfg.grad_train_steps > 0
+                   else 8 * cfg.train_steps)
+    bounds = _chunk_bounds(total_steps, chunks)
+    lams = jnp.asarray(lambda_sweep(cfg, lanes))
+    values = np.asarray(adc.level_values(cfg.bits, cfg.vmin, cfg.vmax),
+                        np.float32)
+    values = jnp.asarray(np.broadcast_to(values, (C, 2 ** cfg.bits)))
+    xcodes = adc.encode(jnp.asarray(data["x_train"], jnp.float32),
+                        cfg.bits, cfg.vmin, cfg.vmax)
+    y_tr = jnp.asarray(data["y_train"])
+
+    bundle, opt = init_lanes(sizes, cfg, lanes)
+    start_chunk = 0
+    snaps = np.zeros((0, C * 2 ** cfg.bits + DP_BITS), np.uint8)
+    if ckpt is not None and resume:
+        step = ckpt.latest_step()
+        if step is not None:
+            flat = ckpt.restore_flat(step)
+            leaves, treedef = jax.tree_util.tree_flatten((bundle, opt))
+            restored = [jnp.asarray(flat[f"leaf_{i}"])
+                        for i in range(len(leaves))]
+            bundle, opt = jax.tree_util.tree_unflatten(treedef, restored)
+            start_chunk = int(flat["chunk"])
+            snaps = np.asarray(flat["snap_genomes"], np.uint8)
+
+    for ci in range(start_chunk, chunks):
+        lo, hi = int(bounds[ci]), int(bounds[ci + 1])
+        if hi > lo:
+            fn = _chunk_fn(hi - lo, total_steps, tuple(sizes), cfg)
+            bundle, opt = fn(bundle, opt, lams, jnp.asarray(lo), xcodes,
+                             y_tr, values)
+        snap = snap_to_genomes(jax.device_get(bundle["logits"]),
+                               jax.device_get(bundle["dp"]), C, cfg.bits)
+        snaps = np.concatenate([snaps, snap])
+        if ckpt is not None:
+            ckpt.save(ci + 1, _state_tree(bundle, opt, ci + 1, snaps),
+                      blocking=True)
+        if progress is not None:
+            progress(f"gate-train chunk {ci + 1}/{chunks} "
+                     f"(steps {lo}..{hi}): {len(snaps)} family snapshots")
+    diag = {"lanes": lanes, "chunks": chunks,
+            "lambda": np.asarray(lams).tolist(),
+            "snapshots": int(len(snaps))}
+    return snaps, diag

@@ -63,9 +63,14 @@ def crowding_distance(F: np.ndarray, rank: np.ndarray) -> np.ndarray:
     return dist
 
 
-def _tournament(rng, rank, dist, k=2):
+def _tournament(rng, rank, dist, k=2, n=None):
+    """``n`` winners of binary tournaments (default: one per individual).
+    ``n=None`` draws exactly the shapes the unscreened loop always drew,
+    so a run with ``offspring_factor=1`` replays the historical RNG
+    stream bit-for-bit."""
     P = rank.shape[0]
-    cand = rng.integers(0, P, size=(P, k))
+    n = P if n is None else n
+    cand = rng.integers(0, P, size=(n, k))
     best = cand[:, 0]
     for j in range(1, k):
         c = cand[:, j]
@@ -105,25 +110,44 @@ def evolve_step(state: EvolveState,
                 eval_fn: Callable[[np.ndarray], np.ndarray],
                 pc: float = 0.7,
                 pm: float = 0.2,
-                pm_bit: Optional[float] = None) -> EvolveState:
+                pm_bit: Optional[float] = None,
+                offspring_factor: int = 1,
+                screen_fn: Optional[Callable] = None,
+                on_evaluated: Optional[Callable] = None) -> EvolveState:
     """One NSGA-II generation: selection -> variation -> evaluation ->
     (mu + lambda) elitist survival. Mutates ``state.rng``'s stream and
-    returns the successor state."""
+    returns the successor state.
+
+    Surrogate screening (DESIGN.md §13): ``offspring_factor > 1``
+    oversamples the offspring by that factor; ``screen_fn`` (candidates
+    (n_off, G) -> index array, best first) then picks the ``pop_size``
+    that enter the expensive evaluation. ``screen_fn`` must draw no
+    randomness from ``state.rng`` — with ``offspring_factor=1`` every
+    RNG draw has the historical shape, so the unscreened stream stays
+    bit-identical. ``on_evaluated(genomes, fitness)`` fires after each
+    evaluation with the true (genome, fitness) pairs — the surrogate's
+    online-training feed."""
     pop, fit, rng = state.pop, state.fit, state.rng
     pop_size, glen = pop.shape
+    n_off = pop_size * max(int(offspring_factor), 1)
     if pm_bit is None:
         pm_bit = pm / max(np.sqrt(glen), 1.0)
     rank = fast_non_dominated_sort(fit)
     dist = crowding_distance(fit, rank)
-    parents_a = _tournament(rng, rank, dist)
-    parents_b = _tournament(rng, rank, dist)
+    parents_a = _tournament(rng, rank, dist, n=None if n_off == pop_size else n_off)
+    parents_b = _tournament(rng, rank, dist, n=None if n_off == pop_size else n_off)
     xa, xb = pop[parents_a], pop[parents_b]
-    do_x = (rng.random((pop_size, 1)) < pc)
-    mix = rng.random((pop_size, glen)) < 0.5
+    do_x = (rng.random((n_off, 1)) < pc)
+    mix = rng.random((n_off, glen)) < 0.5
     child = np.where(do_x & mix, xb, xa)
-    flip = rng.random((pop_size, glen)) < pm_bit
+    flip = rng.random((n_off, glen)) < pm_bit
     child = np.where(flip, 1 - child, child).astype(np.uint8)
+    if screen_fn is not None and n_off > pop_size:
+        keep = np.asarray(screen_fn(child)).reshape(-1)[:pop_size]
+        child = child[keep]
     cfit = np.asarray(eval_fn(child), np.float64)
+    if on_evaluated is not None:
+        on_evaluated(child, cfit)
     # (mu + lambda) elitist survival
     allpop = np.concatenate([pop, child])
     allfit = np.concatenate([fit, cfit])
@@ -146,6 +170,9 @@ def evolve(eval_fn: Callable[[np.ndarray], np.ndarray],
            log: Optional[Callable[[int, np.ndarray, np.ndarray], None]] = None,
            state: Optional[EvolveState] = None,
            on_generation: Optional[Callable[[EvolveState], None]] = None,
+           offspring_factor: int = 1,
+           screen_fn: Optional[Callable] = None,
+           on_evaluated: Optional[Callable] = None,
            ) -> Tuple[np.ndarray, np.ndarray]:
     """Run NSGA-II. ``eval_fn``: (P, G) uint8 -> (P, M) fitness (minimize).
     Returns (population, fitness) of the final archive (all evaluated, elitist).
@@ -154,14 +181,20 @@ def evolve(eval_fn: Callable[[np.ndarray], np.ndarray],
     checkpoint) instead of drawing a fresh initial population; generations
     already recorded in it are not re-run. ``on_generation`` fires after
     the initial evaluation and after every completed generation — the
-    checkpoint hook.
+    checkpoint hook. ``offspring_factor``/``screen_fn``/``on_evaluated``
+    flow to ``evolve_step`` (surrogate screening, DESIGN.md §13);
+    ``on_evaluated`` also fires on a fresh initial evaluation.
     """
     if state is None:
         state = init_state(eval_fn, genome_len, pop_size, seed, init)
+        if on_evaluated is not None:
+            on_evaluated(state.pop, state.fit)
         if on_generation is not None:
             on_generation(state)
     for g in range(state.generation, generations):
-        state = evolve_step(state, eval_fn, pc, pm, pm_bit)
+        state = evolve_step(state, eval_fn, pc, pm, pm_bit,
+                            offspring_factor=offspring_factor,
+                            screen_fn=screen_fn, on_evaluated=on_evaluated)
         if log is not None:
             log(g, state.pop, state.fit)
         if on_generation is not None:

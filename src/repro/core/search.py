@@ -64,6 +64,39 @@ class SearchConfig:
     design: str = "ours"          # area model used in the fitness
     model: str = "mlp"            # 'mlp' | 'svm' (paper targets both)
     engine: str = "batched"       # 'batched' | 'sharded' | 'reference'
+                                  # | 'gradient' (DESIGN.md §13)
+    # exact-duplicate genome dedup before QAT (identical individuals in a
+    # generation share one compiled train — fitness bit-identical either
+    # way; the unique set pads to a power-of-two bucket so recompiles
+    # stay bounded)
+    dedup: bool = True
+    # surrogate-screened NSGA-II (DESIGN.md §13): > 1 oversamples each
+    # generation's offspring by this factor and keeps the pop_size
+    # candidates a tiny online-trained MLP fitness predictor ranks best;
+    # 1 (default) leaves the evolutionary stream bit-identical to PR 3
+    screen_factor: int = 1
+    surrogate_steps: int = 64     # online predictor train steps per eval
+    surrogate_hidden: int = 32
+    # gradient engine knobs: lane count (0 -> 4 * pop_size), the
+    # log-spaced area-regularizer sweep spreading lanes along the front,
+    # gate temperature anneal, soft-value-table sharpness, and the
+    # per-chunk snapshot count (also the checkpoint granularity)
+    grad_points: int = 0
+    grad_train_steps: int = 0     # gate-train budget; 0 -> 8 * train_steps
+    grad_lambda_lo: float = 3e-2
+    grad_lambda_hi: float = 10.0
+    grad_tau0: float = 4.0
+    grad_tau1: float = 0.25
+    grad_beta: float = 2.0
+    grad_snapshots: int = 4
+    # surrogate-screened exact polish after the snap+re-score: each round
+    # flips every single gate of the current elite (pareto set plus the
+    # grad_polish_beam best-accuracy rows), the online surrogate ranks the
+    # unseen neighbors (accuracy predicted, area computed exactly), and
+    # the top grad_polish_evals go through the exact batched QAT path
+    grad_polish_rounds: int = 2
+    grad_polish_beam: int = 4
+    grad_polish_evals: int = 192
     # analog range — scalar or per-channel tuple (heterogeneous sensors);
     # normalized to hashable form so the config stays a valid static jit arg
     vmin: Range = 0.0
@@ -82,6 +115,16 @@ class SearchConfig:
         if self.mc_samples < 0:
             raise ValueError(f"mc_samples must be >= 0, got "
                              f"{self.mc_samples}")
+        if self.screen_factor < 1:
+            raise ValueError(f"screen_factor must be >= 1, got "
+                             f"{self.screen_factor}")
+        if self.grad_lambda_lo <= 0 or self.grad_lambda_hi <= 0:
+            raise ValueError("grad_lambda_lo/hi must be > 0 (log-spaced "
+                             "sweep)")
+        if self.grad_polish_rounds < 0 or self.grad_polish_beam < 1 \
+                or self.grad_polish_evals < 1:
+            raise ValueError("grad_polish_rounds must be >= 0 and "
+                             "grad_polish_beam/evals >= 1")
 
     @property
     def wants_robustness(self) -> bool:
@@ -374,6 +417,41 @@ def population_areas(genomes: np.ndarray, channels: int, cfg: SearchConfig
                     np.float64) / flash_full
 
 
+def _dedup_bucket(unique: int, pop: int) -> int:
+    """Smallest power-of-two >= the unique count (capped at the
+    population size) — the padded shape the compiled program runs at, so
+    dedup triggers at most log2(P) distinct compilations per config
+    instead of one per unique-count."""
+    b = 1
+    while b < unique:
+        b *= 2
+    return min(b, pop)
+
+
+def _eval_dedup(genomes: np.ndarray, cfg: SearchConfig, core) -> Dict:
+    """Exact-duplicate genome dedup around a population evaluation:
+    ``core`` maps a (B, G) uint8 batch to a dict of (B, ...) arrays.
+    Duplicates share one QAT lane; the unique set pads (by repeating row
+    0) to a power-of-two bucket and results scatter back through the
+    inverse index. Bit-identical to evaluating the full population:
+    every vmapped QAT lane is a pure function of its own genome (the
+    PR 3 contract ``train_pareto_front`` pins), so neither the sharing
+    nor the padding changes any individual's fitness."""
+    genomes = np.asarray(genomes, np.uint8)
+    if not cfg.dedup or len(genomes) <= 1:
+        return core(genomes)
+    uniq, inverse = np.unique(genomes, axis=0, return_inverse=True)
+    if len(uniq) == len(genomes):
+        return core(genomes)
+    bucket = _dedup_bucket(len(uniq), len(genomes))
+    if bucket > len(uniq):
+        uniq = np.concatenate(
+            [uniq, np.repeat(uniq[:1], bucket - len(uniq), axis=0)])
+    out = core(uniq)
+    inverse = np.asarray(inverse).reshape(-1)
+    return {k: np.asarray(v)[inverse] for k, v in out.items()}
+
+
 def evaluate_population(genomes: np.ndarray, data: Dict, sizes,
                         cfg: SearchConfig,
                         draws: Optional[nonideal_lib.Draws] = None
@@ -381,14 +459,20 @@ def evaluate_population(genomes: np.ndarray, data: Dict, sizes,
     """Batched engine. Full fitness: [1 - accuracy, normalized ADC area]
     plus, for a robustness-enabled config, the Monte-Carlo robustness
     column (all minimized) — one donated-buffer compiled call per
-    generation."""
+    generation, with exact-duplicate genomes sharing one QAT lane
+    (``cfg.dedup``)."""
     if draws is None:
         draws = search_draws(cfg, sizes[0])
     dev_data = {k: jnp.asarray(v) for k, v in data.items()}
-    params0, opt0 = _stacked_init(len(genomes), sizes, cfg)
-    out = _train_and_score_jit()(
-        jnp.asarray(genomes, jnp.uint8), params0, opt0, dev_data,
-        tuple(sizes), cfg, draws=draws)
+
+    def core(g):
+        params0, opt0 = _stacked_init(len(g), sizes, cfg)
+        out = _train_and_score_jit()(
+            jnp.asarray(g, jnp.uint8), params0, opt0, dev_data,
+            tuple(sizes), cfg, draws=draws)
+        return {k: np.asarray(v) for k, v in out.items()}
+
+    out = _eval_dedup(genomes, cfg, core)
     cols = [1.0 - np.asarray(out["acc"]),
             population_areas(genomes, sizes[0], cfg)]
     if "mc_accs" in out:
@@ -444,20 +528,30 @@ def evaluate_population_sharded(genomes: np.ndarray, data: Dict, sizes,
                                 ) -> np.ndarray:
     """Device-sharded engine: same fitness contract as
     ``evaluate_population`` with the population partitioned P/D per
-    device. Falls back to the batched engine when no mesh axis set
-    divides P (the divisibility-checked fallback — results identical,
-    just unsharded)."""
+    device — exact-duplicate dedup included (``cfg.dedup``). Falls back
+    to the batched engine when no mesh axis set divides the batch (the
+    divisibility-checked fallback — results identical, just unsharded);
+    the dedup bucket is checked the same way, so a non-divisible unique
+    bucket runs batched rather than skipping the dedup."""
     mesh = default_search_mesh() if mesh is None else mesh
-    axes = sharding_lib.population_axes(mesh, len(genomes))
-    if axes is None:
-        return evaluate_population(genomes, data, sizes, cfg, draws=draws)
     if draws is None:
         draws = search_draws(cfg, sizes[0])
     dev_data = {k: jnp.asarray(v) for k, v in data.items()}
-    params0, opt0 = _stacked_init(len(genomes), sizes, cfg)
-    fn = _sharded_train_and_score(mesh, axes, tuple(sizes), cfg)
-    out = fn(jnp.asarray(genomes, jnp.uint8), params0, opt0, dev_data,
-             draws)
+
+    def core(g):
+        axes = sharding_lib.population_axes(mesh, len(g))
+        params0, opt0 = _stacked_init(len(g), sizes, cfg)
+        if axes is None:
+            out = _train_and_score_jit()(
+                jnp.asarray(g, jnp.uint8), params0, opt0, dev_data,
+                tuple(sizes), cfg, draws=draws)
+        else:
+            fn = _sharded_train_and_score(mesh, axes, tuple(sizes), cfg)
+            out = fn(jnp.asarray(g, jnp.uint8), params0, opt0, dev_data,
+                     draws)
+        return {k: np.asarray(v) for k, v in out.items()}
+
+    out = _eval_dedup(genomes, cfg, core)
     cols = [1.0 - np.asarray(out["acc"]),
             population_areas(genomes, sizes[0], cfg)]
     if "mc_accs" in out:
@@ -515,6 +609,10 @@ def make_eval_fn(data: Dict, sizes, cfg: SearchConfig,
         m = default_search_mesh() if mesh is None else mesh
         return lambda pop: evaluate_population_sharded(
             pop, dev_data, sizes, cfg, mesh=m, draws=draws)
+    if cfg.engine == "gradient":
+        raise ValueError("the gradient engine is not a per-generation "
+                         "eval_fn — run it through run_search / "
+                         "run_gradient_search (DESIGN.md §13)")
     if cfg.engine != "batched":
         raise ValueError(f"unknown engine {cfg.engine!r}")
     return lambda pop: evaluate_population(pop, dev_data, sizes, cfg,
@@ -522,31 +620,47 @@ def make_eval_fn(data: Dict, sizes, cfg: SearchConfig,
 
 
 # --------------------------------------------------- search-state checkpoint
-def search_state_tree(state: nsga2.EvolveState) -> Dict[str, np.ndarray]:
+def search_state_tree(state: nsga2.EvolveState,
+                      surrogate_state=None) -> Dict[str, np.ndarray]:
     """EvolveState -> the flat array tree CheckpointManager persists
     (DESIGN.md §7 format): genomes, fitness matrix, the numpy Generator's
     bit_generator state (JSON packed to uint8 — PCG64 words exceed
-    int64), and the completed-generation counter."""
+    int64), and the completed-generation counter. A screened search
+    (``cfg.screen_factor > 1``) adds the online surrogate's leaves under
+    indexed keys so a resumed run screens with the identical predictor
+    (DESIGN.md §13)."""
     from repro.checkpoint import manager
-    return {
+    tree = {
         "genomes": np.asarray(state.pop, np.uint8),
         "fitness": np.asarray(state.fit, np.float64),
         "rng_state": manager.pack_json(state.rng.bit_generator.state),
         "generation": np.asarray(state.generation, np.int64),
     }
+    if surrogate_state is not None:
+        for i, leaf in enumerate(jax.tree_util.tree_leaves(surrogate_state)):
+            tree[f"surrogate_{i}"] = np.asarray(jax.device_get(leaf))
+    return tree
 
 
 def restore_search_state(ckpt, step: int, pop_size: int, glen: int,
-                         n_obj: int = 2) -> nsga2.EvolveState:
+                         n_obj: int = 2, surrogate_like=None):
     """Inverse of ``search_state_tree``. host=True keeps float64 fitness
     and the exact RNG words (device_put would canonicalize to f32).
     ``n_obj`` is the fitness width the config implies (3 for a
-    robustness-enabled search)."""
+    robustness-enabled search). With ``surrogate_like`` (a template
+    surrogate state carrying the expected leaf shapes) returns
+    ``(EvolveState, restored surrogate state)`` instead of the bare
+    EvolveState."""
     from repro.checkpoint import manager
     like = {"genomes": np.zeros((pop_size, glen), np.uint8),
             "fitness": np.zeros((pop_size, n_obj), np.float64),
             "rng_state": np.zeros(1, np.uint8),
             "generation": np.zeros((), np.int64)}
+    sur_leaves, sur_def = (jax.tree_util.tree_flatten(surrogate_like)
+                           if surrogate_like is not None else ([], None))
+    for i, leaf in enumerate(sur_leaves):
+        like[f"surrogate_{i}"] = np.zeros(leaf.shape,
+                                          np.asarray(leaf).dtype)
     tree = ckpt.restore(step, like, host=True)
     if tuple(tree["genomes"].shape) != (pop_size, glen):
         raise ValueError(
@@ -556,9 +670,15 @@ def restore_search_state(ckpt, step: int, pop_size: int, glen: int,
             f"dataset would silently corrupt the search")
     rng = np.random.default_rng()
     rng.bit_generator.state = manager.unpack_json(tree["rng_state"])
-    return nsga2.EvolveState(np.asarray(tree["genomes"], np.uint8),
-                             np.asarray(tree["fitness"], np.float64),
-                             int(tree["generation"]), rng)
+    state = nsga2.EvolveState(np.asarray(tree["genomes"], np.uint8),
+                              np.asarray(tree["fitness"], np.float64),
+                              int(tree["generation"]), rng)
+    if surrogate_like is None:
+        return state
+    restored = jax.tree_util.tree_unflatten(
+        sur_def, [jnp.asarray(tree[f"surrogate_{i}"])
+                  for i in range(len(sur_leaves))])
+    return state, restored
 
 
 def run_search(data: Dict, sizes, cfg: SearchConfig,
@@ -578,28 +698,160 @@ def run_search(data: Dict, sizes, cfg: SearchConfig,
     state after the initial evaluation and every generation; with
     ``resume=True`` the latest snapshot restarts the run bit-identically —
     a killed-and-resumed search matches an uninterrupted one
-    generation-for-generation. ``mesh`` feeds the 'sharded' engine."""
+    generation-for-generation. ``mesh`` feeds the 'sharded' engine.
+
+    ``cfg.engine == 'gradient'`` routes to ``run_gradient_search`` (same
+    return contract, no generations). ``cfg.screen_factor > 1`` turns on
+    surrogate-screened offspring oversampling (core/surrogate.py): an
+    online-trained predictor picks which of the ``screen_factor * P``
+    offspring pay the compiled QAT evaluation each generation."""
+    if cfg.engine == "gradient":
+        return run_gradient_search(data, sizes, cfg, log=log, ckpt=ckpt,
+                                   resume=resume,
+                                   return_trained=return_trained)
+    from repro.core import surrogate as surrogate_lib
     C = sizes[0]
     cfg.adc_spec.validate_channels(C)   # per-channel ranges must match data
     G = genome_len(C, cfg.bits)
+    screened = cfg.screen_factor > 1
+    sur = [surrogate_lib.init(G, cfg.n_objectives,
+                              hidden=cfg.surrogate_hidden,
+                              seed=cfg.seed)] if screened else [None]
     state = None
     if ckpt is not None and resume:
         step = ckpt.latest_step()
         if step is not None:
-            state = restore_search_state(ckpt, step, cfg.pop_size, G,
-                                         n_obj=cfg.n_objectives)
+            restored = restore_search_state(
+                ckpt, step, cfg.pop_size, G, n_obj=cfg.n_objectives,
+                surrogate_like=sur[0] if screened else None)
+            if screened:
+                state, sur[0] = restored
+            else:
+                state = restored
     on_gen = None
     if ckpt is not None:
         # blocking: the state is a few KB and the atomic-commit rename must
         # land before the next generation can be declared done.
-        on_gen = lambda st: ckpt.save(st.generation, search_state_tree(st),
-                                      blocking=True)
+        on_gen = lambda st: ckpt.save(
+            st.generation, search_state_tree(st, sur[0]), blocking=True)
+    screen_fn = on_eval = None
+    if screened:
+        def on_eval(genomes, fitness):
+            sur[0] = surrogate_lib.observe(sur[0], genomes, fitness,
+                                           steps=cfg.surrogate_steps)
+
+        screen_fn = lambda cands: surrogate_lib.screen(sur[0], cands,
+                                                       cfg.pop_size)
     pop, fit = nsga2.evolve(
         make_eval_fn(data, sizes, cfg, mesh=mesh), G, pop_size=cfg.pop_size,
         generations=cfg.generations, seed=cfg.seed, log=log,
-        state=state, on_generation=on_gen)
+        state=state, on_generation=on_gen,
+        offspring_factor=cfg.screen_factor, screen_fn=screen_fn,
+        on_evaluated=on_eval)
     pg, pf = nsga2.pareto_front(pop, fit)
     decode = lambda g: decode_genome(jnp.asarray(g), C, cfg.bits, cfg.min_levels)
+    if return_trained:
+        return pg, pf, decode, train_pareto_front(pg, data, sizes, cfg)
+    return pg, pf, decode
+
+
+def run_gradient_search(data: Dict, sizes, cfg: SearchConfig,
+                        log: Optional[Callable] = None,
+                        ckpt=None, resume: bool = False,
+                        return_trained: bool = False,
+                        progress: Optional[Callable[[str], None]] = None):
+    """The gradient engine (DESIGN.md §13): ONE jitted gate-training run
+    (core/grad_gates.train_gate_family) sweeps an area-regularizer family
+    of lanes along the accuracy/area front, snapshots each lane's snapped
+    genome at every temperature chunk, and re-scores the whole candidate
+    pool through the exact batched fitness path. Because the pool is
+    evaluated by the same compiled program the evolutionary engines use,
+    the returned fitness keeps the bit-for-bit pure-function-of-genome
+    contract: re-training any returned genome reproduces its fitness
+    exactly (deploy.verify_front_parity). Same return shape as
+    ``run_search``; ``ckpt``/``resume`` checkpoint gate-training chunks.
+
+    Anchor genomes (the full unpruned design and the dp=-3 baseline) join
+    the pool so the exported front's accuracy endpoint can never fall
+    below the no-pruning design — the quality floor the bench's front
+    comparison leans on. After the re-score, ``cfg.grad_polish_rounds``
+    rounds of surrogate-screened exact polish walk the one-gate-flip
+    neighborhood of the elite (the relaxation's basins end a flip or two
+    short of the exact optima the evolutionary engines eventually find):
+    the online surrogate — the same predictor that screens NSGA-II
+    offspring — ranks the unseen neighbors (accuracy predicted, area
+    computed exactly) and only the top ``cfg.grad_polish_evals`` pay for
+    a compiled QAT evaluation."""
+    from repro.core import grad_gates
+    from repro.core import surrogate as surrogate_lib
+    C = sizes[0]
+    cfg.adc_spec.validate_channels(C)
+    G = genome_len(C, cfg.bits)
+    # 4 lanes per requested front point: the λ sweep, the dp grid and the
+    # density strata each need room to cover their axis (lanes ride one
+    # vmapped train — arithmetic intensity, not extra compiled calls)
+    lanes = cfg.grad_points if cfg.grad_points > 0 else 4 * cfg.pop_size
+    snaps, diag = grad_gates.train_gate_family(
+        data, tuple(sizes), cfg, lanes=lanes, ckpt=ckpt, resume=resume,
+        progress=progress)
+    snaps = np.asarray(snaps, np.uint8)
+    # the mask family comes from the gate train; the decimal position is
+    # combinatorial (the STE gradient only drifts it locally), so each
+    # snapped mask re-scores at every grid dp — pure batched-rescore
+    # cost after dedup, and the exact path picks the winners
+    variants = []
+    for dpv in grad_gates.DP_INIT_GRID:
+        v = snaps.copy()
+        code = int(dpv) + 8
+        v[:, -DP_BITS:] = (code >> np.arange(DP_BITS)) & 1
+        variants.append(v)
+    anchors = np.ones((2, G), np.uint8)
+    anchors[1, -DP_BITS:] = [1, 0, 1, 0]             # dp = 5 - 8 = -3
+    pool = np.unique(np.concatenate(variants + [anchors]), axis=0)
+    fit = evaluate_population(pool, data, sizes, cfg)
+    seen_g, seen_f = pool, fit
+    sur = None
+    if cfg.grad_polish_rounds > 0:
+        sur = surrogate_lib.init(G, cfg.n_objectives,
+                                 hidden=cfg.surrogate_hidden,
+                                 seed=cfg.seed)
+        sur = surrogate_lib.observe(sur, seen_g, seen_f,
+                                    steps=cfg.surrogate_steps)
+    mask_bits = G - DP_BITS
+    for rnd in range(cfg.grad_polish_rounds):
+        front_g, _ = nsga2.pareto_front(seen_g, seen_f)
+        elite = seen_g[np.argsort(seen_f[:, 0],
+                                  kind="stable")[:cfg.grad_polish_beam]]
+        beam = np.unique(np.concatenate([np.unique(front_g, axis=0),
+                                         elite]), axis=0)
+        flips = np.repeat(beam, mask_bits, axis=0)
+        j = np.tile(np.arange(mask_bits), len(beam))
+        flips[np.arange(len(flips)), j] ^= 1
+        cand = np.unique(flips, axis=0)
+        # unseen neighbors only — every exact evaluation is spent once
+        comb = np.concatenate([seen_g, cand])
+        _, first = np.unique(comb, axis=0, return_index=True)
+        cand = comb[np.sort(first[first >= len(seen_g)])]
+        if not len(cand):
+            break
+        if len(cand) > cfg.grad_polish_evals:
+            keep = surrogate_lib.screen(
+                sur, cand, cfg.grad_polish_evals,
+                override_cols={1: population_areas(cand, C, cfg)})
+            cand = cand[np.sort(np.asarray(keep))]
+        cfit = evaluate_population(cand, data, sizes, cfg)
+        if progress is not None:
+            progress(f"polish round {rnd + 1}/{cfg.grad_polish_rounds}: "
+                     f"{len(cand)} exact evals")
+        seen_g = np.concatenate([seen_g, cand])
+        seen_f = np.concatenate([seen_f, cfit])
+        sur = surrogate_lib.observe(sur, cand, cfit,
+                                    steps=cfg.surrogate_steps)
+    if log is not None:
+        log(0, seen_g, seen_f)
+    pg, pf = nsga2.pareto_front(seen_g, seen_f)
+    decode = lambda g: decode_genome(jnp.asarray(g), C, cfg.bits,
+                                     cfg.min_levels)
     if return_trained:
         return pg, pf, decode, train_pareto_front(pg, data, sizes, cfg)
     return pg, pf, decode

@@ -1,0 +1,139 @@
+"""Online surrogate fitness predictor for surrogate-screened NSGA-II
+(DESIGN.md §13).
+
+A tiny jitted MLP maps a genome's bits straight to a predicted fitness
+row. Every *true* (genome, fitness) pair a compiled QAT evaluation
+produces is pushed into a fixed-capacity ring buffer and the predictor
+retrains on the full buffer (a deterministic number of full-batch steps)
+— so the surrogate state is a pure function of the observation history
+and the seed, which is what lets a checkpointed search resume screening
+bit-identically (core/search.search_state_tree stores its leaves).
+
+Screening (``screen``): the evolutionary loop oversamples offspring by
+``cfg.screen_factor`` and this module ranks the candidates by predicted
+fitness with the *same* non-dominated-sort + crowding ordering NSGA-II
+survival uses; only the top ``pop_size`` enter the expensive compiled
+QAT evaluation. The screen draws no randomness, so a run with
+``screen_factor=1`` (screening off) replays the PR 3 RNG stream
+bit-for-bit (tests/test_surrogate_screen.py pins this).
+
+Accuracy demands are modest by design: the surrogate only has to rank
+offspring *relative to each other* well enough that the kept fraction is
+enriched in good candidates — the true fitness of everything kept is
+still measured exactly by the compiled path, so screening can never
+corrupt reported fitness, only waste or save evaluations.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import nsga2
+from repro.models import mlp as mlp_lib
+from repro.optim import adamw
+
+CAPACITY = 1024          # observation ring-buffer rows
+_SEED_MIX = 0x5A17       # decorrelate from the QAT model init stream
+
+
+class SurrogateState(NamedTuple):
+    """Predictor + its training history. All leaves are arrays, so the
+    whole state checkpoints as a flat tree and round-trips through
+    ``jax.tree_util`` (search_state_tree / restore_search_state)."""
+    params: list             # MLP (glen -> hidden -> n_obj)
+    opt: adamw.OptState
+    x: jnp.ndarray           # (CAPACITY, glen) f32 observed genomes
+    y: jnp.ndarray           # (CAPACITY, n_obj) f32 observed fitness
+    count: jnp.ndarray       # () int32 — total observations (saturates)
+    ptr: jnp.ndarray         # () int32 — ring write head
+
+
+def init(glen: int, n_obj: int, hidden: int = 32,
+         seed: int = 0) -> SurrogateState:
+    """Fresh predictor — deterministic in (glen, n_obj, hidden, seed)."""
+    key = jax.random.PRNGKey(seed ^ _SEED_MIX)
+    params = mlp_lib.init_mlp(key, (glen, hidden, n_obj))
+    return SurrogateState(
+        params=params, opt=adamw.init(params),
+        x=jnp.zeros((CAPACITY, glen), jnp.float32),
+        y=jnp.zeros((CAPACITY, n_obj), jnp.float32),
+        count=jnp.zeros((), jnp.int32), ptr=jnp.zeros((), jnp.int32))
+
+
+def _predict(params, x):
+    return mlp_lib.apply_mlp(params, x)
+
+
+@functools.partial(jax.jit, static_argnames=("steps", "lr"))
+def _observe_and_train(state: SurrogateState, gx: jnp.ndarray,
+                       gy: jnp.ndarray, steps: int,
+                       lr: float = 1e-2) -> SurrogateState:
+    """Ring-insert a (B, glen)/(B, n_obj) observation batch, then retrain
+    ``steps`` full-batch steps on the valid rows (masked MSE). One
+    compiled program per (B, steps) shape — generations share it."""
+    b = gx.shape[0]
+    idx = (state.ptr + jnp.arange(b)) % CAPACITY
+    x = state.x.at[idx].set(gx.astype(jnp.float32))
+    y = state.y.at[idx].set(gy.astype(jnp.float32))
+    count = jnp.minimum(state.count + b, CAPACITY)
+    ptr = (state.ptr + b) % CAPACITY
+    valid = (jnp.arange(CAPACITY) < count).astype(jnp.float32)[:, None]
+
+    def loss_of(p):
+        err = (_predict(p, x) - y) ** 2
+        return (err * valid).sum() / jnp.maximum(valid.sum() * y.shape[1],
+                                                 1.0)
+
+    def step(carry, _):
+        p, o = carry
+        g = jax.grad(loss_of)(p)
+        p, o = adamw.update(g, o, p, lr=lr)
+        return (p, o), ()
+
+    (params, opt), _ = jax.lax.scan(step, (state.params, state.opt),
+                                    length=steps)
+    return SurrogateState(params, opt, x, y, count, ptr)
+
+
+def observe(state: SurrogateState, genomes: np.ndarray,
+            fitness: np.ndarray, steps: int = 64) -> SurrogateState:
+    """Feed true (genome, fitness) pairs from a completed evaluation and
+    retrain. Pure function of (state, batch) — deterministic."""
+    return _observe_and_train(state, jnp.asarray(genomes, jnp.float32),
+                              jnp.asarray(fitness, jnp.float32),
+                              steps=int(steps))
+
+
+@jax.jit
+def _predict_jit(params, x):
+    return _predict(params, x)
+
+
+def predict(state: SurrogateState, genomes: np.ndarray) -> np.ndarray:
+    """(n, glen) genomes -> (n, n_obj) predicted fitness rows."""
+    out = _predict_jit(state.params, jnp.asarray(genomes, jnp.float32))
+    return np.asarray(out, np.float64)
+
+
+def screen(state: SurrogateState, candidates: np.ndarray,
+           keep: int, override_cols=None) -> np.ndarray:
+    """Rank candidate genomes by predicted fitness — returns the index
+    order (best first) NSGA-II survival itself would apply: ascending
+    Pareto rank, descending crowding distance. Callers slice the first
+    ``keep``; with fewer candidates than ``keep`` the full order comes
+    back. ``override_cols`` ({column -> (n,) exact values}) replaces
+    predicted objective columns the caller can compute exactly — the
+    area objective is a deterministic function of the genome, so the
+    gradient engine's polish screen predicts only accuracy. Deterministic;
+    draws no randomness."""
+    pred = predict(state, candidates)
+    for j, col in (override_cols or {}).items():
+        pred[:, j] = np.asarray(col, np.float64)
+    rank = nsga2.fast_non_dominated_sort(pred)
+    dist = nsga2.crowding_distance(pred, rank)
+    order = np.lexsort((-dist, rank))
+    return order[:keep]

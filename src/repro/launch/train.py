@@ -92,9 +92,14 @@ def adc_search_config(args, channels: int):
                                    sigma_range=args.range_drift,
                                    fault_rate=args.fault_rate,
                                    seed=args.nonideal_seed)
+    if args.engine == "gradient" and args.mc_samples > 0:
+        raise ValueError(
+            "the gradient engine optimizes the 2-objective accuracy/area "
+            "front; use --engine batched|sharded for robustness co-search")
     cfg = search.SearchConfig.for_spec(
         adc_spec, pop_size=args.pop, generations=args.generations,
         train_steps=args.train_steps, engine=args.engine,
+        screen_factor=args.screen_factor,
         nonideal=ni, mc_samples=args.mc_samples if ni else 0,
         robust_objective=args.robust_objective)
     return adc_spec, cfg
@@ -154,7 +159,13 @@ def run_adc_search(args):
     (pg, pf, decode), trained = out[:3], (out[3] if args.export_front
                                           else None)
     gen_s = [b - a for a, b in zip(marks[:-1], marks[1:])]
-    if gen_s:
+    if cfg.engine == "gradient":
+        # one gate train + one exact pool re-score, no generations
+        total = marks[-1] - marks[0]
+        print(f"pareto points: {len(pf)}; gate family + exact re-score "
+              f"in {total:.2f}s ({cfg.pop_size / total:.1f} "
+              f"individuals/s incl. compile)")
+    elif gen_s:
         # first generation pays the XLA compile; steady state is the tail
         steady = gen_s[1:] or gen_s
         print(f"pareto points: {len(pf)}; per-generation "
@@ -226,7 +237,15 @@ def build_parser() -> argparse.ArgumentParser:
     ap.add_argument("--generations", type=int, default=4)
     ap.add_argument("--train-steps", type=int, default=100)
     ap.add_argument("--engine", default="batched",
-                    choices=("batched", "sharded", "reference"))
+                    choices=("batched", "sharded", "reference", "gradient"),
+                    help="'gradient': one jitted gate-logit train sweeps "
+                         "the whole accuracy/area family, then re-scores "
+                         "through the exact batched path (DESIGN.md §13)")
+    ap.add_argument("--screen-factor", type=int, default=1,
+                    help="surrogate-screened NSGA-II: oversample offspring "
+                         "by this factor and let the online fitness "
+                         "predictor pick which pay the compiled QAT "
+                         "evaluation (1 = off, bit-identical to PR 3)")
     ap.add_argument("--resume", action="store_true",
                     help="restart the ADC search from its latest "
                          "checkpoint under <ckpt-dir>/adc_search "

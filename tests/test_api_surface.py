@@ -30,6 +30,7 @@ API_SURFACE = {
     "robustness_curve",
     "save_front",
     "search",
+    "search_gradient",
     "serve",
     "serve_stream",
 }

@@ -1,0 +1,154 @@
+"""Gradient engine (core/grad_gates + search.run_gradient_search):
+the relaxed area proxy agrees with the exact integer transistor count at
+every binary corner and is monotone in every gate; one jitted train
+produces a family of snapped genomes; the re-scored front keeps the
+bit-for-bit pure-function-of-genome contract; and a killed gate train
+resumes chunk-bit-identically through the checkpoint manager."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint.manager import CheckpointManager
+from repro.core import area, grad_gates, search
+from repro.data import tabular
+
+SIZES = (7, 4, 3)
+
+
+@pytest.fixture(scope="module")
+def data():
+    return tabular.make_dataset("seeds")
+
+
+def tiny_cfg(**kw):
+    base = dict(bits=2, pop_size=4, generations=0, train_steps=10,
+                seed=0, engine="gradient", grad_train_steps=20,
+                grad_snapshots=2, grad_points=4, grad_polish_rounds=1,
+                grad_polish_evals=32)
+    base.update(kw)
+    return search.SearchConfig(**base)
+
+
+# ------------------------------------------------------- relaxed area
+def test_relaxed_area_exact_at_binary_corners():
+    """At every 0/1 corner the smooth proxy IS area.pruned_binary_tc —
+    the STE forward therefore reports exact integer transistor counts."""
+    rng = np.random.default_rng(0)
+    for bits in (2, 3, 4):
+        n = 2 ** bits
+        masks = (rng.random((64, n)) < 0.5).astype(np.float32)
+        masks[0] = 1.0
+        masks[1] = 0.0
+        got = np.asarray(grad_gates.relaxed_area(jnp.asarray(masks)))
+        want = [area.pruned_binary_tc(m.astype(np.uint8)) for m in masks]
+        np.testing.assert_allclose(got, want, atol=1e-4)
+
+
+def test_relaxed_area_monotone_in_every_gate():
+    """Raising any single gate never lowers the proxy (the regularizer
+    must always push toward pruning, never reward keeping)."""
+    rng = np.random.default_rng(1)
+    for bits in (2, 3):
+        n = 2 ** bits
+        g = rng.random((16, n)).astype(np.float32)
+        base = np.asarray(grad_gates.relaxed_area(jnp.asarray(g)))
+        for j in range(n):
+            up = g.copy()
+            up[:, j] = np.minimum(up[:, j] + 0.25, 1.0)
+            bumped = np.asarray(grad_gates.relaxed_area(jnp.asarray(up)))
+            assert (bumped >= base - 1e-5).all()
+
+
+def test_relaxed_area_norm_matches_fitness_column(data):
+    """The normalized whole-classifier proxy at a binary corner equals
+    the exact area column the search fitness reports for that genome."""
+    cfg = tiny_cfg()
+    rng = np.random.default_rng(2)
+    G = search.genome_len(SIZES[0], cfg.bits)
+    genomes = (rng.random((8, G)) < 0.7).astype(np.uint8)
+    genomes[0] = 1
+    masks = search.decode_population(
+        jnp.asarray(genomes), SIZES[0], cfg.bits, cfg.min_levels)[0]
+    got = np.asarray(grad_gates.relaxed_area_norm(
+        jnp.asarray(masks, jnp.float32), cfg.bits))
+    want = search.population_areas(genomes, SIZES[0], cfg)
+    np.testing.assert_allclose(got, want, atol=1e-5)
+
+
+# ---------------------------------------------------------- gate train
+def test_train_gate_family_shapes_and_snap(data):
+    cfg = tiny_cfg()
+    snaps, diag = grad_gates.train_gate_family(data, SIZES, cfg, lanes=4)
+    G = search.genome_len(SIZES[0], cfg.bits)
+    assert snaps.shape == (4 * cfg.grad_snapshots, G)
+    assert snaps.dtype == np.uint8
+    assert diag["lanes"] == 4 and diag["chunks"] == 2
+    assert len(diag["lambda"]) == 4
+    # density strata: the snapped masks are not all the full design
+    assert len(np.unique(snaps, axis=0)) > 1
+
+
+def test_gradient_front_rescores_bit_for_bit(data):
+    """The PR 3 contract through the gradient engine: re-training every
+    returned genome through the exact batched path reproduces the
+    reported fitness exactly."""
+    cfg = tiny_cfg()
+    pg, pf, decode = search.run_gradient_search(data, SIZES, cfg)
+    assert len(pg) >= 1
+    refit = search.evaluate_population(pg, data, SIZES, cfg)
+    np.testing.assert_array_equal(refit, pf)
+    accs = search.train_pareto_front(pg, data, SIZES, cfg)[0]
+    np.testing.assert_array_equal(accs, 1.0 - pf[:, 0])
+
+
+def test_gradient_engine_deterministic(data):
+    cfg = tiny_cfg()
+    pg1, pf1, _ = search.run_gradient_search(data, SIZES, cfg)
+    pg2, pf2, _ = search.run_gradient_search(data, SIZES, cfg)
+    np.testing.assert_array_equal(pg1, pg2)
+    np.testing.assert_array_equal(pf1, pf2)
+
+
+def test_run_search_routes_gradient_engine(data):
+    cfg = tiny_cfg()
+    pg, pf, _ = search.run_search(data, SIZES, cfg)
+    pg2, pf2, _ = search.run_gradient_search(data, SIZES, cfg)
+    np.testing.assert_array_equal(pg, pg2)
+    np.testing.assert_array_equal(pf, pf2)
+
+
+def test_polish_disabled_still_returns_front(data):
+    cfg = tiny_cfg(grad_polish_rounds=0)
+    pg, pf, _ = search.run_gradient_search(data, SIZES, cfg)
+    refit = search.evaluate_population(pg, data, SIZES, cfg)
+    np.testing.assert_array_equal(refit, pf)
+
+
+# ------------------------------------------------------ chunked resume
+def test_gate_train_chunk_resume_bit_identical(data, tmp_path):
+    """Kill after the first chunk, resume from the checkpoint: the
+    snapped family is bit-identical to the uninterrupted run."""
+    cfg = tiny_cfg(grad_snapshots=3)
+    ref, _ = grad_gates.train_gate_family(data, SIZES, cfg, lanes=4)
+
+    class Killed(RuntimeError):
+        pass
+
+    ckpt = CheckpointManager(tmp_path / "gate", keep=3)
+    calls = {"n": 0}
+    orig_save = ckpt.save
+
+    def save_then_die(step, tree, blocking=False):
+        orig_save(step, tree, blocking=True)
+        calls["n"] += 1
+        if calls["n"] == 1:
+            raise Killed()
+
+    ckpt.save = save_then_die
+    with pytest.raises(Killed):
+        grad_gates.train_gate_family(data, SIZES, cfg, lanes=4, ckpt=ckpt)
+    ckpt.save = orig_save
+    assert ckpt.latest_step() == 1
+    resumed, _ = grad_gates.train_gate_family(data, SIZES, cfg, lanes=4,
+                                              ckpt=ckpt, resume=True)
+    np.testing.assert_array_equal(resumed, ref)

@@ -1,0 +1,211 @@
+"""Surrogate-screened NSGA-II (core/surrogate.py, DESIGN.md §13) and the
+exact-duplicate dedup around the population evaluation:
+
+* ``screen_factor=1`` leaves the evolutionary stream bit-identical to the
+  unscreened PR 3 loop (the screening wiring must draw nothing),
+* a screened run's reported fitness still reproduces exactly through the
+  compiled path (screening picks WHO gets evaluated, never corrupts the
+  evaluation itself),
+* dedup on/off is fitness-bit-identical on both the batched and the
+  sharded engine,
+* the online predictor is a pure function of its observation history,
+  ``screen``'s override columns are honored, and the surrogate state
+  round-trips through the search checkpoint tree.
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.checkpoint.manager import CheckpointManager
+from repro.core import nsga2, search
+from repro.core import surrogate as surrogate_lib
+from repro.data import tabular
+
+SIZES = (7, 4, 3)
+
+
+@pytest.fixture(scope="module")
+def data():
+    return tabular.make_dataset("seeds")
+
+
+def small_cfg(**kw):
+    base = dict(bits=2, pop_size=8, generations=2, train_steps=10, seed=0)
+    base.update(kw)
+    return search.SearchConfig(**base)
+
+
+# ----------------------------------------------------- screening parity
+def test_screen_factor_one_is_bit_identical_to_unscreened(data):
+    """The screened wiring with screen_factor=1 must replay the exact
+    RNG stream and survival of a plain nsga2.evolve run."""
+    cfg = small_cfg()
+    pg, pf, _ = search.run_search(data, SIZES, cfg)
+    G = search.genome_len(SIZES[0], cfg.bits)
+    pop, fit = nsga2.evolve(search.make_eval_fn(data, SIZES, cfg), G,
+                            pop_size=cfg.pop_size,
+                            generations=cfg.generations, seed=cfg.seed)
+    rg, rf = nsga2.pareto_front(pop, fit)
+    np.testing.assert_array_equal(pg, rg)
+    np.testing.assert_array_equal(pf, rf)
+
+
+def test_screened_run_front_reproduces_bit_for_bit(data):
+    """screen_factor=2: the oversample+screen loop completes and every
+    reported fitness row is reproduced exactly by re-evaluating the
+    genome — screening can waste or save evaluations, never bend them."""
+    cfg = small_cfg(screen_factor=2)
+    pg, pf, _ = search.run_search(data, SIZES, cfg)
+    assert len(pg) >= 1
+    refit = search.evaluate_population(pg, data, SIZES, cfg)
+    np.testing.assert_array_equal(refit, pf)
+    # the returned front is mutually non-dominated
+    assert (nsga2.fast_non_dominated_sort(pf) == 0).all()
+
+
+def test_screened_run_is_deterministic(data):
+    cfg = small_cfg(screen_factor=3, generations=2)
+    a = search.run_search(data, SIZES, cfg)
+    b = search.run_search(data, SIZES, cfg)
+    np.testing.assert_array_equal(a[0], b[0])
+    np.testing.assert_array_equal(a[1], b[1])
+
+
+def test_screened_search_resumes_bit_identically(data, tmp_path):
+    """Kill a screened search after generation 1, resume: final front
+    matches the uninterrupted run — the surrogate leaves ride the
+    checkpoint tree, so the resumed run screens with the identical
+    predictor."""
+    cfg = small_cfg(screen_factor=2, generations=3)
+    ref_g, ref_f, _ = search.run_search(data, SIZES, cfg)
+    ckpt = CheckpointManager(tmp_path / "s", keep=4)
+    search.run_search(data, SIZES, dataclasses.replace(cfg, generations=1),
+                      ckpt=ckpt)
+    assert ckpt.latest_step() == 1
+    pg, pf, _ = search.run_search(data, SIZES, cfg, ckpt=ckpt, resume=True)
+    np.testing.assert_array_equal(pg, ref_g)
+    np.testing.assert_array_equal(pf, ref_f)
+
+
+# ---------------------------------------------------------- dedup parity
+def _population_with_duplicates(cfg, channels, rows=12, copies=3):
+    rng = np.random.default_rng(7)
+    G = search.genome_len(channels, cfg.bits)
+    base = (rng.random((rows, G)) < 0.6).astype(np.uint8)
+    pop = np.concatenate([base, base[:copies], base[:1]])
+    return pop[rng.permutation(len(pop))]
+
+
+@pytest.mark.parametrize("engine", ["batched", "sharded"])
+def test_dedup_fitness_parity(data, engine):
+    """cfg.dedup shares one QAT lane per unique genome (padded to a
+    power-of-two bucket) — the fitness matrix must be bit-identical to
+    evaluating every duplicate independently, on both engines."""
+    cfg = small_cfg(engine=engine)
+    pop = _population_with_duplicates(cfg, SIZES[0])
+    ev = (search.evaluate_population if engine == "batched"
+          else search.evaluate_population_sharded)
+    with_dedup = ev(pop, data, SIZES, cfg)
+    without = ev(pop, data, SIZES, dataclasses.replace(cfg, dedup=False))
+    np.testing.assert_array_equal(with_dedup, without)
+
+
+def test_dedup_no_duplicates_passthrough(data):
+    """An all-unique population takes the straight path (no padding, no
+    scatter) — same result either way."""
+    cfg = small_cfg()
+    rng = np.random.default_rng(11)
+    G = search.genome_len(SIZES[0], cfg.bits)
+    pop = np.unique((rng.random((10, G)) < 0.5).astype(np.uint8), axis=0)
+    a = search.evaluate_population(pop, data, SIZES, cfg)
+    b = search.evaluate_population(pop, data, SIZES,
+                                   dataclasses.replace(cfg, dedup=False))
+    np.testing.assert_array_equal(a, b)
+
+
+def test_dedup_bucket_is_power_of_two_capped():
+    assert search._dedup_bucket(1, 8) == 1
+    assert search._dedup_bucket(3, 8) == 4
+    assert search._dedup_bucket(5, 8) == 8
+    assert search._dedup_bucket(7, 6) == 6     # capped at population size
+
+
+# ------------------------------------------------------- surrogate unit
+def test_surrogate_observe_predict_deterministic():
+    rng = np.random.default_rng(3)
+    g = (rng.random((16, 20)) < 0.5).astype(np.uint8)
+    f = rng.random((16, 2))
+    s1 = surrogate_lib.observe(surrogate_lib.init(20, 2, seed=5), g, f,
+                               steps=16)
+    s2 = surrogate_lib.observe(surrogate_lib.init(20, 2, seed=5), g, f,
+                               steps=16)
+    p1 = surrogate_lib.predict(s1, g)
+    p2 = surrogate_lib.predict(s2, g)
+    np.testing.assert_array_equal(p1, p2)
+    assert p1.shape == (16, 2)
+    # a different seed gives a different predictor
+    s3 = surrogate_lib.observe(surrogate_lib.init(20, 2, seed=6), g, f,
+                               steps=16)
+    assert not np.array_equal(surrogate_lib.predict(s3, g), p1)
+
+
+def test_surrogate_ring_buffer_counts():
+    s = surrogate_lib.init(10, 2)
+    g = np.zeros((5, 10), np.uint8)
+    f = np.zeros((5, 2))
+    s = surrogate_lib.observe(s, g, f, steps=1)
+    assert int(s.count) == 5 and int(s.ptr) == 5
+    s = surrogate_lib.observe(s, g, f, steps=1)
+    assert int(s.count) == 10 and int(s.ptr) == 10
+
+
+def test_screen_override_cols_respected():
+    """With every objective column overridden the prediction is ignored
+    entirely: the returned order is NSGA-II survival on the exact
+    matrix, so the single dominating candidate must come first."""
+    rng = np.random.default_rng(9)
+    cands = (rng.random((6, 12)) < 0.5).astype(np.uint8)
+    s = surrogate_lib.init(12, 2, seed=0)
+    exact = np.array([[0.5, 0.5], [0.4, 0.6], [0.1, 0.1],   # row 2 dominates
+                      [0.6, 0.4], [0.9, 0.2], [0.2, 0.9]])
+    order = surrogate_lib.screen(s, cands, keep=3,
+                                 override_cols={0: exact[:, 0],
+                                                1: exact[:, 1]})
+    assert len(order) == 3
+    assert order[0] == 2
+    # overriding only column 1 must equal the manual predict-then-patch
+    pred = surrogate_lib.predict(s, cands)
+    pred[:, 1] = exact[:, 1]
+    rank = nsga2.fast_non_dominated_sort(pred)
+    dist = nsga2.crowding_distance(pred, rank)
+    want = np.lexsort((-dist, rank))[:3]
+    got = surrogate_lib.screen(s, cands, keep=3,
+                               override_cols={1: exact[:, 1]})
+    np.testing.assert_array_equal(got, want)
+
+
+def test_surrogate_checkpoint_roundtrip(tmp_path):
+    """search_state_tree / restore_search_state carry the surrogate's
+    leaves bit-exactly."""
+    rng = np.random.default_rng(13)
+    G, P = 20, 8
+    sur = surrogate_lib.observe(
+        surrogate_lib.init(G, 2, seed=1),
+        (rng.random((P, G)) < 0.5).astype(np.uint8),
+        rng.random((P, 2)), steps=8)
+    state = nsga2.EvolveState(
+        pop=(rng.random((P, G)) < 0.5).astype(np.uint8),
+        fit=rng.random((P, 2)), generation=2,
+        rng=np.random.default_rng(42))
+    ckpt = CheckpointManager(tmp_path / "c", keep=2)
+    ckpt.save(2, search.search_state_tree(state, sur), blocking=True)
+    restored, sur2 = search.restore_search_state(
+        ckpt, 2, P, G, n_obj=2, surrogate_like=surrogate_lib.init(G, 2))
+    np.testing.assert_array_equal(restored.pop, state.pop)
+    np.testing.assert_array_equal(restored.fit, state.fit)
+    assert restored.generation == 2
+    import jax
+    for a, b in zip(jax.tree_util.tree_leaves(sur),
+                    jax.tree_util.tree_leaves(sur2)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
