@@ -37,6 +37,7 @@ class Report:
     failures: List[str]
     notes: List[str]
     checked: int                  # rows actually ratio-compared
+    provenance: str = ""          # current-vs-baseline (sha, jax) pairs
 
     def render(self) -> str:
         lines = [f"perf-regression gate: "
@@ -47,6 +48,8 @@ class Report:
         for n in self.notes:
             lines.append(f"  note: {n}")
         if not self.ok:
+            if self.provenance:
+                lines.append(f"  {self.provenance}")
             lines.append("  -> real regression: fix the slowdown. "
                          "Intentional change: refresh the baseline with "
                          "benchmarks/run.py --json + --write-baseline "
@@ -113,7 +116,20 @@ def compare(current: Dict, baseline: Dict,
         failures.append(f"current run reports {current['failures']} "
                         f"failed benchmark(s)")
     return Report(ok=not failures, failures=failures, notes=notes,
-                  checked=checked)
+                  checked=checked,
+                  provenance=_provenance_line(current, baseline))
+
+
+def _provenance_line(current: Dict, baseline: Dict) -> str:
+    """Both sides' recorded (git sha, jax version) — benchmarks/run.py
+    stamps them into every --json artifact — rendered on gate failure so
+    the offender report names the exact commits being compared. Older
+    artifacts without the fields render as '?'."""
+    def side(doc):
+        sha = doc.get("git_sha") or "?"
+        return (f"{sha[:12] if sha != '?' else sha} "
+                f"(jax {doc.get('jax_version') or '?'})")
+    return f"comparing current {side(current)} vs baseline {side(baseline)}"
 
 
 def _parse_entry_tolerances(pairs: List[str]) -> Dict[str, float]:

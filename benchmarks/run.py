@@ -33,6 +33,22 @@ def _dispatch_record(entry, spec, channels, interpret=None, sharded=False,
                             sharded=sharded, workload=workload).as_dict()
 
 
+def _provenance():
+    """Build provenance stamped into every --json artifact: the commit
+    the numbers came from and the jax that produced them, so a failing
+    regression gate can say exactly which two (sha, jax) pairs it is
+    comparing instead of leaving the archaeology to the reader."""
+    import subprocess
+    try:
+        sha = subprocess.run(
+            ["git", "rev-parse", "HEAD"], capture_output=True, text=True,
+            cwd=str(__import__("pathlib").Path(__file__).parent),
+            timeout=10, check=True).stdout.strip()
+    except Exception:                               # noqa: BLE001
+        sha = None                   # not a checkout (tarball install)
+    return {"git_sha": sha, "jax_version": jax.__version__}
+
+
 def _timeit(fn, *args, reps=3, warmup=1, **kw):
     r = None
     for _ in range(warmup):
@@ -708,6 +724,155 @@ def bench_serve_scale(smoke=False):
             f"{fr['recoveries']} recovery, parity_ok")
 
 
+def bench_cosearch_stream(smoke=False):
+    """Streaming co-design benchmark (DESIGN.md §14): sensor windows ->
+    feature front end -> ADC -> classifier, searched jointly and served
+    end to end. Two searches at identical budgets share one auto-ranged
+    AdcSpec: an ADC-only baseline on the full-rate featurized views, and
+    the co-search over the extended genome (feature subsample + per-
+    channel bit allocation + masks + dp) seeded with the baseline front
+    embedded via ``cosearch.embed_adc_only``. Because the embedding is
+    exact (same masks, same variant-0 data), the co-search front must
+    weakly epsilon-dominate the union front at equal transistor budget —
+    asserted, not sampled. Also asserts the full §8 deployment contract
+    on the co-searched front (export parity, save/load FeatureSpec
+    round trip, served == exported bit-for-bit) and measures streamed
+    raw-window serving throughput. Writes cosearch_stream.json (CI
+    bench-smoke lane + regression gate)."""
+    import tempfile
+
+    from benchmarks import paper_tables
+    from repro.core import area, deploy, nsga2, search
+    from repro.launch import loadgen, serving_engine
+    from repro.timeseries import cosearch
+    from repro.timeseries import feature as feature_lib
+    from repro.timeseries.feature import FeatureSpec
+    from repro.timeseries.stream import make_stream
+
+    data = make_stream("stress")
+    if smoke:
+        data = dict(data,
+                    x_train=data["x_train"][:150],
+                    y_train=data["y_train"][:150],
+                    x_test=data["x_test"][:80],
+                    y_test=data["y_test"][:80])
+    fe = FeatureSpec(channels=4, window=32)
+    bits = 2 if smoke else 3
+    kw = (dict(pop_size=8, generations=2, train_steps=30, seed=0) if smoke
+          else dict(pop_size=16, generations=4, train_steps=60, seed=0))
+
+    # one shared data contract: the SAME auto-ranged spec prices both
+    # searches, and the baseline sees exactly the variant-0 (full-rate,
+    # full-alloc) views the co-search's embedded genomes select
+    vdata, sizes, spec = cosearch.build_search_inputs(data, fe, bits=bits)
+    data0 = {"x_train": np.asarray(vdata["x_train"][0]),
+             "y_train": vdata["y_train"],
+             "x_test": np.asarray(vdata["x_test"][0]),
+             "y_test": vdata["y_test"]}
+    cfg_b = search.SearchConfig.for_spec(spec, **kw)
+    t0 = time.perf_counter()
+    bpg, bpf, _ = search.run_search(data0, sizes, cfg_b)
+    t_base = time.perf_counter() - t0
+
+    emb = cosearch.embed_adc_only(bpg, fe.base())
+    t0 = time.perf_counter()
+    pg, pf, _, trained, cfg_c, vdata, sizes, spec = cosearch.run(
+        data, fe, bits=bits, init=emb, **kw)
+    t_co = time.perf_counter() - t0
+
+    # exact-embedding check: the lifted baseline genomes re-scored under
+    # the co-search config must reproduce the ADC-only accuracies
+    # bit-for-bit (same masks, same variant-0 gather)
+    ef = np.asarray(search.evaluate_population(emb, vdata, sizes, cfg_c))
+    embed_ok = bool(np.array_equal(ef[:, 0], np.asarray(bpf)[:, 0]))
+
+    # epsilon-dominance at equal transistor budget: every point of the
+    # union front (embedded baseline + co-search) is weakly dominated by
+    # a co-search point — provable because the co front was seeded with
+    # the embedded points and NSGA-II is elitist
+    eps = 1e-9
+    _, uf = nsga2.pareto_front(np.concatenate([emb, pg]),
+                               np.concatenate([ef, np.asarray(pf)]))
+    dominance_ok = all(
+        any(c[0] <= u[0] + eps and c[1] <= u[1] + eps for c in pf)
+        for u in uf)
+    denom = area.flash_full_tc(bits) * sizes[0] \
+        + feature_lib.frontend_full_tc(fe)
+    base_front_tc = sorted(
+        [round(f[1] * area.flash_full_tc(bits) * sizes[0])
+         + feature_lib.frontend_full_tc(fe), float(1 - f[0])]
+        for f in np.asarray(bpf))
+    co_front_tc = sorted([round(f[1] * denom), float(1 - f[0])]
+                         for f in np.asarray(pf))
+
+    # §8 deployment contract on the co-searched front
+    designs = deploy.export_front(pg, vdata, sizes, cfg_c, trained=trained)
+    parity_ok = deploy.verify_front_parity(designs, pg, vdata, sizes,
+                                           cfg_c)
+    xw = np.asarray(data["x_test"], np.float32)
+    served = deploy.served_accuracies(designs, xw, data["y_test"])
+    serve_ok = bool(np.array_equal(
+        served, np.array([d.accuracy for d in designs])))
+    with tempfile.TemporaryDirectory() as td:
+        deploy.save_front(td, designs, extra_meta={"dataset": "stress"})
+        meta = deploy.front_meta(td)
+        loaded = deploy.load_front(td)
+        roundtrip_ok = bool(
+            FeatureSpec.from_meta(meta["feature"]) == fe.base()
+            and all(l.feature == d.feature
+                    for l, d in zip(loaded, designs))
+            and np.array_equal(
+                deploy.served_accuracies(loaded, xw, data["y_test"]),
+                served))
+
+    # streamed serving: raw (W, C_raw) windows through the feature-baked
+    # fused bank via the async engine
+    n_req, req_sz = (24, 4) if smoke else (96, 8)
+    wl = loadgen.make_workload(xw, n_req, tenant="stress", rate_rps=300.0,
+                               request_size=req_sz, deadline_ms=1000.0,
+                               shape="bursty", seed=0)
+    rep = serving_engine.run_workload(
+        [serving_engine.Tenant(name="stress", designs=loaded)], wl,
+        target_latency_ms=25.0, max_batch=128)
+    slo = rep["tenants"]["stress"]
+
+    report = {"dataset": "stress", "smoke": smoke,
+              "backend": jax.default_backend(),
+              "bits": bits, "sizes": list(sizes),
+              "feature": fe.base().to_meta(),
+              "budget_denominator_tc": denom,
+              "epsilon": eps,
+              "baseline_search_s": t_base, "cosearch_s": t_co,
+              "baseline_front_tc_acc": base_front_tc,
+              "cosearch_front_tc_acc": co_front_tc,
+              "embed_exact_ok": embed_ok,
+              "dominance_ok": bool(dominance_ok),
+              "export_parity_ok": bool(parity_ok),
+              "serve_parity_ok": serve_ok,
+              "save_load_roundtrip_ok": roundtrip_ok,
+              "serving": {"requests": n_req, "request_size": req_sz,
+                          "completed": slo["completed"],
+                          "shed": slo["shed"],
+                          "p99_ms": slo["p99_ms"],
+                          "windows_per_s": slo["samples_per_s"]}}
+    paper_tables.save("cosearch_stream", report)
+    assert embed_ok, "embedded baseline genomes diverged from ADC-only " \
+                     "fitness under the co-search config"
+    assert dominance_ok, (
+        f"co-search front fails epsilon-dominance over the embedded "
+        f"baseline: union {uf.tolist()} vs co {np.asarray(pf).tolist()}")
+    assert parity_ok, "co-search export diverged from batched re-score"
+    assert serve_ok, "served accuracy diverged from export"
+    assert roundtrip_ok, "FeatureSpec/front save-load round trip broke"
+    best_co = min(co_front_tc)
+    best_base = min(base_front_tc)
+    return (t_co * 1e6,
+            f"co front {len(pg)} pts dominates ADC-only at equal TC "
+            f"(min budget {best_base[0]}->{best_co[0]}T); "
+            f"{slo['samples_per_s']:.0f} windows/s streamed "
+            f"({slo['completed']}/{n_req} ok); parity+roundtrip ok")
+
+
 def bench_lm_train_step():
     from repro.launch.train import build
     import repro.models.steps as steps
@@ -764,6 +929,7 @@ def main() -> None:
         ("serve_classifier", lambda: bench_serve_classifier(smoke=smoke)),
         ("serve_scale", lambda: bench_serve_scale(smoke=smoke)),
         ("mc_robustness", lambda: bench_mc_robustness(smoke=smoke)),
+        ("cosearch_stream", lambda: bench_cosearch_stream(smoke=smoke)),
         ("autotune", lambda: bench_autotune(smoke=smoke)),
         ("lm_train_step_smoke", bench_lm_train_step),
         ("roofline_summary", bench_roofline_summary),
@@ -795,6 +961,7 @@ def main() -> None:
                        "device_count": len(jax.devices()),
                        "interpret_default": envelope.interpret_default(),
                        "dispatch_entries": list(dispatch.entries()),
+                       **_provenance(),
                        "smoke": smoke, "failures": failures,
                        "rows": rows}, f, indent=1)
     if failures:

@@ -23,6 +23,13 @@ fused multi-design serving — behind four verbs and one spec object::
     slo = api.serve_stream(bank, trace)               # async serving engine
     slo["tenants"]["default"]["p99_ms"]               # + SLO snapshot (§12)
 
+    from repro.timeseries import make_stream
+    stream = make_stream("stress")                    # (M, W, C_raw) windows
+    fe = api.FeatureSpec(channels=4, window=32)
+    front = api.cosearch(stream, fe, bits=3)          # joint front-end+ADC
+    bank = api.deploy(front)                          # FeatureSpec baked in
+    logits = api.serve(bank, stream["x_test"])        # raw windows in (§14)
+
 Everything here is a thin composition of the subsystem modules
 (core/search, core/deploy, kernels/dispatch) — no logic of its own — so
 the bit-for-bit search -> export -> load -> serve parity contract
@@ -43,15 +50,18 @@ from repro.core.deploy import DeployedClassifier
 from repro.core.nonideal import NonIdealSpec
 from repro.core.search import SearchConfig
 from repro.core.spec import AdcSpec
+from repro.timeseries.feature import FeatureSpec
 
 __all__ = [
     "AdcSpec",
     "Bank",
     "DeployedClassifier",
+    "FeatureSpec",
     "Front",
     "NonIdealSpec",
     "SearchConfig",
     "autotune",
+    "cosearch",
     "deploy",
     "evaluate_robustness",
     "load_front",
@@ -182,6 +192,36 @@ def search_gradient(spec: AdcSpec, data: Dict,
                   engine="gradient", seed=seed, weight_bits=weight_bits,
                   hidden=hidden, log=log, ckpt=ckpt, resume=resume,
                   **cfg_kw)
+
+
+def cosearch(data: Dict, feature: FeatureSpec, *, bits: int = 3,
+             pct: float = 0.5, model: str = "mlp", pop_size: int = 32,
+             generations: int = 16, train_steps: int = 300,
+             engine: str = "batched", seed: int = 0, weight_bits: int = 8,
+             hidden: int = 4, init=None, mesh=None, log=None,
+             **cfg_kw) -> Front:
+    """Streaming sensor→feature→ADC→classifier co-design (DESIGN.md §14).
+
+    data: raw sliding-window splits (``repro.timeseries.make_stream``
+    layout — x_* of shape (M, W, C_raw)). ``feature`` names the analog
+    front-end design space (subsample grid, temporal feature kinds,
+    alloc ladder); the genome grows feature genes and all engines search
+    front end and ADC jointly, with the front-end transistor count on
+    the same area axis. The per-channel ``AdcSpec`` is auto-ranged over
+    every featurized variant (``AdcSpec.from_data``, clip ``pct``).
+    Returns the same ``Front`` as ``search`` (``deploy`` bakes each
+    design's FeatureSpec; the bank then serves raw windows). ``init``
+    seeds the population — e.g. an ADC-only front embedded via
+    ``repro.timeseries.cosearch.embed_adc_only``."""
+    from repro.timeseries import cosearch as _cosearch
+    pg, pf, _, trained, cfg, _, sizes, spec = _cosearch.run(
+        data, feature, bits=bits, pct=pct, hidden=hidden, init=init,
+        log=log, mesh=mesh, model=model, pop_size=pop_size,
+        generations=generations, train_steps=train_steps, engine=engine,
+        seed=seed, weight_bits=weight_bits, **cfg_kw)
+    return Front(spec=spec, config=cfg, sizes=tuple(sizes),
+                 genomes=np.asarray(pg, np.uint8),
+                 fitness=np.asarray(pf, np.float64), trained=trained)
 
 
 def deploy(front: Front, data: Optional[Dict] = None) -> Bank:

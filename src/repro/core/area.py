@@ -186,6 +186,51 @@ def system_tc(masks: np.ndarray, design: str = "ours") -> int:
     return int(sum(fn(m) for m in masks))
 
 
+# ------------------------------------------- analog feature front end (§14)
+# Switched-capacitor temporal-feature circuits of the streaming co-design
+# (DESIGN.md §14, after arXiv:2508.19637): per raw channel an analog window
+# buffer of W/s sample-hold cells feeds the feature circuits, so a larger
+# subsample factor s shrinks the buffer — the area/accuracy trade the
+# subsample gene searches. Costs are exact integers on the same
+# transistor-count axis as the ADC models above (one budget axis).
+SAMPLE_HOLD_TC = 1               # per stored sample of the window buffer
+FEATURE_TC = {"mean": 8,         # switched-cap integrator + scale
+              "min": 10,         # peak detector (diode-connected follower)
+              "max": 10,
+              "slope": 12}       # first/last S&H pair + differencer
+
+
+def frontend_tc(feature_kinds, channels: int, window: int,
+                subsample: int, alloc=None) -> int:
+    """Exact transistor count of one analog front-end design point.
+
+    ``feature_kinds``: the per-kind circuit list (feature channel
+    k * channels + r computes kind k of raw channel r); ``alloc``: the
+    per-feature-channel allocation genes, where 0 means the feature
+    channel is OFF (its circuit — and, if no sibling survives, the raw
+    channel's window buffer — disappears). ``alloc=None`` prices the
+    all-active reference design."""
+    kinds = tuple(feature_kinds)
+    if window % subsample:
+        raise ValueError(f"window {window} not divisible by subsample "
+                         f"{subsample}")
+    n_feat = len(kinds) * channels
+    active = ([True] * n_feat if alloc is None
+              else [int(a) > 0 for a in alloc])
+    if len(active) != n_feat:
+        raise ValueError(f"alloc length {len(active)} != feature channels "
+                         f"{n_feat}")
+    tc = 0
+    buf = SAMPLE_HOLD_TC * (window // subsample)
+    for r in range(channels):
+        live = [k for k in range(len(kinds)) if active[k * channels + r]]
+        if not live:
+            continue
+        tc += buf                               # shared analog window buffer
+        tc += sum(FEATURE_TC[kinds[k]] for k in live)
+    return tc
+
+
 # Paper-reported physical measurements (Spectre + PragmatIC Helvellyn 2.1.0)
 # — used by benchmarks/table3|4 to reproduce the published tables; these are
 # *constants from the paper*, not model outputs (DESIGN.md §6.1).

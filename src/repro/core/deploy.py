@@ -38,8 +38,11 @@ from repro.core import area, qat
 from repro.core import nonideal as nonideal_lib
 from repro.core.nonideal import NonIdealSpec
 from repro.core.spec import AdcSpec, Range
-from repro.core.search import SearchConfig, train_pareto_front
+from repro.core.search import (SearchConfig, decode_genome_cosearch,
+                               train_pareto_front)
 from repro.kernels import ops
+from repro.timeseries import feature as feature_lib
+from repro.timeseries.feature import FeatureSpec
 
 FORMAT_VERSION = 1
 
@@ -59,8 +62,13 @@ class DeployedClassifier:
     mask: np.ndarray               # (C, 2^N) int32 — provenance, not used to serve
     table: np.ndarray              # (C, 2^N) float32 baked value table
     weights: Tuple[np.ndarray, ...]  # po2-quantized, _WEIGHT_LEAVES order
-    area_tc: int                   # exact ADC transistor count (area model)
+    area_tc: int                   # exact ADC (+ front-end) transistor count
     accuracy: float                # export-time test accuracy (== search fitness)
+    # baked analog front end of a streaming co-searched design (DESIGN.md
+    # §14): None for the tabular (M, C) designs of PRs 1-8, a
+    # subsample/alloc-baked FeatureSpec for designs that consume raw
+    # (M, W, C_raw) windows
+    feature: Optional[FeatureSpec] = None
 
     @property
     def spec(self) -> AdcSpec:
@@ -70,15 +78,32 @@ class DeployedClassifier:
 
     @property
     def channels(self) -> int:
-        """Input channel count C — the serving engine's wrong-domain
-        check compares request width against this."""
+        """ADC input channel count C (feature channels for a co-searched
+        design) — the width the baked table and weights consume."""
         return int(self.table.shape[0])
 
+    @property
+    def sample_shape(self) -> Tuple[int, ...]:
+        """Shape of ONE raw sample this design serves: (C,) for tabular
+        designs, (window, raw_channels) for streaming co-searched ones —
+        the serving engine's wrong-domain check compares request shape
+        against this."""
+        if self.feature is not None:
+            return (self.feature.window, self.feature.channels)
+        return (self.channels,)
+
     def logits(self, x, interpret: Optional[bool] = None) -> np.ndarray:
-        """(M, C) samples -> (M, O) logits, served as a size-1 bank through
-        the fused kernel registry."""
+        """Samples -> (M, O) logits, served as a size-1 bank through the
+        fused kernel registry. A feature-baked design accepts raw
+        (M, W, C_raw) windows and runs them through THE compiled
+        featurize program the search data was built with
+        (feature.featurize_fn — the §8 parity contract); already-
+        featurized (M, C) input passes straight to the bank."""
+        x = np.asarray(x, np.float32)
+        if self.feature is not None and x.ndim == 3:
+            x = np.asarray(feature_lib.featurize_fn(self.feature)(x))
         out = ops.classifier_bank(
-            np.asarray(x, np.float32), self.table[None],
+            x, self.table[None],
             tuple(w[None] for w in self.weights), kind=self.kind,
             spec=self.spec, interpret=interpret)
         return np.asarray(out)[0]
@@ -114,9 +139,22 @@ def export_front(genomes: np.ndarray, data: Dict, sizes: Sequence[int],
         raise ValueError(f"trained tuple covers {len(accs)} individuals, "
                          f"got {len(genomes)} genomes")
     spec = cfg.adc_spec.validate_channels(sizes[0])
+    fe = cfg.frontend
     designs = []
     for k in range(len(accs)):
         dp = float(dps[k])
+        feature, fe_tc = None, 0
+        if fe is not None:
+            # bake this genome's searched front-end point: the subsample
+            # factor and alloc ladder come from the feature genes (the
+            # masks from train_pareto_front already carry the alloc
+            # pruning, so the baked table matches the measured fitness)
+            _, _, sub, alloc = decode_genome_cosearch(
+                genomes[k], sizes[0], cfg.bits, cfg.min_levels, fe)
+            sub_f = fe.sub_grid[int(sub)]
+            alloc_t = tuple(int(a) for a in np.asarray(alloc))
+            feature = fe.bake(sub_f, alloc_t)
+            fe_tc = feature_lib.frontend_tc(fe, sub_f, alloc_t)
         if cfg.model == "svm":
             w, b = jax.tree_util.tree_map(lambda a: a[k], params)
             weights = (_po2(w, dp, cfg.weight_bits),
@@ -134,8 +172,8 @@ def export_front(genomes: np.ndarray, data: Dict, sizes: Sequence[int],
             vmin=spec.vmin, vmax=spec.vmax, dp=dp, mask=mask,
             table=np.asarray(spec.value_table(mask), np.float32),
             weights=weights,
-            area_tc=area.system_tc(mask, cfg.design),
-            accuracy=float(accs[k])))
+            area_tc=area.system_tc(mask, cfg.design) + fe_tc,
+            accuracy=float(accs[k]), feature=feature))
     return designs
 
 
@@ -173,19 +211,29 @@ def save_front(directory, designs: Sequence[DeployedClassifier],
         raise ValueError("refusing to save an empty front")
     kinds = {d.kind for d in designs}
     specs = {d.spec for d in designs}
-    if len(kinds) != 1 or len(specs) != 1:
+    feats = {None if d.feature is None else d.feature.base()
+             for d in designs}
+    if len(kinds) != 1 or len(specs) != 1 or len(feats) != 1:
         raise ValueError(f"mixed fronts unsupported: kinds={kinds} "
-                         f"specs={specs}")
+                         f"specs={specs} features={feats}")
     # spec fields serialize through AdcSpec.to_meta (per-channel tuples
-    # become JSON lists; load_front restores the canonical tuples)
+    # become JSON lists; load_front restores the canonical tuples). A
+    # co-searched front additionally carries the shared base FeatureSpec
+    # in the meta and each design's baked (subsample, alloc) as leaves.
     meta = {"format": FORMAT_VERSION, "kind": designs[0].kind,
             **designs[0].spec.to_meta(),
             "num_designs": len(designs), **(extra_meta or {})}
+    fe = next(iter(feats))
+    if fe is not None:
+        meta["feature"] = fe.to_meta()
     tree = {"meta": pack_json(meta)}
     for i, d in enumerate(designs):
         leaf = {"mask": d.mask.astype(np.int32), "table": d.table,
                 "dp": np.float32(d.dp), "acc": np.float64(d.accuracy),
                 "area_tc": np.int64(d.area_tc)}
+        if d.feature is not None:
+            leaf["subsample"] = np.int64(d.feature.subsample)
+            leaf["alloc"] = np.asarray(d.feature.alloc, np.int32)
         leaf.update(zip(_WEIGHT_LEAVES[d.kind], d.weights))
         tree[f"design_{i:03d}"] = leaf
     CheckpointManager(directory, keep=1).save(0, tree, blocking=True)
@@ -207,9 +255,15 @@ def load_front(directory) -> List[DeployedClassifier]:
     if meta["format"] != FORMAT_VERSION:
         raise ValueError(f"unknown front format {meta['format']}")
     spec = AdcSpec.from_meta(meta)
+    fe = (FeatureSpec.from_meta(meta["feature"])
+          if meta.get("feature") is not None else None)
     designs = []
     for i in range(meta["num_designs"]):
         p = f"design_{i:03d}/"
+        feature = None
+        if fe is not None:
+            feature = fe.bake(int(flat[p + "subsample"]),
+                              tuple(int(a) for a in flat[p + "alloc"]))
         designs.append(DeployedClassifier(
             kind=meta["kind"], bits=spec.bits, mode=spec.mode,
             vmin=spec.vmin, vmax=spec.vmax,
@@ -217,7 +271,7 @@ def load_front(directory) -> List[DeployedClassifier]:
             table=flat[p + "table"],
             weights=tuple(flat[p + n] for n in _WEIGHT_LEAVES[meta["kind"]]),
             area_tc=int(flat[p + "area_tc"]),
-            accuracy=float(flat[p + "acc"])))
+            accuracy=float(flat[p + "acc"]), feature=feature))
     return designs
 
 
@@ -236,6 +290,25 @@ def bank_arrays(designs: Sequence[DeployedClassifier]
     return tables, weights
 
 
+def _feature_groups(designs: Sequence[DeployedClassifier]) -> Dict:
+    """{subsample -> design indices} of a feature-baked front. The fused
+    bank kernels consume ONE shared sample batch, but co-searched designs
+    can bake different subsample factors (different featurized views of
+    the same windows) — so bank serving runs once per subsample group and
+    scatters the logits back into front order. Mixed feature/None fronts
+    are rejected (they would not even share a sample shape)."""
+    withf = {d.feature is not None for d in designs}
+    if len(withf) != 1:
+        raise ValueError("mixed feature/tabular fronts unsupported")
+    bases = {d.feature.base() for d in designs}
+    if len(bases) != 1:
+        raise ValueError(f"bank needs one base FeatureSpec, got {bases}")
+    groups: Dict = {}
+    for i, d in enumerate(designs):
+        groups.setdefault(int(d.feature.subsample), []).append(i)
+    return dict(sorted(groups.items()))
+
+
 def make_bank_fn(designs: Sequence[DeployedClassifier], *, mesh=None,
                  interpret: Optional[bool] = None):
     """One jitted bank call closed over device-resident tables and weights
@@ -246,6 +319,10 @@ def make_bank_fn(designs: Sequence[DeployedClassifier], *, mesh=None,
     eagerly per microbatch. With ``mesh`` the design axis shards D/device
     (ops.classifier_bank_sharded)."""
     import jax.numpy as jnp
+    designs = list(designs)
+    if designs and designs[0].feature is not None:
+        return _make_feature_bank_fn(designs, mesh=mesh,
+                                     interpret=interpret)
     tables, weights = bank_arrays(designs)
     tables = jnp.asarray(tables)
     weights = tuple(jnp.asarray(w) for w in weights)
@@ -257,15 +334,65 @@ def make_bank_fn(designs: Sequence[DeployedClassifier], *, mesh=None,
     return jax.jit(lambda xb: ops.classifier_bank(xb, tables, weights, **kw))
 
 
+def _make_feature_bank_fn(designs: Sequence[DeployedClassifier], *,
+                          mesh=None, interpret: Optional[bool] = None):
+    """The streaming twin of ``make_bank_fn``: (M, W, C_raw) windows ->
+    (D, M, O) logits. Designs group by baked subsample factor; each group
+    serves its own fused bank over THE cached compiled featurize program
+    of its factor (feature.featurize_fn — identical to the search-data
+    build, so served accuracies reproduce search fitness bit-for-bit),
+    and group logits scatter back into front order. Group banks are
+    jitted closures over device-resident operands like the tabular
+    path; the scatter is a cheap host-side reindex."""
+    groups = _feature_groups(designs)
+    d0 = designs[0]
+    sub_banks = []
+    for sub, idx in groups.items():
+        grp = [designs[i] for i in idx]
+        feat = feature_lib.featurize_fn(grp[0].feature)
+        tables, weights = bank_arrays(grp)
+        kw = dict(kind=d0.kind, spec=d0.spec, interpret=interpret)
+        bank = jax.jit(_bank_closure(tables, weights, mesh, kw))
+        sub_banks.append((np.asarray(idx), feat, bank))
+
+    def fn(xb):
+        out = None
+        for idx, feat, bank in sub_banks:
+            lg = np.asarray(bank(feat(xb)))
+            if out is None:
+                out = np.zeros((len(designs),) + lg.shape[1:], lg.dtype)
+            out[idx] = lg
+        return out
+
+    return fn
+
+
+def _bank_closure(tables, weights, mesh, kw):
+    """One group's bank call closed over device-resident operands."""
+    import jax.numpy as jnp
+    tb = jnp.asarray(tables)
+    wb = tuple(jnp.asarray(w) for w in weights)
+    if mesh is not None:
+        return lambda xb: ops.classifier_bank_sharded(xb, tb, wb,
+                                                      mesh=mesh, **kw)
+    return lambda xb: ops.classifier_bank(xb, tb, wb, **kw)
+
+
 def serve_bank(designs: Sequence[DeployedClassifier], x, *,
                mesh=None, interpret: Optional[bool] = None) -> np.ndarray:
-    """One shared (M, C) sample batch through the whole deployed front:
+    """One shared sample batch through the whole deployed front:
     (D, M, O) logits via the fused multi-design kernel — with ``mesh``,
-    the design axis shards D/device (ops.classifier_bank_sharded)."""
+    the design axis shards D/device (ops.classifier_bank_sharded). A
+    feature-baked front takes raw (M, W, C_raw) windows and serves per
+    subsample group (``_make_feature_bank_fn``)."""
+    designs = list(designs)
+    x = np.asarray(x, np.float32)
+    if designs and designs[0].feature is not None:
+        return _make_feature_bank_fn(designs, mesh=mesh,
+                                     interpret=interpret)(x)
     tables, weights = bank_arrays(designs)
     d0 = designs[0]
     kw = dict(kind=d0.kind, spec=d0.spec, interpret=interpret)
-    x = np.asarray(x, np.float32)
     if mesh is not None:
         out = ops.classifier_bank_sharded(x, tables, weights, mesh=mesh, **kw)
     else:

@@ -26,11 +26,20 @@ counter — so a killed search resumes mid-run bit-identically
 
 Genome layout per individual (C input channels, N-bit ADC):
   [ C * 2^N mask bits | 4 bits decimal-point position (dp in [-8, 7]) ]
+
+Sensor→feature→ADC→classifier co-search (DESIGN.md §14): a config with
+``frontend`` (a timeseries.FeatureSpec) appends feature genes AFTER the
+dp bits — a subsample-grid index plus a 2-bit resolution-allocation gene
+per feature channel — and the data dict stacks one featurized variant
+per subsample factor ((V, M, C) instead of (M, C)). All three engines
+co-search the joint space in the same compiled programs: quantization
+runs over the whole variant stack through the registered population
+entry and each individual's subsample gene gathers its variant.
 """
 from __future__ import annotations
 
 import functools
-from dataclasses import dataclass
+from dataclasses import dataclass, replace as dataclass_replace
 from typing import Callable, Dict, Optional, Tuple
 
 import jax
@@ -46,6 +55,8 @@ from repro.core.spec import AdcSpec, Range, normalize_range
 from repro.distributed import sharding as sharding_lib
 from repro.kernels import ops
 from repro.models import mlp as mlp_lib
+from repro.timeseries import feature as feature_lib
+from repro.timeseries.feature import ALLOC_BITS, FULL_ALLOC, FeatureSpec
 
 DP_BITS = 4
 
@@ -107,6 +118,11 @@ class SearchConfig:
     nonideal: Optional[NonIdealSpec] = None
     mc_samples: int = 0
     robust_objective: str = "expected"
+    # sensor→feature→ADC→classifier co-search (DESIGN.md §14): a
+    # FeatureSpec appends feature genes to the genome and switches the
+    # data contract to stacked featurized variants (V, M, C_feat);
+    # hashable, so the config stays a valid static jit argument
+    frontend: Optional[FeatureSpec] = None
 
     def __post_init__(self):
         object.__setattr__(self, "vmin", normalize_range(self.vmin))
@@ -125,6 +141,12 @@ class SearchConfig:
                 or self.grad_polish_evals < 1:
             raise ValueError("grad_polish_rounds must be >= 0 and "
                              "grad_polish_beam/evals >= 1")
+        if self.frontend is not None and self.mc_samples > 0:
+            raise ValueError(
+                "the feature-frontend co-search and the Monte-Carlo "
+                "robustness objective are mutually exclusive: the MC "
+                "kernel family consumes flat (M, C) test batches, not "
+                "the co-search's stacked (V, M, C) variant data")
 
     @property
     def wants_robustness(self) -> bool:
@@ -150,8 +172,69 @@ class SearchConfig:
                    vmax=spec.vmax, **kw)
 
 
-def genome_len(channels: int, bits: int) -> int:
-    return channels * 2 ** bits + DP_BITS
+def genome_len(channels: int, bits: int,
+               frontend: Optional[FeatureSpec] = None) -> int:
+    base = channels * 2 ** bits + DP_BITS
+    return base + (frontend.gene_bits if frontend is not None else 0)
+
+
+def _frontend_genes(genomes: jnp.ndarray, channels: int, bits: int,
+                    frontend: FeatureSpec
+                    ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """(P, G) genomes -> (sub (P,) int32 indices into frontend.sub_grid,
+    alloc (P, C) int32 in [0, FULL_ALLOC]). Feature genes sit after the
+    dp bits, LSB-first — the layout feature.encode_genes writes."""
+    base = channels * 2 ** bits + DP_BITS
+    sb = frontend.sub_bits
+    if sb:
+        subb = genomes[:, base:base + sb].astype(jnp.int32)
+        sub = jnp.sum(subb * (2 ** jnp.arange(sb))[None, :], axis=-1)
+    else:
+        sub = jnp.zeros(genomes.shape[0], jnp.int32)
+    ab = genomes[:, base + sb:base + sb + channels * ALLOC_BITS]
+    ab = ab.astype(jnp.int32).reshape(-1, channels, ALLOC_BITS)
+    alloc = jnp.sum(ab * (2 ** jnp.arange(ALLOC_BITS))[None, None, :],
+                    axis=-1)
+    return sub, alloc
+
+
+def _alloc_masks(masks: jnp.ndarray, alloc: jnp.ndarray, bits: int,
+                 min_levels: int) -> jnp.ndarray:
+    """Apply the per-channel resolution-allocation ladder to repaired
+    masks (P, C, 2^N): alloc a in [1, FULL_ALLOC] restricts the kept set
+    to every 2^(FULL_ALLOC - a)-th level (then re-repairs, so min_levels
+    still holds); a = 0 turns the channel OFF — a one-hot level-0 mask,
+    i.e. a constant input with zero comparators
+    (area.pruned_binary_tc == 0). The off override applies AFTER repair:
+    repair would otherwise re-enable levels on a dead channel."""
+    n = 2 ** bits
+    idx = jnp.arange(n)
+    stride = 2 ** (FULL_ALLOC - jnp.clip(alloc, 1, FULL_ALLOC))
+    allowed = (idx[None, None, :] % stride[..., None]) == 0      # (P, C, n)
+    laddered = adc.repair_mask(masks * allowed.astype(jnp.int32),
+                               min_levels)
+    onehot0 = jnp.zeros((n,), jnp.int32).at[0].set(1)
+    return jnp.where((alloc == 0)[..., None], onehot0[None, None, :],
+                     laddered)
+
+
+def decode_population_cosearch(genomes: jnp.ndarray, channels: int,
+                               bits: int, min_levels: int,
+                               frontend: FeatureSpec):
+    """Co-search decode: (P, G) -> (masks (P, C, 2^N) with the allocation
+    ladder applied, dps (P,) f32, sub (P,) variant indices,
+    alloc (P, C))."""
+    masks, dps = decode_population(genomes, channels, bits, min_levels)
+    sub, alloc = _frontend_genes(genomes, channels, bits, frontend)
+    return _alloc_masks(masks, alloc, bits, min_levels), dps, sub, alloc
+
+
+def decode_genome_cosearch(genome: jnp.ndarray, channels: int, bits: int,
+                           min_levels: int, frontend: FeatureSpec):
+    """Single-genome co-search decode -> (mask, dp, sub, alloc)."""
+    masks, dps, sub, alloc = decode_population_cosearch(
+        jnp.asarray(genome)[None], channels, bits, min_levels, frontend)
+    return masks[0], dps[0], sub[0], alloc[0]
 
 
 def decode_genome(genome: jnp.ndarray, channels: int, bits: int,
@@ -243,14 +326,26 @@ def _train_eval_one(genome, data, sizes, cfg: SearchConfig,
     ``draws`` returns ``(accuracy, (S,) per-instance MC accuracies)`` —
     the single-design MC entry standing in for the population launch."""
     channels = sizes[0]
-    mask, dp = decode_genome(genome, channels, cfg.bits, cfg.min_levels)
+    if cfg.frontend is not None:
+        # co-search: the subsample gene gathers this individual's
+        # featurized variant from the (V, M, C) stack (dynamic index
+        # under jit); quantization is elementwise, so gather-then-
+        # quantize here equals the batched engine's quantize-then-gather
+        # bit for bit
+        mask, dp, sub, _ = decode_genome_cosearch(
+            genome, channels, cfg.bits, cfg.min_levels, cfg.frontend)
+        x_tr, x_te = data["x_train"][sub], data["x_test"][sub]
+    else:
+        mask, dp = decode_genome(genome, channels, cfg.bits,
+                                 cfg.min_levels)
+        x_tr, x_te = data["x_train"], data["x_test"]
     # ste=False: inputs are data, no gradient flows to them, and skipping
     # the x + (xq - x) round-trip keeps the values bitwise-identical to the
     # batched engine's value-table gather (parity tests rely on this).
-    xq_tr = adc.adc_quantize(data["x_train"], mask, bits=cfg.bits,
+    xq_tr = adc.adc_quantize(x_tr, mask, bits=cfg.bits,
                              vmin=cfg.vmin, vmax=cfg.vmax,
                              mode=cfg.mode, ste=False)
-    xq_te = adc.adc_quantize(data["x_test"], mask, bits=cfg.bits,
+    xq_te = adc.adc_quantize(x_te, mask, bits=cfg.bits,
                              vmin=cfg.vmin, vmax=cfg.vmax,
                              mode=cfg.mode, ste=False)
     params, opt = _init_model(sizes, cfg)
@@ -302,11 +397,25 @@ def _train_and_score(genomes: jnp.ndarray, params0, opt0, data: Dict,
     input quantization runs through the population kernel path *before*
     the vmap, so on TPU it is one (P, M/bm)-grid Pallas launch rather than
     P gathers."""
-    masks, dps = decode_population(genomes, sizes[0], cfg.bits,
-                                   cfg.min_levels)
     spec = cfg.adc_spec
-    xq_tr = ops.adc_quantize_population(data["x_train"], masks, spec=spec)
-    xq_te = ops.adc_quantize_population(data["x_test"], masks, spec=spec)
+    if cfg.frontend is not None:
+        # co-search: quantize the WHOLE (V, M, C) variant stack through
+        # the registered population entry (one launch, reshaped), then
+        # let each individual's subsample gene gather its variant
+        masks, dps, sub, _ = decode_population_cosearch(
+            genomes, sizes[0], cfg.bits, cfg.min_levels, cfg.frontend)
+        lane = jnp.arange(genomes.shape[0])
+        xq_tr = ops.adc_quantize_variants(data["x_train"], masks,
+                                          spec=spec)[lane, sub]
+        xq_te = ops.adc_quantize_variants(data["x_test"], masks,
+                                          spec=spec)[lane, sub]
+    else:
+        masks, dps = decode_population(genomes, sizes[0], cfg.bits,
+                                       cfg.min_levels)
+        xq_tr = ops.adc_quantize_population(data["x_train"], masks,
+                                            spec=spec)
+        xq_te = ops.adc_quantize_population(data["x_test"], masks,
+                                            spec=spec)
     robust = cfg.wants_robustness and draws is not None
     want_params = return_params or robust
     fn = lambda xtr, xte, dp, p, o: _train_from_quantized(
@@ -396,8 +505,15 @@ def train_pareto_front(genomes: np.ndarray, data: Dict,
         jnp.asarray(genomes), params0, opt0, dev_data, tuple(sizes), cfg,
         return_params=True)
     accs, params = out["acc"], out["params"]
-    masks, dps = decode_population(jnp.asarray(genomes), sizes[0], cfg.bits,
-                                   cfg.min_levels)
+    if cfg.frontend is not None:
+        # alloc-applied masks: the exported design must bake the SAME
+        # pruned levels the fitness was measured on
+        masks, dps, _, _ = decode_population_cosearch(
+            jnp.asarray(genomes), sizes[0], cfg.bits, cfg.min_levels,
+            cfg.frontend)
+    else:
+        masks, dps = decode_population(jnp.asarray(genomes), sizes[0],
+                                       cfg.bits, cfg.min_levels)
     return (np.asarray(accs, np.float64), jax.device_get(params),
             np.asarray(masks), np.asarray(dps))
 
@@ -409,9 +525,28 @@ def population_areas(genomes: np.ndarray, channels: int, cfg: SearchConfig
     Mask decode + repair is one batched device call; the exact-integer
     design-rule walk stays in numpy per mask (it is not the bottleneck)."""
     n = 2 ** cfg.bits
-    masks = np.asarray(genomes)[:, : channels * n].reshape(-1, channels, n)
-    masks = np.asarray(adc.repair_mask(jnp.asarray(masks, jnp.int32),
-                                       cfg.min_levels))
+    g = np.asarray(genomes)
+    masks = jnp.asarray(g[:, : channels * n].reshape(-1, channels, n),
+                        jnp.int32)
+    masks = adc.repair_mask(masks, cfg.min_levels)
+    fe = cfg.frontend
+    if fe is not None:
+        # co-search area: ADC transistors of the alloc-applied masks plus
+        # the exact front-end count of (subsample, alloc), normalized by
+        # the full-flash + full-frontend reference so transistor count
+        # stays the single budget axis
+        sub, alloc = _frontend_genes(jnp.asarray(g, jnp.uint8), channels,
+                                     cfg.bits, fe)
+        masks = np.asarray(_alloc_masks(masks, alloc, cfg.bits,
+                                        cfg.min_levels))
+        sub, alloc = np.asarray(sub), np.asarray(alloc)
+        denom = max(area.flash_full_tc(cfg.bits) * channels
+                    + feature_lib.frontend_full_tc(fe), 1)
+        tc = [area.system_tc(m, cfg.design)
+              + feature_lib.frontend_tc(fe, fe.sub_grid[int(s)], a)
+              for m, s, a in zip(masks, sub, alloc)]
+        return np.array(tc, np.float64) / denom
+    masks = np.asarray(masks)
     flash_full = max(area.flash_full_tc(cfg.bits) * channels, 1)
     return np.array([area.system_tc(m, cfg.design) for m in masks],
                     np.float64) / flash_full
@@ -681,11 +816,32 @@ def restore_search_state(ckpt, step: int, pop_size: int, glen: int,
     return state, restored
 
 
+def _validate_frontend(data: Dict, sizes, cfg: SearchConfig) -> None:
+    """Co-search data contract: sizes[0] counts FEATURE channels and the
+    x arrays stack one featurized variant per sub_grid factor."""
+    fe = cfg.frontend
+    if fe is None:
+        return
+    if fe.feature_channels != sizes[0]:
+        raise ValueError(
+            f"frontend produces {fe.feature_channels} feature channels "
+            f"({fe.channels} raw x {len(fe.features)} features) but "
+            f"sizes[0] is {sizes[0]}")
+    xt = np.shape(data["x_train"])
+    if len(xt) != 3 or xt[0] != len(fe.sub_grid):
+        raise ValueError(
+            f"co-search data must stack one featurized variant per "
+            f"sub_grid factor — expected x_train of shape "
+            f"(V={len(fe.sub_grid)}, M, {fe.feature_channels}), got "
+            f"{xt} (build it with timeseries.feature.stack_variants)")
+
+
 def run_search(data: Dict, sizes, cfg: SearchConfig,
                log: Optional[Callable] = None,
                ckpt=None, resume: bool = False,
                mesh: Optional[jax.sharding.Mesh] = None,
-               return_trained: bool = False):
+               return_trained: bool = False,
+               init: Optional[np.ndarray] = None):
     """Full in-training optimization. Returns (pareto_genomes, pareto_fit,
     decode) where fit columns are [1-acc, normalized area]; with
     ``return_trained=True`` a fourth element carries the final front's
@@ -704,7 +860,12 @@ def run_search(data: Dict, sizes, cfg: SearchConfig,
     return contract, no generations). ``cfg.screen_factor > 1`` turns on
     surrogate-screened offspring oversampling (core/surrogate.py): an
     online-trained predictor picks which of the ``screen_factor * P``
-    offspring pay the compiled QAT evaluation each generation."""
+    offspring pay the compiled QAT evaluation each generation.
+
+    ``init`` seeds the initial population ((pop_size, G) uint8) instead
+    of the random draw — e.g. embedding an ADC-only front into the
+    co-search space so its points are guaranteed candidates (the
+    cosearch_stream benchmark's ε-dominance anchor)."""
     if cfg.engine == "gradient":
         return run_gradient_search(data, sizes, cfg, log=log, ckpt=ckpt,
                                    resume=resume,
@@ -712,7 +873,8 @@ def run_search(data: Dict, sizes, cfg: SearchConfig,
     from repro.core import surrogate as surrogate_lib
     C = sizes[0]
     cfg.adc_spec.validate_channels(C)   # per-channel ranges must match data
-    G = genome_len(C, cfg.bits)
+    _validate_frontend(data, sizes, cfg)
+    G = genome_len(C, cfg.bits, cfg.frontend)
     screened = cfg.screen_factor > 1
     sur = [surrogate_lib.init(G, cfg.n_objectives,
                               hidden=cfg.surrogate_hidden,
@@ -744,12 +906,17 @@ def run_search(data: Dict, sizes, cfg: SearchConfig,
                                                        cfg.pop_size)
     pop, fit = nsga2.evolve(
         make_eval_fn(data, sizes, cfg, mesh=mesh), G, pop_size=cfg.pop_size,
-        generations=cfg.generations, seed=cfg.seed, log=log,
+        generations=cfg.generations, seed=cfg.seed, init=init, log=log,
         state=state, on_generation=on_gen,
         offspring_factor=cfg.screen_factor, screen_fn=screen_fn,
         on_evaluated=on_eval)
     pg, pf = nsga2.pareto_front(pop, fit)
-    decode = lambda g: decode_genome(jnp.asarray(g), C, cfg.bits, cfg.min_levels)
+    if cfg.frontend is not None:
+        decode = lambda g: decode_genome_cosearch(
+            jnp.asarray(g), C, cfg.bits, cfg.min_levels, cfg.frontend)
+    else:
+        decode = lambda g: decode_genome(jnp.asarray(g), C, cfg.bits,
+                                         cfg.min_levels)
     if return_trained:
         return pg, pf, decode, train_pareto_front(pg, data, sizes, cfg)
     return pg, pf, decode
@@ -786,15 +953,37 @@ def run_gradient_search(data: Dict, sizes, cfg: SearchConfig,
     from repro.core import surrogate as surrogate_lib
     C = sizes[0]
     cfg.adc_spec.validate_channels(C)
-    G = genome_len(C, cfg.bits)
+    _validate_frontend(data, sizes, cfg)
+    fe = cfg.frontend
+    G = genome_len(C, cfg.bits, fe)
+    dp_lo = C * 2 ** cfg.bits                        # dp bits live here
     # 4 lanes per requested front point: the λ sweep, the dp grid and the
     # density strata each need room to cover their axis (lanes ride one
     # vmapped train — arithmetic intensity, not extra compiled calls)
     lanes = cfg.grad_points if cfg.grad_points > 0 else 4 * cfg.pop_size
+    if fe is not None:
+        # the gate relaxation differentiates masks, not the combinatorial
+        # feature genes: train gates on the full-rate variant (index 0),
+        # then cover the subsample axis by cycling the grid over snapshot
+        # rows (the DP_INIT_GRID lane idiom) — the exact re-score and the
+        # polish flips explore the feature genes from there
+        gate_cfg = dataclass_replace(cfg, frontend=None)
+        gate_data = {"x_train": np.asarray(data["x_train"])[0],
+                     "x_test": np.asarray(data["x_test"])[0],
+                     "y_train": data["y_train"],
+                     "y_test": data["y_test"]}
+    else:
+        gate_cfg, gate_data = cfg, data
     snaps, diag = grad_gates.train_gate_family(
-        data, tuple(sizes), cfg, lanes=lanes, ckpt=ckpt, resume=resume,
-        progress=progress)
+        gate_data, tuple(sizes), gate_cfg, lanes=lanes, ckpt=ckpt,
+        resume=resume, progress=progress)
     snaps = np.asarray(snaps, np.uint8)
+    if fe is not None:
+        ext = np.ones((len(snaps), G - dp_lo - DP_BITS), np.uint8)
+        subs = np.arange(len(snaps)) % len(fe.sub_grid)
+        ext[:, :fe.sub_bits] = (subs[:, None]
+                                >> np.arange(fe.sub_bits)) & 1
+        snaps = np.concatenate([snaps, ext], axis=1)
     # the mask family comes from the gate train; the decimal position is
     # combinatorial (the STE gradient only drifts it locally), so each
     # snapped mask re-scores at every grid dp — pure batched-rescore
@@ -803,10 +992,14 @@ def run_gradient_search(data: Dict, sizes, cfg: SearchConfig,
     for dpv in grad_gates.DP_INIT_GRID:
         v = snaps.copy()
         code = int(dpv) + 8
-        v[:, -DP_BITS:] = (code >> np.arange(DP_BITS)) & 1
+        v[:, dp_lo:dp_lo + DP_BITS] = (code >> np.arange(DP_BITS)) & 1
         variants.append(v)
     anchors = np.ones((2, G), np.uint8)
-    anchors[1, -DP_BITS:] = [1, 0, 1, 0]             # dp = 5 - 8 = -3
+    anchors[1, dp_lo:dp_lo + DP_BITS] = [1, 0, 1, 0]  # dp = 5 - 8 = -3
+    if fe is not None:
+        # anchors embed the full-rate, full-allocation front end (sub
+        # index 0; all-ones alloc genes already mean FULL_ALLOC)
+        anchors[:, dp_lo + DP_BITS:dp_lo + DP_BITS + fe.sub_bits] = 0
     pool = np.unique(np.concatenate(variants + [anchors]), axis=0)
     fit = evaluate_population(pool, data, sizes, cfg)
     seen_g, seen_f = pool, fit
@@ -817,15 +1010,18 @@ def run_gradient_search(data: Dict, sizes, cfg: SearchConfig,
                                  seed=cfg.seed)
         sur = surrogate_lib.observe(sur, seen_g, seen_f,
                                     steps=cfg.surrogate_steps)
-    mask_bits = G - DP_BITS
+    # polish flips every non-dp gene: mask bits, plus (co-search) the
+    # subsample/alloc genes — dp stays on the rescored grid
+    flip_pos = np.concatenate([np.arange(dp_lo),
+                               np.arange(dp_lo + DP_BITS, G)])
     for rnd in range(cfg.grad_polish_rounds):
         front_g, _ = nsga2.pareto_front(seen_g, seen_f)
         elite = seen_g[np.argsort(seen_f[:, 0],
                                   kind="stable")[:cfg.grad_polish_beam]]
         beam = np.unique(np.concatenate([np.unique(front_g, axis=0),
                                          elite]), axis=0)
-        flips = np.repeat(beam, mask_bits, axis=0)
-        j = np.tile(np.arange(mask_bits), len(beam))
+        flips = np.repeat(beam, len(flip_pos), axis=0)
+        j = np.tile(flip_pos, len(beam))
         flips[np.arange(len(flips)), j] ^= 1
         cand = np.unique(flips, axis=0)
         # unseen neighbors only — every exact evaluation is spent once
@@ -850,8 +1046,12 @@ def run_gradient_search(data: Dict, sizes, cfg: SearchConfig,
     if log is not None:
         log(0, seen_g, seen_f)
     pg, pf = nsga2.pareto_front(seen_g, seen_f)
-    decode = lambda g: decode_genome(jnp.asarray(g), C, cfg.bits,
-                                     cfg.min_levels)
+    if fe is not None:
+        decode = lambda g: decode_genome_cosearch(
+            jnp.asarray(g), C, cfg.bits, cfg.min_levels, fe)
+    else:
+        decode = lambda g: decode_genome(jnp.asarray(g), C, cfg.bits,
+                                         cfg.min_levels)
     if return_trained:
         return pg, pf, decode, train_pareto_front(pg, data, sizes, cfg)
     return pg, pf, decode
@@ -861,9 +1061,14 @@ def full_adc_baseline(data: Dict, sizes, cfg: SearchConfig) -> Dict[str, float]:
     """Reference point: full (unpruned) ADC + QAT — the paper's 'Baseline'
     column in Table 5, plus the three full-design area models."""
     C = sizes[0]
-    G = genome_len(C, cfg.bits)
+    G = genome_len(C, cfg.bits, cfg.frontend)
+    dp_lo = C * 2 ** cfg.bits
     genome = np.ones((1, G), np.uint8)
-    genome[0, -DP_BITS:] = [1, 0, 1, 0]              # dp = 5 - 8 = -3
+    genome[0, dp_lo:dp_lo + DP_BITS] = [1, 0, 1, 0]  # dp = 5 - 8 = -3
+    if cfg.frontend is not None:
+        # full-rate (sub index 0), full-allocation front end
+        genome[0, dp_lo + DP_BITS:
+               dp_lo + DP_BITS + cfg.frontend.sub_bits] = 0
     fit = evaluate_population(genome, data, sizes, cfg)
     return {
         "accuracy": 1.0 - float(fit[0, 0]),

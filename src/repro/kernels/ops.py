@@ -51,6 +51,25 @@ def adc_quantize_population(x: jnp.ndarray, masks: jnp.ndarray, *,
                              spec=spec, interpret=interpret)
 
 
+def adc_quantize_variants(xv: jnp.ndarray, masks: jnp.ndarray, *,
+                          spec: AdcSpec,
+                          interpret: bool | None = None) -> jnp.ndarray:
+    """``adc_quantize_population`` over a variant-stacked sample batch:
+    xv (V, M, C) — one featurized variant per subsample factor of the
+    streaming co-search (timeseries/feature.stack_variants) — through a
+    population of pruned banks. Returns (P, V, M, C); the caller gathers
+    its genome's variant per individual. Not a registry entry: the ADC is
+    elementwise over samples, so reshaping (V, M) into one flat sample
+    axis reuses the existing population kernel (and its tuned/sharded
+    routing) bit-for-bit — quantize-then-gather equals gather-then-
+    quantize."""
+    v, m, c = xv.shape
+    flat = jnp.reshape(xv, (v * m, c))
+    q = adc_quantize_population(flat, masks, spec=spec,
+                                interpret=interpret)
+    return jnp.reshape(q, (masks.shape[0], v, m, c))
+
+
 def adc_quantize_population_sharded(x: jnp.ndarray, masks: jnp.ndarray, *,
                                     mesh, spec: AdcSpec, axes=None,
                                     interpret: bool | None = None

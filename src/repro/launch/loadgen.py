@@ -47,7 +47,9 @@ class Request:
     tenant: str
     arrival_s: float
     deadline_s: float
-    x: np.ndarray                  # (rows, C) float32
+    x: np.ndarray                  # (rows, C) f32 tabular fronts;
+                                   # (rows, W, C_raw) raw windows for
+                                   # streaming feature-baked fronts
 
     @property
     def rows(self) -> int:

@@ -274,6 +274,13 @@ class Tenant:
     def channels(self) -> int:
         return self.designs[0].channels
 
+    @property
+    def sample_shape(self) -> Tuple[int, ...]:
+        """Per-sample shape this tenant serves: (C,) for tabular fronts,
+        (window, raw_channels) for streaming feature-baked fronts — the
+        per-request wrong-domain check compares against this."""
+        return self.designs[0].sample_shape
+
 
 class _TenantState:
     """Engine-internal per-tenant runtime: request queue, batcher, and
@@ -369,11 +376,12 @@ class ServingEngine:
                         sorted(self._tenants))
             fut.set_result(None)
             return fut
-        if req.x.shape[1] != ts.tenant.channels:
+        if tuple(req.x.shape[1:]) != ts.tenant.sample_shape:
             self.slo.reject(req.tenant)
-            log.warning("rejected request %d: %d channels, tenant %r "
-                        "serves %d (wrong-domain)", req.rid, req.x.shape[1],
-                        req.tenant, ts.tenant.channels)
+            log.warning("rejected request %d: sample shape %s, tenant %r "
+                        "serves %s (wrong-domain)", req.rid,
+                        tuple(req.x.shape[1:]), req.tenant,
+                        ts.tenant.sample_shape)
             fut.set_result(None)
             return fut
         ts.queue.append((req, fut, time.perf_counter() - t0))
@@ -418,7 +426,8 @@ class ServingEngine:
         xb = np.concatenate(rows, axis=0)
         pad = batch - len(xb)
         if pad:
-            xb = np.pad(xb, ((0, pad), (0, 0)))
+            # pad only the row axis — samples may be (C,) or (W, C_raw)
+            xb = np.pad(xb, ((0, pad),) + ((0, 0),) * (xb.ndim - 1))
             self.padded_rows += pad
         return xb, meta
 
@@ -429,7 +438,7 @@ class ServingEngine:
         import jax
         import jax.numpy as jnp
         for ts in self._tenants.values():
-            z = jnp.zeros((ts.batcher.batch, ts.tenant.channels),
+            z = jnp.zeros((ts.batcher.batch,) + ts.tenant.sample_shape,
                           jnp.float32)
             jax.block_until_ready(ts.bank_fn(z))
 

@@ -63,16 +63,30 @@ def build(arch: str, *, smoke: bool, seq: int, batch: int, microbatches: int,
     return cfg, mesh, train_step, data
 
 
-def adc_search_config(args, channels: int):
+def adc_search_config(args, channels: int, data=None):
     """argv -> the search's (AdcSpec, SearchConfig) pair — factored out of
     ``run_adc_search`` so the CLI parsing round trip (per-channel
-    --vmin/--vmax comma lists, non-ideality knobs) is testable without
-    running a search (tests/test_cli_roundtrip.py)."""
+    --vmin/--vmax comma lists, non-ideality knobs, --auto-range) is
+    testable without running a search (tests/test_cli_roundtrip.py).
+    ``data`` (the dataset dict) is required for ``--auto-range``, which
+    derives per-channel vmin/vmax from the training data's percentiles
+    (AdcSpec.from_data) instead of hand-typed comma lists."""
     from repro.core import nonideal, search
     from repro.core.spec import AdcSpec
 
-    adc_spec = AdcSpec(bits=args.bits, vmin=parse_range(args.vmin),
-                       vmax=parse_range(args.vmax))
+    if args.auto_range:
+        if args.vmin != "0.0" or args.vmax != "1.0":
+            raise ValueError(
+                "--auto-range derives vmin/vmax from the training data; "
+                "drop the explicit --vmin/--vmax (or drop --auto-range)")
+        if data is None:
+            raise ValueError("--auto-range needs the dataset to derive "
+                             "ranges from")
+        adc_spec = AdcSpec.from_data(data["x_train"], bits=args.bits,
+                                     pct=args.auto_range_pct)
+    else:
+        adc_spec = AdcSpec(bits=args.bits, vmin=parse_range(args.vmin),
+                           vmax=parse_range(args.vmax))
     adc_spec.validate_channels(channels)
     ni = None
     knobs = (args.nonideal_sigma > 0 or args.fault_rate > 0
@@ -119,7 +133,7 @@ def run_adc_search(args):
     spec = tabular.SPECS[args.dataset]
     data = tabular.make_dataset(args.dataset)
     sizes = (spec.features, spec.hidden, spec.classes)
-    adc_spec, cfg = adc_search_config(args, spec.features)
+    adc_spec, cfg = adc_search_config(args, spec.features, data=data)
     mesh = search.default_search_mesh() if cfg.engine == "sharded" else None
     ckpt_dir = Path(args.ckpt_dir) / "adc_search"
     if not args.resume and ckpt_dir.exists():
@@ -233,6 +247,14 @@ def build_parser() -> argparse.ArgumentParser:
                          "per-channel list (heterogeneous sensors)")
     ap.add_argument("--vmax", default="1.0",
                     help="analog range maximum (same forms as --vmin)")
+    ap.add_argument("--auto-range", action="store_true",
+                    help="derive per-channel vmin/vmax from the training "
+                         "data's percentiles (AdcSpec.from_data) instead "
+                         "of --vmin/--vmax — heterogeneous sensors "
+                         "without hand-typed comma lists")
+    ap.add_argument("--auto-range-pct", type=float, default=0.5,
+                    help="percentile clip for --auto-range: range covers "
+                         "[pct, 100-pct] of each channel's distribution")
     ap.add_argument("--pop", type=int, default=16)
     ap.add_argument("--generations", type=int, default=4)
     ap.add_argument("--train-steps", type=int, default=100)

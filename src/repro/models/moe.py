@@ -14,6 +14,14 @@ tokens (activations are replicated over 'model' inside the block). A chip:
 
 Tokens overflowing an expert's capacity are dropped (GShard semantics,
 capacity_factor configurable). Aux load-balance loss follows Switch.
+
+Used vs. dormant: consumed only by the beyond-paper LM substrate —
+``models/transformer.py`` wires this FFN into the routed (moe) arch
+family and ``models/serving.py`` runs it at decode; the arch smoke
+tests cover both. It is fully dormant with respect to the paper's ADC
+pipeline (search/deploy/serving-engine/timeseries), which uses the
+dense MLP/SVM heads instead. No other module imports it, so changes
+here can only affect the moe/hybrid LM benches and smoke tests.
 """
 from __future__ import annotations
 

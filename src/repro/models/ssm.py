@@ -11,6 +11,16 @@ The chunked SSD algorithm: intra-chunk "attention-like" matmuls + an
 inter-chunk state recurrence (lax.scan over chunks). Decode keeps
 (conv tails, ssm state) — O(1) per token, which is what makes long_500k
 tractable for ssm/hybrid archs.
+
+Used vs. dormant: this module is live only through the beyond-paper LM
+substrate — ``models/transformer.py`` builds ssm/hybrid layers from it,
+``models/serving.py`` carries its decode state, and
+``launch/analysis.py`` imports it lazily for arch reports; the
+arch-family smoke tests exercise both paths. Nothing in the paper's
+ADC pipeline (core/search, core/deploy, launch/serving_engine, the
+timeseries co-search) touches it — those run the tiny MLP/SVM heads in
+``models/mlp.py``/``models/svm.py``. Safe to ignore when working on the
+reproduction; it only matters for the LM train/serve benches.
 """
 from __future__ import annotations
 

@@ -15,6 +15,16 @@ Batch dict keys:
   token archs:   tokens (B,S) int32, labels (B,S) int32, positions (B,S[,3])
   frontend archs: embeddings (B,S,F) float, labels, positions, adc_mask
   decode:        last-token variants (B,1[,F]), plus a cache pytree.
+
+Used vs. dormant: this is the hub of the beyond-paper LM substrate —
+``models/steps.py`` (train steps, the lm_train_step bench),
+``models/serving.py`` (prefill/decode), and the sharding + arch-family
+smoke tests all build on it, and it in turn pulls in ``models/moe.py``
+and ``models/ssm.py`` for the routed/ssm/hybrid families. The paper's
+ADC reproduction path (core/search -> core/deploy ->
+launch/serving_engine, and the §14 streaming co-search) never imports
+it: classifier heads there are ``models/mlp.py``/``models/svm.py``.
+Touch this file only for LM-substrate work.
 """
 from __future__ import annotations
 

@@ -1,0 +1,13 @@
+"""Streaming time-series subsystem (DESIGN.md §14): synthetic
+multichannel vitals/stress streams, the analog feature front-end spec,
+and sensor→feature→ADC→classifier co-search.
+
+Import surface is deliberately shallow: ``feature`` (FeatureSpec + the
+featurize path) and ``stream`` (the seeded workload generator) have no
+dependency on the search/deploy layers, so ``core/search.py`` and
+``core/deploy.py`` can import them without cycles. The co-search
+orchestration (``cosearch``) imports the search layer and is loaded
+lazily by ``repro.api.cosearch``.
+"""
+from repro.timeseries.feature import FeatureSpec, featurize  # noqa: F401
+from repro.timeseries.stream import StreamSpec, make_stream  # noqa: F401

@@ -1,0 +1,257 @@
+"""Analog feature front-end spec + featurize path (DESIGN.md §14).
+
+``FeatureSpec`` mirrors ``AdcSpec``/``NonIdealSpec``: a frozen hashable
+dataclass (valid static jit argument), pytree-registered, with a JSON
+``to_meta``/``from_meta`` round trip so deployment artifacts carry it
+(core/deploy.front_meta). It names the analog front-end design space the
+co-search explores: the subsampling factor (which analog sample rate the
+window buffer runs at), the temporal features computed per raw channel
+(windowed mean / min / max / slope — all realizable as switched-cap
+analog circuits), and the per-feature-channel ADC bit-allocation ladder.
+
+Genome encoding (core/search.py appends these *after* the dp bits, so
+every existing slice survives):
+
+  [ C_feat * 2^N mask | 4 dp | sub_bits subsample index
+                             | C_feat * ALLOC_BITS alloc genes ]
+
+where ``C_feat = channels * len(features)``, the subsample gene indexes
+``sub_grid`` (LSB-first), and each 2-bit alloc gene picks a rung of the
+resolution ladder: 3 keeps every searched level, 2 every 2nd, 1 every
+4th, 0 turns the feature channel OFF (single kept level → zero
+comparators, the classifier sees a constant).
+
+Bit-for-bit parity: ``featurize_fn`` is one lru-cached jitted program
+per (spec, subsample). The search-data build (stack_variants), the
+deployed single-design path and the serving bank all call the SAME
+compiled function, so search fitness == export acc == served acc holds
+through the feature layer by construction.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from dataclasses import dataclass
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+FEATURE_KINDS = ("mean", "min", "max", "slope")
+ALLOC_BITS = 2
+FULL_ALLOC = 2 ** ALLOC_BITS - 1     # 3: keep every searched level
+
+
+@dataclass(frozen=True)
+class FeatureSpec:
+    """The analog front-end design point. ``channels`` counts RAW sensor
+    channels; the ADC/classifier see ``feature_channels`` =
+    channels * len(features), ordered feature-kind-major (feature channel
+    j carries kind ``features[j // channels]`` of raw ``j % channels``).
+    ``subsample``/``alloc`` are None while searching (the genome supplies
+    them) and baked into the deployed artifact by ``bake``."""
+    channels: int
+    window: int
+    features: Tuple[str, ...] = FEATURE_KINDS
+    sub_grid: Tuple[int, ...] = (1, 2, 4, 8)
+    subsample: Optional[int] = None
+    alloc: Optional[Tuple[int, ...]] = None
+
+    def __post_init__(self):
+        object.__setattr__(self, "features", tuple(self.features))
+        object.__setattr__(self, "sub_grid",
+                           tuple(int(s) for s in self.sub_grid))
+        if self.alloc is not None:
+            object.__setattr__(self, "alloc",
+                               tuple(int(a) for a in self.alloc))
+        if self.channels < 1:
+            raise ValueError(f"channels must be >= 1, got {self.channels}")
+        if not self.features:
+            raise ValueError("features must be non-empty")
+        for f in self.features:
+            if f not in FEATURE_KINDS:
+                raise ValueError(f"unknown feature kind {f!r}; known: "
+                                 f"{FEATURE_KINDS}")
+        if len(set(self.features)) != len(self.features):
+            raise ValueError(f"duplicate feature kinds: {self.features}")
+        v = len(self.sub_grid)
+        if v & (v - 1) or self.sub_grid[0] != 1:
+            raise ValueError(f"sub_grid length must be a power of two and "
+                             f"start at factor 1 (the full-rate reference "
+                             f"design), got {self.sub_grid}")
+        if tuple(sorted(set(self.sub_grid))) != self.sub_grid:
+            raise ValueError(f"sub_grid must be strictly increasing, got "
+                             f"{self.sub_grid}")
+        for s in self.sub_grid:
+            if s & (s - 1):
+                raise ValueError(f"subsample factors must be powers of two "
+                                 f"(clock dividers), got {s}")
+            if self.window % s or self.window // s < 2:
+                raise ValueError(f"window {self.window} must divide by "
+                                 f"every sub_grid factor with >= 2 samples "
+                                 f"left (slope needs two), got factor {s}")
+        if self.subsample is not None and self.subsample not in self.sub_grid:
+            raise ValueError(f"baked subsample {self.subsample} not in "
+                             f"sub_grid {self.sub_grid}")
+        if self.alloc is not None:
+            if len(self.alloc) != self.feature_channels:
+                raise ValueError(f"alloc must carry one gene per feature "
+                                 f"channel ({self.feature_channels}), got "
+                                 f"{len(self.alloc)}")
+            for a in self.alloc:
+                if not 0 <= a <= FULL_ALLOC:
+                    raise ValueError(f"alloc genes live in "
+                                     f"[0, {FULL_ALLOC}], got {a}")
+
+    # ------------------------------------------------------------ geometry
+    @property
+    def feature_channels(self) -> int:
+        return self.channels * len(self.features)
+
+    @property
+    def sub_bits(self) -> int:
+        """Genome bits of the subsample gene: log2(len(sub_grid))."""
+        return (len(self.sub_grid) - 1).bit_length()
+
+    @property
+    def gene_bits(self) -> int:
+        """Feature genes appended to the base ADC genome."""
+        return self.sub_bits + self.feature_channels * ALLOC_BITS
+
+    # ------------------------------------------------------------- algebra
+    def replace(self, **kw) -> "FeatureSpec":
+        return dataclasses.replace(self, **kw)
+
+    def base(self) -> "FeatureSpec":
+        """The searchable spec: baked per-design fields stripped."""
+        return self.replace(subsample=None, alloc=None)
+
+    def bake(self, subsample: int, alloc) -> "FeatureSpec":
+        """Freeze one searched design point into the spec (the deploy
+        path: DeployedClassifier.feature carries the baked form)."""
+        return self.replace(subsample=int(subsample),
+                            alloc=tuple(int(a) for a in alloc))
+
+    # ---------------------------------------------------------------- meta
+    def to_meta(self) -> Dict:
+        return {"channels": self.channels, "window": self.window,
+                "features": list(self.features),
+                "sub_grid": list(self.sub_grid),
+                "subsample": self.subsample,
+                "alloc": None if self.alloc is None else list(self.alloc)}
+
+    @classmethod
+    def from_meta(cls, meta: Dict) -> "FeatureSpec":
+        return cls(channels=int(meta["channels"]),
+                   window=int(meta["window"]),
+                   features=tuple(meta["features"]),
+                   sub_grid=tuple(meta["sub_grid"]),
+                   subsample=(None if meta.get("subsample") is None
+                              else int(meta["subsample"])),
+                   alloc=(None if meta.get("alloc") is None
+                          else tuple(meta["alloc"])))
+
+    def describe(self) -> str:
+        baked = (f" sub={self.subsample} alloc={self.alloc}"
+                 if self.subsample is not None else "")
+        return (f"feat[{'/'.join(self.features)}] W={self.window} "
+                f"C={self.channels}->{self.feature_channels} "
+                f"grid={self.sub_grid}{baked}")
+
+
+def _feature_flatten(s: FeatureSpec):
+    # pure static configuration: no array leaves, the whole spec is aux
+    # data — jit treats it like AdcSpec, by value
+    return (), s
+
+
+def _feature_unflatten(aux, children) -> FeatureSpec:
+    return aux
+
+
+jax.tree_util.register_pytree_node(FeatureSpec, _feature_flatten,
+                                   _feature_unflatten)
+
+
+# ------------------------------------------------------------ featurize
+def featurize(windows: jnp.ndarray, spec: FeatureSpec,
+              subsample: int) -> jnp.ndarray:
+    """(M, W, C_raw) windows -> (M, feature_channels) f32, feature-kind-
+    major. ``slope`` normalizes by the ORIGINAL-rate sample span so its
+    scale is comparable across subsample factors (the per-channel AdcSpec
+    range derived from the variant stack covers every factor)."""
+    s = int(subsample)
+    xs = jnp.asarray(windows, jnp.float32)[:, ::s, :]
+    w_s = xs.shape[1]
+    cols = []
+    for kind in spec.features:
+        if kind == "mean":
+            cols.append(jnp.mean(xs, axis=1))
+        elif kind == "min":
+            cols.append(jnp.min(xs, axis=1))
+        elif kind == "max":
+            cols.append(jnp.max(xs, axis=1))
+        else:                                     # slope
+            cols.append((xs[:, -1] - xs[:, 0]) / float(s * (w_s - 1)))
+    return jnp.concatenate(cols, axis=1)
+
+
+@functools.lru_cache(maxsize=None)
+def _featurize_jit(spec: FeatureSpec, subsample: int):
+    return jax.jit(lambda w: featurize(w, spec, subsample))
+
+
+def featurize_fn(spec: FeatureSpec, subsample: Optional[int] = None):
+    """The ONE compiled featurize program for (spec, subsample) — search
+    data build, deploy and serving must all go through here so the
+    bit-for-bit parity contract survives the feature layer (identical
+    compiled computation, not merely identical math)."""
+    s = spec.subsample if subsample is None else subsample
+    if s is None:
+        raise ValueError("featurize_fn needs a subsample factor: pass one "
+                         "or use a baked FeatureSpec")
+    return _featurize_jit(spec.base(), int(s))
+
+
+def stack_variants(windows, spec: FeatureSpec) -> np.ndarray:
+    """(M, W, C_raw) -> (V, M, feature_channels) f32: one featurized
+    variant per sub_grid factor — the co-search's data layout (the
+    subsample gene gathers a variant inside the compiled generation)."""
+    return np.stack([np.asarray(featurize_fn(spec, s)(windows))
+                     for s in spec.sub_grid])
+
+
+# ----------------------------------------------------------- gene codec
+def encode_genes(spec: FeatureSpec, sub_index: int = 0,
+                 alloc=None) -> np.ndarray:
+    """(sub_index, alloc) -> the (gene_bits,) uint8 tail of a co-search
+    genome (LSB-first, matching core/search's decode). Defaults encode
+    the full-rate, full-allocation front end — the embedding of an
+    ADC-only design into the co-search space."""
+    if not 0 <= sub_index < len(spec.sub_grid):
+        raise ValueError(f"sub_index {sub_index} out of range for grid "
+                         f"{spec.sub_grid}")
+    alloc = ([FULL_ALLOC] * spec.feature_channels if alloc is None
+             else list(alloc))
+    sub = (sub_index >> np.arange(spec.sub_bits)) & 1
+    al = (np.asarray(alloc)[:, None] >> np.arange(ALLOC_BITS)) & 1
+    return np.concatenate([sub, al.reshape(-1)]).astype(np.uint8)
+
+
+# ----------------------------------------------------------- area bridge
+def frontend_tc(spec: FeatureSpec, subsample: int, alloc=None) -> int:
+    """Exact transistor count of this front-end design point
+    (area.frontend_tc with the spec unpacked). The area import is lazy:
+    core/search imports this module at load time, so a module-level
+    repro.core import here would be circular."""
+    from repro.core import area
+    return area.frontend_tc(spec.features, spec.channels, spec.window,
+                            subsample, alloc)
+
+
+def frontend_full_tc(spec: FeatureSpec) -> int:
+    """The full-rate all-features reference front end — the fixed cost a
+    deployed ADC-only design pays, and the co-search area column's
+    normalization partner of ``flash_full_tc * C_feat``."""
+    return frontend_tc(spec, 1, None)

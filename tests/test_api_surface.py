@@ -18,7 +18,9 @@ API_SURFACE = {
     "AdcSpec",
     "Bank",
     "DeployedClassifier",
+    "FeatureSpec",
     "Front",
+    "cosearch",
     "NonIdealSpec",
     "SearchConfig",
     "autotune",

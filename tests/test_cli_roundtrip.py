@@ -1,9 +1,11 @@
 """CLI parsing round trips for launch/train.py: a per-channel
 --vmin/--vmax comma-list spec survives argv -> SearchConfig -> AdcSpec ->
-JSON meta unchanged, and the non-ideality flags build the NonIdealSpec
-the search and the exported robustness report share."""
+JSON meta unchanged, the non-ideality flags build the NonIdealSpec the
+search and the exported robustness report share, and --auto-range derives
+a data-driven per-channel spec that survives the same JSON loop."""
 import json
 
+import numpy as np
 import pytest
 
 from repro.core.nonideal import NonIdealSpec
@@ -48,6 +50,34 @@ def test_parse_range_forms():
     assert parse_range("0.5") == 0.5
     assert parse_range("0.5,1.5") == (0.5, 1.5)
     assert parse_range(2) == 2.0
+
+
+def test_auto_range_round_trip():
+    rng = np.random.default_rng(0)
+    x = rng.normal(0.0, 1.0, (400, 3)) * np.array([1.0, 10.0, 0.1])
+    data = {"x_train": x}
+    args = _args(["--bits", "3", "--auto-range", "--auto-range-pct", "1.0"])
+    spec, cfg = train.adc_search_config(args, channels=3, data=data)
+    want = AdcSpec.from_data(x, bits=3, pct=1.0)
+    assert spec == want and spec.channels == 3
+    assert cfg.adc_spec == want
+    # per-channel ranges follow each channel's scale
+    widths = np.asarray(spec.vmax) - np.asarray(spec.vmin)
+    assert widths[1] > widths[0] > widths[2]
+    # the JSON persistence loop holds for the derived spec too
+    back = AdcSpec.from_meta(json.loads(json.dumps(spec.to_meta())))
+    assert back == want
+
+
+def test_auto_range_conflicts_rejected():
+    data = {"x_train": np.zeros((8, 2)) + [[0.0, 1.0]]}
+    # explicit --vmin/--vmax alongside --auto-range is ambiguous
+    args = _args(["--auto-range", "--vmin", "0.0,0.0", "--vmax", "1.0,2.0"])
+    with pytest.raises(ValueError, match="auto-range"):
+        train.adc_search_config(args, channels=2, data=data)
+    # --auto-range without data cannot derive anything
+    with pytest.raises(ValueError, match="dataset"):
+        train.adc_search_config(_args(["--auto-range"]), channels=2)
 
 
 def test_nonideal_flags_build_spec():

@@ -1,7 +1,11 @@
 """Data-pipeline tests: determinism (the fault-tolerance replay contract),
-normalization, stratification, LM motif structure."""
+normalization, stratification, LM motif structure — plus property-based
+coverage of the tabular generator (seed determinism over the whole
+(dataset, seed) grid, split disjointness/completeness, per-channel range
+attainment) via the optional-hypothesis shim."""
 import numpy as np
 
+from hypothesis_compat import given, settings, st
 from repro.data import tabular
 from repro.data.lm import LMDataConfig, SyntheticLM
 
@@ -30,6 +34,53 @@ def test_tabular_deterministic():
     a = tabular.make_dataset("seeds", seed=3)
     b = tabular.make_dataset("seeds", seed=3)
     np.testing.assert_array_equal(a["x_train"], b["x_train"])
+
+
+@settings(deadline=None, max_examples=12)
+@given(st.sampled_from(sorted(tabular.SPECS)), st.integers(0, 2 ** 16 - 1))
+def test_tabular_seed_determinism_property(name, seed):
+    """Every (dataset, seed) point is a pure function: two calls agree
+    bit-for-bit on every split array — the replay contract the
+    checkpoint/fault machinery leans on."""
+    a = tabular.make_dataset(name, seed=seed)
+    b = tabular.make_dataset(name, seed=seed)
+    assert sorted(a) == sorted(b)
+    for k in a:
+        np.testing.assert_array_equal(a[k], b[k])
+
+
+@settings(deadline=None, max_examples=12)
+@given(st.integers(2, 5), st.integers(20, 120), st.integers(0, 2 ** 16 - 1))
+def test_stratified_split_disjoint_and_complete(classes, n, seed):
+    """The 70/30 stratified split partitions the sample set: no row leaks
+    into both splits, none is dropped, and every class lands in both
+    sides (checked on unique row IDs so identity is exact)."""
+    rng = np.random.default_rng(seed)
+    y = rng.integers(0, classes, size=n).astype(np.int32)
+    # ensure >= 2 samples per class so both splits can take one
+    y[:2 * classes] = np.repeat(np.arange(classes, dtype=np.int32), 2)
+    x = np.arange(n, dtype=np.float32)[:, None]        # unique row IDs
+    d = tabular.stratified_split(x, y, test_frac=0.30, seed=seed)
+    tr = set(d["x_train"][:, 0].astype(int).tolist())
+    te = set(d["x_test"][:, 0].astype(int).tolist())
+    assert tr.isdisjoint(te)
+    assert len(tr) + len(te) == n and tr | te == set(range(n))
+    assert set(np.unique(d["y_train"])) == set(range(classes))
+    assert set(np.unique(d["y_test"])) == set(range(classes))
+
+
+@settings(deadline=None, max_examples=8)
+@given(st.sampled_from(sorted(tabular.SPECS)), st.integers(0, 255))
+def test_tabular_per_channel_range_coverage(name, seed):
+    """Per-feature min/max normalization: every channel of the combined
+    splits spans exactly [0, 1] (both endpoints attained — the analog
+    range an AdcSpec for this dataset must cover), and no value escapes
+    the unit interval."""
+    d = tabular.make_dataset(name, seed=seed)
+    x = np.concatenate([d["x_train"], d["x_test"]])
+    assert x.min() >= 0.0 and x.max() <= 1.0
+    np.testing.assert_allclose(x.min(axis=0), 0.0, atol=1e-6)
+    np.testing.assert_allclose(x.max(axis=0), 1.0, atol=1e-6)
 
 
 def test_lm_batch_at_deterministic_and_shifted():

@@ -1,0 +1,308 @@
+"""Streaming co-design subsystem tests (DESIGN.md §14): the synthetic
+stream generator's determinism and episode-level split, FeatureSpec's
+spec algebra (validation, meta round trip, static-jit-arg registration),
+featurize correctness against plain numpy, the gene codec + area bridge,
+and the end-to-end co-search contract — search fitness == export acc ==
+served acc bit-for-bit, FeatureSpec surviving the front_meta round trip,
+the ADC-only embedding scoring identically under the co-search config,
+and the engines (batched/reference/gradient) agreeing on the extended
+genome."""
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import deploy, search
+from repro.timeseries import cosearch
+from repro.timeseries import feature as feature_lib
+from repro.timeseries import stream
+from repro.timeseries.feature import (ALLOC_BITS, FULL_ALLOC, FeatureSpec,
+                                      encode_genes, featurize, featurize_fn,
+                                      frontend_full_tc, frontend_tc,
+                                      stack_variants)
+
+
+# --------------------------------------------------------------- stream
+def test_stream_deterministic_and_shaped():
+    a = stream.make_stream("stress", seed=3)
+    b = stream.make_stream("stress", seed=3)
+    for k in a:
+        np.testing.assert_array_equal(a[k], b[k])
+    spec = stream.SPECS["stress"]
+    assert a["x_train"].shape[1:] == (spec.window, spec.channels)
+    assert a["x_train"].dtype == np.float32
+    # every class lands in both splits (episode-stratified)
+    for y in (a["y_train"], a["y_test"]):
+        assert set(np.unique(y)) == set(range(spec.classes))
+    # a different seed re-rolls the archetypes
+    c = stream.make_stream("stress", seed=4)
+    assert not np.array_equal(a["x_train"], c["x_train"])
+
+
+def test_stream_heterogeneous_per_channel_ranges():
+    spec = stream.SPECS["vitals"]
+    d = stream.make_stream("vitals")
+    x = np.concatenate([d["x_train"], d["x_test"]]).reshape(-1,
+                                                            spec.channels)
+    lo, hi = np.asarray(spec.vmin), np.asarray(spec.vmax)
+    assert (x.min(axis=0) >= lo - 1e-4).all()
+    assert (x.max(axis=0) <= hi + 1e-4).all()
+    # the scenario the per-channel AdcSpec exists for: spans differ
+    assert len(set((hi - lo).tolist())) > 1
+
+
+def test_episode_split_disjoint_complete_stratified():
+    cls_of = np.arange(30) % 3
+    tr, te = stream._episode_split(cls_of, 0.30, seed=5)
+    tr_s, te_s = set(tr.tolist()), set(te.tolist())
+    assert tr_s.isdisjoint(te_s)
+    assert tr_s | te_s == set(range(30))
+    for c in range(3):
+        assert (cls_of[tr] == c).any() and (cls_of[te] == c).any()
+
+
+# ----------------------------------------------------------- FeatureSpec
+def test_feature_spec_validation():
+    with pytest.raises(ValueError, match="unknown feature"):
+        FeatureSpec(channels=2, window=16, features=("mean", "fft"))
+    with pytest.raises(ValueError, match="duplicate"):
+        FeatureSpec(channels=2, window=16, features=("mean", "mean"))
+    with pytest.raises(ValueError, match="powers of two"):
+        FeatureSpec(channels=2, window=16, sub_grid=(1, 3))
+    with pytest.raises(ValueError, match="window"):
+        FeatureSpec(channels=2, window=12, sub_grid=(1, 8))
+    with pytest.raises(ValueError, match="alloc"):
+        FeatureSpec(channels=2, window=16).bake(2, (3,))
+    with pytest.raises(ValueError, match="sub_grid"):
+        FeatureSpec(channels=2, window=16).bake(3, (3,) * 8)
+
+
+def test_feature_spec_meta_roundtrip_and_hash():
+    fe = FeatureSpec(channels=4, window=32)
+    baked = fe.bake(4, (3, 2, 1, 0) * 4)
+    for s in (fe, baked):
+        back = FeatureSpec.from_meta(json.loads(json.dumps(s.to_meta())))
+        assert back == s and hash(back) == hash(s)
+    assert baked.base() == fe
+    assert fe.feature_channels == 16
+    assert fe.sub_bits == 2
+    assert fe.gene_bits == 2 + 16 * ALLOC_BITS
+    # hashable -> usable as a cache key / static jit argument
+    assert {fe: 1}[baked.base()] == 1
+
+
+def test_feature_spec_is_static_jit_arg():
+    fe = FeatureSpec(channels=2, window=16).bake(2, (3,) * 8)
+    # pytree-registered aux-only: passing it through jit retriggers no
+    # tracing of spec contents and closures can switch on its fields
+    leaves, tree = jax.tree_util.tree_flatten(fe)
+    assert leaves == [] and tree.unflatten([]) == fe
+    fn = jax.jit(lambda s, x: x * s.subsample)
+    assert float(fn(fe, jnp.float32(2.0))) == 4.0
+
+
+# ------------------------------------------------------------- featurize
+def test_featurize_matches_numpy():
+    rng = np.random.default_rng(0)
+    w = rng.normal(size=(5, 8, 3)).astype(np.float32)
+    fe = FeatureSpec(channels=3, window=8, sub_grid=(1, 2))
+    for s in (1, 2):
+        got = np.asarray(featurize(jnp.asarray(w), fe, s))
+        xs = w[:, ::s, :]
+        slope = (xs[:, -1] - xs[:, 0]) / (s * (xs.shape[1] - 1))
+        want = np.concatenate([xs.mean(1), xs.min(1), xs.max(1), slope], 1)
+        np.testing.assert_allclose(got, want, rtol=1e-6, atol=1e-6)
+    # kind-major order: feature channel j = kind j//C of raw channel j%C
+    got1 = np.asarray(featurize(jnp.asarray(w), fe, 1))
+    np.testing.assert_allclose(got1[:, 3 + 1], w[:, :, 1].min(1),
+                               rtol=1e-6)
+
+
+def test_stack_variants_uses_the_one_compiled_program():
+    rng = np.random.default_rng(1)
+    w = rng.normal(size=(4, 16, 2)).astype(np.float32)
+    fe = FeatureSpec(channels=2, window=16)
+    xv = stack_variants(w, fe)
+    assert xv.shape == (len(fe.sub_grid), 4, fe.feature_channels)
+    for v, s in enumerate(fe.sub_grid):
+        np.testing.assert_array_equal(xv[v],
+                                      np.asarray(featurize_fn(fe, s)(w)))
+    # the cached program is shared by identity, not merely equal
+    assert featurize_fn(fe, 2) is featurize_fn(fe.bake(2, (3,) * 8))
+
+
+def test_encode_genes_roundtrips_through_search_decode():
+    fe = FeatureSpec(channels=2, window=16)
+    bits, min_levels = 2, 2
+    C = fe.feature_channels
+    alloc = [3, 0, 2, 1, 3, 3, 0, 2]
+    tail = encode_genes(fe, sub_index=2, alloc=alloc)
+    assert tail.shape == (fe.gene_bits,)
+    base = np.ones(C * 2 ** bits + search.DP_BITS, np.uint8)
+    genome = np.concatenate([base, tail])
+    assert len(genome) == search.genome_len(C, bits, fe)
+    _, _, sub, dec = search.decode_genome_cosearch(genome, C, bits,
+                                                   min_levels, fe)
+    assert int(sub) == 2
+    assert [int(a) for a in np.asarray(dec)] == alloc
+    # the default tail is the ADC-only embedding: full rate, full alloc
+    d = encode_genes(fe)
+    assert (d[:fe.sub_bits] == 0).all()
+    assert [int(a) for a in
+            np.asarray(search.decode_genome_cosearch(
+                np.concatenate([base, d]), C, bits, min_levels, fe)[3])
+            ] == [FULL_ALLOC] * C
+
+
+def test_frontend_area_costs():
+    fe = FeatureSpec(channels=4, window=32)
+    full = frontend_full_tc(fe)
+    assert full == frontend_tc(fe, 1, None) > 0
+    # halving the analog sample rate shrinks the window buffer
+    assert frontend_tc(fe, 2, None) < full
+    # an all-off allocation costs nothing
+    assert frontend_tc(fe, 1, [0] * fe.feature_channels) == 0
+    # turning one feature channel off can only reduce the count
+    alloc = [FULL_ALLOC] * fe.feature_channels
+    alloc[3] = 0
+    assert frontend_tc(fe, 1, alloc) < full
+
+
+# ----------------------------------------------------- co-search contract
+FE = FeatureSpec(channels=4, window=32)
+BITS = 2
+KW = dict(pop_size=8, generations=2, train_steps=30, seed=0)
+
+
+@pytest.fixture(scope="module")
+def sliced_stream():
+    d = stream.make_stream("stress")
+    return {"x_train": d["x_train"][:150], "y_train": d["y_train"][:150],
+            "x_test": d["x_test"][:80], "y_test": d["y_test"][:80]}
+
+
+@pytest.fixture(scope="module")
+def cosearch_run(sliced_stream):
+    return cosearch.run(sliced_stream, FE, bits=BITS, **KW)
+
+
+def test_cosearch_front_is_sane(cosearch_run):
+    pg, pf, _, trained, cfg, vdata, sizes, spec = cosearch_run
+    assert cfg.frontend == FE and sizes == (16, 4, 3)
+    assert pg.shape[1] == search.genome_len(sizes[0], BITS, FE)
+    pf = np.asarray(pf)
+    assert np.isfinite(pf).all()
+    assert (0.0 <= pf).all() and (pf[:, 0] <= 1.0).all()
+
+
+def test_cosearch_export_serve_saveload_bitforbit(cosearch_run,
+                                                 sliced_stream, tmp_path):
+    pg, pf, _, trained, cfg, vdata, sizes, _ = cosearch_run
+    designs = deploy.export_front(pg, vdata, sizes, cfg, trained=trained)
+    # search fitness == export accuracy, exactly
+    np.testing.assert_array_equal(
+        np.array([d.accuracy for d in designs]),
+        1.0 - np.asarray(pf)[:, 0])
+    assert deploy.verify_front_parity(designs, pg, vdata, sizes, cfg)
+    # every design carries a baked front end and the streaming shape
+    for d in designs:
+        assert d.feature is not None and d.feature.subsample in FE.sub_grid
+        assert d.sample_shape == (FE.window, FE.channels)
+    # export accuracy == served accuracy on raw windows, exactly
+    xw = sliced_stream["x_test"]
+    served = deploy.served_accuracies(designs, xw, sliced_stream["y_test"])
+    np.testing.assert_array_equal(served,
+                                  np.array([d.accuracy for d in designs]))
+    # FeatureSpec round-trips through front_meta; the loaded front serves
+    # the identical accuracies
+    deploy.save_front(tmp_path, designs)
+    assert FeatureSpec.from_meta(deploy.front_meta(tmp_path)["feature"]) \
+        == FE
+    loaded = deploy.load_front(tmp_path)
+    assert [d.feature for d in loaded] == [d.feature for d in designs]
+    np.testing.assert_array_equal(
+        deploy.served_accuracies(loaded, xw, sliced_stream["y_test"]),
+        served)
+
+
+def test_adc_only_embedding_scores_identically(cosearch_run):
+    _, _, _, _, cfg, vdata, sizes, spec = cosearch_run
+    data0 = {"x_train": np.asarray(vdata["x_train"][0]),
+             "y_train": vdata["y_train"],
+             "x_test": np.asarray(vdata["x_test"][0]),
+             "y_test": vdata["y_test"]}
+    cfg0 = search.SearchConfig.for_spec(spec, **KW)
+    bpg, bpf, _ = search.run_search(data0, sizes, cfg0)
+    emb = cosearch.embed_adc_only(bpg, FE)
+    ef = np.asarray(search.evaluate_population(emb, vdata, sizes, cfg))
+    # accuracy column: bit-for-bit equal (same masks, same variant-0 data)
+    np.testing.assert_array_equal(ef[:, 0], np.asarray(bpf)[:, 0])
+    # area column: the embedded design pays the full front end on top of
+    # its ADC transistors, under the co-search normalization
+    from repro.core import area
+    flash = area.flash_full_tc(BITS) * sizes[0]
+    denom = flash + frontend_full_tc(FE)
+    np.testing.assert_allclose(
+        ef[:, 1] * denom - frontend_full_tc(FE),
+        np.asarray(bpf)[:, 1] * flash, atol=1e-6)
+
+
+def test_cosearch_batched_matches_reference(cosearch_run):
+    pg, pf, _, _, cfg, vdata, sizes, _ = cosearch_run
+    sub = np.asarray(pg[:3])
+    ref = search.evaluate_population_reference(sub, vdata, sizes, cfg)
+    bat = search.evaluate_population(sub, vdata, sizes, cfg)
+    np.testing.assert_array_equal(np.asarray(ref), np.asarray(bat))
+
+
+def test_cosearch_gradient_engine_smoke(sliced_stream):
+    pg, pf, _, trained, cfg, vdata, sizes, _ = cosearch.run(
+        sliced_stream, FE, bits=2, engine="gradient", seed=0,
+        train_steps=30, grad_points=4, grad_train_steps=40,
+        grad_polish_rounds=1, grad_polish_evals=16)
+    assert len(pg) > 0 and np.isfinite(np.asarray(pf)).all()
+    assert pg.shape[1] == search.genome_len(sizes[0], 2, FE)
+    # snapped designs re-score bit-for-bit through the batched path
+    designs = deploy.export_front(pg, vdata, sizes, cfg, trained=trained)
+    assert deploy.verify_front_parity(designs, pg, vdata, sizes, cfg)
+
+
+def test_full_adc_baseline_with_frontend(cosearch_run):
+    _, _, _, _, cfg, vdata, sizes, _ = cosearch_run
+    ref = search.full_adc_baseline(vdata, sizes, cfg)
+    assert 0.0 <= ref["accuracy"] <= 1.0
+    assert ref["area_flash_tc"] > 0
+
+
+def test_streaming_serving_engine(cosearch_run, sliced_stream):
+    from repro.launch import loadgen, serving_engine
+    pg, _, _, trained, cfg, vdata, sizes, _ = cosearch_run
+    designs = deploy.export_front(pg[:2], vdata, sizes, cfg)
+    tenant = serving_engine.Tenant(name="stress", designs=designs)
+    assert tenant.sample_shape == (FE.window, FE.channels)
+    xw = sliced_stream["x_test"]
+    wl = loadgen.make_workload(xw, 12, tenant="stress", rate_rps=400.0,
+                               request_size=4, deadline_ms=2000.0, seed=0)
+    rep = serving_engine.run_workload([tenant], wl, target_latency_ms=20.0,
+                                      max_batch=64)
+    slo = rep["tenants"]["stress"]
+    assert slo["completed"] == 12 and slo["shed"] == 0
+    # a tabular-shaped request against a streaming tenant is rejected
+    bad = loadgen.make_workload(np.zeros((8, 16), np.float32), 1,
+                                tenant="stress", rate_rps=100.0,
+                                request_size=2, deadline_ms=1000.0)
+    rep2 = serving_engine.run_workload([tenant], bad,
+                                       target_latency_ms=20.0, max_batch=64)
+    assert rep2["tenants"]["stress"]["completed"] == 0
+
+
+def test_api_facade_cosearch(sliced_stream):
+    from repro import api
+    front = api.cosearch(sliced_stream, FE, bits=2, pop_size=8,
+                         generations=2, train_steps=30, seed=0)
+    assert front.genomes.shape[1] == search.genome_len(16, 2, FE)
+    bank = api.deploy(front)
+    out = api.serve(bank, sliced_stream["x_test"])
+    assert out.shape == (len(bank.designs), len(sliced_stream["x_test"]), 3)
