@@ -873,6 +873,122 @@ def bench_cosearch_stream(smoke=False):
             f"({slo['completed']}/{n_req} ok); parity+roundtrip ok")
 
 
+def bench_yield_search(smoke=False):
+    """Yield-first fault-tolerant co-search (DESIGN.md §15,
+    arXiv:2602.10790): an ideal accuracy/area search vs a
+    redundancy-aware 3-objective (accuracy / area / yield@margin) search
+    over the extended genome (per-channel TMR, spare levels, calibration),
+    the latter seeded with the ideal front embedded at zero redundancy —
+    same masks, zero transistor surcharge — so the tolerance-searched
+    front must weakly dominate the ideal front on yield at equal
+    transistor budget (NSGA-II elitism over the seeded population makes
+    it provable; the assert checks it). Also exports the FT front and
+    asserts the deployed ``evaluate_robustness`` yield reproduces the
+    searched yield fitness column bit-for-bit from the same measured
+    ``NonIdealSpec`` (calibrated designs included). Writes
+    yield_search.json (CI bench-smoke lane + regression gate)."""
+    from benchmarks import paper_tables
+    from repro.core import deploy, nonideal, search
+    from repro.data import tabular
+    from repro.faulttol import FaultTolSpec
+
+    data = tabular.make_dataset("seeds")
+    sizes = (7, 4, 3)
+    base = _search_bench_base(16, smoke)
+    margin = 0.01
+    mc = 6 if smoke else 16
+    ni = nonideal.NonIdealSpec(sigma_offset=0.5, sigma_range=0.02,
+                               fault_rate=0.05, seed=0)
+    ft = FaultTolSpec(max_spares=2)
+
+    # ideal search: the 2-objective accuracy/area front, no redundancy
+    cfg_i = search.SearchConfig(**base)
+    t0 = time.perf_counter()
+    ipg, ipf, _ = search.run_search(data, sizes, cfg_i)
+    t_ideal = time.perf_counter() - t0
+    ipg, ipf = np.asarray(ipg, np.uint8), np.asarray(ipf)
+
+    # fault-tolerant search: same budget axis, + the yield objective and
+    # the redundancy/repair genes; seeded with the ideal front embedded
+    # at zero redundancy (zero-extended genomes price identically)
+    cfg_f = search.SearchConfig(nonideal=ni, mc_samples=mc,
+                                robust_objective="yield",
+                                yield_margin=margin, faulttol=ft, **base)
+    Gf = search.genome_len(sizes[0], cfg_f.bits, faulttol=ft)
+    emb = np.zeros((len(ipg), Gf), np.uint8)
+    emb[:, :ipg.shape[1]] = ipg
+    rng = np.random.default_rng(0)
+    init = (rng.random((cfg_f.pop_size, Gf)) < 0.5).astype(np.uint8)
+    init[:len(emb)] = emb[:cfg_f.pop_size]
+    t0 = time.perf_counter()
+    fpg, fpf, _, trained = search.run_search(data, sizes, cfg_f,
+                                             return_trained=True, init=init)
+    t_ft = time.perf_counter() - t0
+    fpf = np.asarray(fpf)
+
+    # exact-embedding check: the zero-extended ideal genomes re-scored
+    # under the FT config keep their accuracy and area bit-for-bit (the
+    # yield column is new information, not a re-pricing)
+    ef = np.asarray(search.evaluate_population(emb, data, sizes, cfg_f))
+    embed_ok = bool(np.array_equal(ef[:, :2], ipf[:, :2]))
+
+    # dominance at equal transistor budget: every embedded ideal point is
+    # weakly dominated on (area, 1 - yield) by a tolerance-searched point
+    eps = 1e-9
+    dominance_ok = all(
+        any(c[1] <= u[1] + eps and c[2] <= u[2] + eps for c in fpf)
+        for u in ef)
+
+    # §15 deployment contract: the deployed front's measured yield
+    # reproduces the searched fitness column bit-for-bit from the same
+    # NonIdealSpec (TMR / spares / calibrate genes all honored)
+    designs = deploy.export_front(fpg, data, sizes, cfg_f, trained=trained)
+    rep = deploy.evaluate_robustness(designs, ni, data["x_test"],
+                                     data["y_test"], samples=mc,
+                                     yield_margins=(margin,))
+    deployed_yield = np.array([r["yield"][f"{margin:g}"]
+                               for r in rep["designs"]])
+    # compare in the search's objective space (1 - yield): both sides are
+    # then the IDENTICAL f64 expression of the same instance counts
+    yield_ok = bool(np.array_equal(fpf[:, 2], 1.0 - deployed_yield))
+    searched_yield = 1.0 - fpf[:, 2]
+    n_tmr = sum(int(np.asarray(d.tmr).sum()) > 0 for d in designs
+                if d.tmr is not None)
+    n_cal = sum(bool(d.calibrated) for d in designs)
+
+    report = {"dataset": "seeds", "smoke": smoke,
+              "backend": jax.default_backend(),
+              "bits": base["bits"], "pop_size": base["pop_size"],
+              "mc_samples": mc, "yield_margin": margin,
+              "nonideal": ni.to_meta(), "faulttol": ft.to_meta(),
+              "epsilon": eps,
+              "ideal_search_s": t_ideal, "faulttol_search_s": t_ft,
+              "ideal_front": ipf.tolist(),
+              "faulttol_front": fpf.tolist(),
+              "embedded_fitness": ef.tolist(),
+              "embed_exact_ok": embed_ok,
+              "dominance_ok": bool(dominance_ok),
+              "deployed_yield_bitforbit_ok": yield_ok,
+              "designs_with_tmr": n_tmr,
+              "designs_with_calibration": n_cal,
+              "searched_yield": searched_yield.tolist(),
+              "deployed_yield": deployed_yield.tolist()}
+    paper_tables.save("yield_search", report)
+    assert embed_ok, "zero-redundancy embedding re-priced the ideal front"
+    assert dominance_ok, (
+        f"tolerance-searched front fails yield dominance at equal budget: "
+        f"embedded {ef.tolist()} vs FT {fpf.tolist()}")
+    assert yield_ok, (
+        f"deployed yield diverged from searched fitness: "
+        f"{deployed_yield.tolist()} != {searched_yield.tolist()}")
+    return (t_ft * 1e6,
+            f"FT front {len(fpg)} pts dominates ideal on yield@{margin:g} "
+            f"at equal TC ({n_tmr} TMR, {n_cal} calibrated); deployed "
+            f"yield bit-for-bit ok; mean yield "
+            f"{float(deployed_yield.mean()):.2f} vs ideal "
+            f"{float(1.0 - ef[:, 2].mean()):.2f}")
+
+
 def bench_lm_train_step():
     from repro.launch.train import build
     import repro.models.steps as steps
@@ -930,6 +1046,7 @@ def main() -> None:
         ("serve_scale", lambda: bench_serve_scale(smoke=smoke)),
         ("mc_robustness", lambda: bench_mc_robustness(smoke=smoke)),
         ("cosearch_stream", lambda: bench_cosearch_stream(smoke=smoke)),
+        ("yield_search", lambda: bench_yield_search(smoke=smoke)),
         ("autotune", lambda: bench_autotune(smoke=smoke)),
         ("lm_train_step_smoke", bench_lm_train_step),
         ("roofline_summary", bench_roofline_summary),

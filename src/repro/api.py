@@ -19,6 +19,13 @@ fused multi-design serving — behind four verbs and one spec object::
     rep = api.evaluate_robustness(bank, ni, x, y)     # MC yield report
     api.robustness_curve(bank, x, y, [0, 0.5, 1.0])   # accuracy vs sigma
 
+    ft = api.FaultTolSpec(max_spares=2)                # TMR/spares/repair
+    front = api.search(spec, data, sizes=(3, 4, 2), nonideal=ni,
+                       mc_samples=16, robust_objective="yield",
+                       yield_margin=0.01, faulttol=ft) # yield-first (§15)
+    bank = api.deploy(front)                           # redundancy priced in
+    cal = api.calibrate(bank, ni, instance=0)          # measured re-bake
+
     trace = api.make_workload(x, 256, rate_rps=500, shape="bursty")
     slo = api.serve_stream(bank, trace)               # async serving engine
     slo["tenants"]["default"]["p99_ms"]               # + SLO snapshot (§12)
@@ -50,17 +57,20 @@ from repro.core.deploy import DeployedClassifier
 from repro.core.nonideal import NonIdealSpec
 from repro.core.search import SearchConfig
 from repro.core.spec import AdcSpec
+from repro.faulttol import FaultTolSpec
 from repro.timeseries.feature import FeatureSpec
 
 __all__ = [
     "AdcSpec",
     "Bank",
     "DeployedClassifier",
+    "FaultTolSpec",
     "FeatureSpec",
     "Front",
     "NonIdealSpec",
     "SearchConfig",
     "autotune",
+    "calibrate",
     "cosearch",
     "deploy",
     "evaluate_robustness",
@@ -261,7 +271,9 @@ def make_workload(x, num_requests: int, *, tenant: str = "default",
 
 
 def serve_stream(bank: Union[Bank, Sequence[DeployedClassifier], Dict],
-                 workload, *, parity_data=None, **engine_kw) -> Dict:
+                 workload, *, parity_data=None,
+                 nonideal: Optional[NonIdealSpec] = None,
+                 **engine_kw) -> Dict:
     """Serve an open-loop request trace through the production engine
     (DESIGN.md §12): asyncio ingestion with deadlines + counted shedding,
     adaptive microbatching on the tuned block_m ladder, per-tenant
@@ -274,7 +286,10 @@ def serve_stream(bank: Union[Bank, Sequence[DeployedClassifier], Dict],
     Returns the structured metrics snapshot (``tenants`` SLO stats,
     batching counters, device-pool state, per-request ``responses``).
     Engine knobs (``target_latency_ms``, ``max_batch``, ``sharded``,
-    ``inject_device_failure``...) pass through."""
+    ``inject_device_failure``...) pass through. ``nonideal`` marks the
+    hardware as carrying measured non-idealities: every tenant then
+    serves calibrated tables and re-calibrates against a fresh measured
+    instance after each device-loss recovery (DESIGN.md §15)."""
     from repro.launch import serving_engine
 
     def _designs(b):
@@ -294,7 +309,7 @@ def serve_stream(bank: Union[Bank, Sequence[DeployedClassifier], Dict],
         parity_data = {name: parity_data for name in banks}
     tenants = [serving_engine.Tenant(
         name=name, designs=designs,
-        parity_data=(parity_data or {}).get(name))
+        parity_data=(parity_data or {}).get(name), nonideal=nonideal)
         for name, designs in banks.items()]
     return serving_engine.run_workload(tenants, workload, **engine_kw)
 
@@ -327,6 +342,24 @@ def evaluate_robustness(bank: Union[Bank, Sequence[DeployedClassifier]],
     designs = bank.designs if isinstance(bank, Bank) else tuple(bank)
     return _deploy.evaluate_robustness(list(designs), nonideal, x, y,
                                        samples, **kw)
+
+
+def calibrate(bank: Union[Bank, Sequence[DeployedClassifier]],
+              nonideal: NonIdealSpec, *, instance: int = 0,
+              samples: Optional[int] = None) -> Bank:
+    """Re-bake a deployed bank against ONE measured hardware instance
+    (DESIGN.md §15): each design's value table becomes the instance's
+    measured code reconstruction and its analog range the drifted one,
+    so the plain ideal-kernel serving path then reconstructs what the
+    *fabricated* ADC actually resolves. ``instance``/``samples`` index
+    the ``nonideal`` seed's MC stream exactly like
+    ``evaluate_robustness`` — calibrating against instance i of the
+    same stream reproduces that report's instance-i behavior. With an
+    all-zero spec the re-bake is the identity on every unpruned
+    channel (the ideal-limit contract)."""
+    designs = bank.designs if isinstance(bank, Bank) else tuple(bank)
+    return Bank(designs=tuple(_deploy.calibrate_front(
+        list(designs), nonideal, instance=instance, samples=samples)))
 
 
 def robustness_curve(bank: Union[Bank, Sequence[DeployedClassifier]], x, y,

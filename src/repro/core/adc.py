@@ -222,14 +222,25 @@ def init_full_mask(bits: int, channels: Optional[int] = None) -> jnp.ndarray:
     return jnp.ones((channels, n), jnp.int32)
 
 
+def add_levels(mask: jnp.ndarray, extra) -> jnp.ndarray:
+    """Turn on ``extra`` additional kept levels along the trailing level
+    axis, lowest-index pruned levels first — the deterministic level-repair
+    primitive shared by ``repair_mask`` (top up to a floor) and the
+    fault-tolerance spare-level genes (add ``s`` spares per channel,
+    DESIGN.md §15). ``extra`` broadcasts against ``mask.shape[:-1]``; where
+    fewer pruned levels remain than requested, all of them are enabled."""
+    m = mask.astype(jnp.int32)
+    # rank pruned levels by index; enable the first ``extra`` of them
+    order = jnp.argsort(m, axis=-1, stable=True)      # zeros first
+    rank_of = jnp.argsort(order, axis=-1)
+    extra = jnp.asarray(extra, jnp.int32)[..., None]
+    return jnp.where((m == 0) & (rank_of < extra), 1, m)
+
+
 def repair_mask(mask: jnp.ndarray, min_levels: int = 2) -> jnp.ndarray:
     """GA repair: guarantee at least ``min_levels`` kept levels per channel
     (an ADC with < 2 levels carries no information). Deterministically turns
     on the lowest-index pruned levels when needed. Works on (n,) or (C, n)."""
     m = mask.astype(jnp.int32)
-    kept = m.sum(axis=-1, keepdims=True)
-    # rank pruned levels by index; enable first (min_levels - kept) of them
-    order = jnp.argsort(m, axis=-1, stable=True)      # zeros first
-    rank_of = jnp.argsort(order, axis=-1)
-    need = jnp.maximum(min_levels - kept, 0)
-    return jnp.where((m == 0) & (rank_of < need), 1, m)
+    kept = m.sum(axis=-1)
+    return add_levels(m, jnp.maximum(min_levels - kept, 0))

@@ -174,6 +174,72 @@ def pruned_baseline_tc(mask: np.ndarray) -> int:
     return tc
 
 
+def pruned_comparator_count(mask: np.ndarray) -> int:
+    """Physical comparators of the bespoke pruned proposed design — the
+    units TMR triplicates. Mirrors the stage structure ``pruned_binary_tc``
+    prices: the root stage has COM0 only, middle live stages carry two
+    enable comparators + one output comparator, the last live stage one
+    output comparator (``ours_full_tc``'s 1 + 3*(bits-2) + 1 restricted
+    to live stages)."""
+    mask = np.asarray(mask).astype(bool)
+    if int(mask.sum()) <= 1:
+        return 0
+    n = mask.shape[0]
+    bits = n.bit_length() - 1
+    count = 0
+    for d, cnt in enumerate(_needed_tree(mask)):
+        if cnt == 0:
+            continue
+        count += 1 if (d == 0 or d > bits - 2) else 3
+    return count
+
+
+# --------------------------------------- fault-tolerance pricing (§15)
+# Redundancy/repair actions of the fault-tolerant-design follow-up
+# (arXiv:2602.10790) on the same transistor-count budget axis: TMR
+# triplicates every surviving comparator behind an N-type majority voter
+# (2-of-3: three 2-input NANDs + output stage ~ 4 T in the NOT=1/AND=3
+# logic family above); calibration adds a per-kept-level trim register
+# cell plus a per-channel measurement/readout harness.
+VOTER_TC = 4
+CALIBRATION_TC_FIXED = 4         # per-channel measurement/readout harness
+CALIBRATION_TC_PER_LEVEL = 2     # per kept level: value-trim register cell
+
+
+def tmr_tc(mask: np.ndarray) -> int:
+    """Extra transistors for triplicating one channel's surviving
+    comparators with majority voters: two more comparators plus one
+    voter per physical comparator."""
+    comps = pruned_comparator_count(mask)
+    return (2 * COMPARATOR_TC + VOTER_TC) * comps
+
+
+def calibration_tc(mask: np.ndarray) -> int:
+    """Extra transistors for per-instance value-table calibration of one
+    channel (a trim cell per kept level + the measurement harness)."""
+    mask = np.asarray(mask).astype(bool)
+    kept = int(mask.sum())
+    if kept <= 1:
+        return 0
+    return CALIBRATION_TC_FIXED + CALIBRATION_TC_PER_LEVEL * kept
+
+
+def faulttol_tc(masks: np.ndarray, tmr, calibrate) -> int:
+    """Total fault-tolerance surcharge of one design: per-channel masks
+    (C, 2^N) (spare levels already applied), per-channel TMR genes (C,)
+    {0,1}, and the global calibrate gene. Exact integers on the same
+    budget axis as ``system_tc`` — the search prices redundancy and
+    base area in one objective."""
+    masks = np.asarray(masks)
+    if masks.ndim == 1:
+        masks = masks[None]
+    tmr = np.broadcast_to(np.asarray(tmr), (masks.shape[0],))
+    tc = sum(tmr_tc(m) for m, t in zip(masks, tmr) if t)
+    if calibrate:
+        tc += sum(calibration_tc(m) for m in masks)
+    return int(tc)
+
+
 def system_tc(masks: np.ndarray, design: str = "ours") -> int:
     """Total ADC transistor count of a classifier with per-channel masks
     (C, 2^N) — one bespoke ADC per sensor input (the paper's Fig. 1 system).

@@ -27,7 +27,7 @@ or the whole front at once — through the fused bank kernels
 """
 from __future__ import annotations
 
-from dataclasses import dataclass
+from dataclasses import dataclass, replace as dataclass_replace
 from typing import Dict, List, Optional, Sequence, Tuple
 
 import jax
@@ -39,7 +39,9 @@ from repro.core import nonideal as nonideal_lib
 from repro.core.nonideal import NonIdealSpec
 from repro.core.spec import AdcSpec, Range
 from repro.core.search import (SearchConfig, decode_genome_cosearch,
-                               train_pareto_front)
+                               decode_genome_faulttol, train_pareto_front)
+from repro.faulttol import calibrate as faulttol_cal
+from repro.faulttol import redundancy as ft_redundancy
 from repro.kernels import ops
 from repro.timeseries import feature as feature_lib
 from repro.timeseries.feature import FeatureSpec
@@ -69,6 +71,15 @@ class DeployedClassifier:
     # subsample/alloc-baked FeatureSpec for designs that consume raw
     # (M, W, C_raw) windows
     feature: Optional[FeatureSpec] = None
+    # fault-tolerance provenance of a §15 co-searched design: the
+    # per-channel TMR genes (None for plain designs — the spare levels
+    # are already folded into ``mask``) and the calibrate gene: every
+    # fabricated instance of a calibrated design re-bakes its value
+    # table against its measured non-idealities (the robustness
+    # evaluation applies per-instance calibrated tables;
+    # ``calibrate_front`` materializes ONE measured instance's re-bake)
+    tmr: Optional[np.ndarray] = None   # (C,) int32 {0,1}
+    calibrated: bool = False
 
     @property
     def spec(self) -> AdcSpec:
@@ -144,6 +155,18 @@ def export_front(genomes: np.ndarray, data: Dict, sizes: Sequence[int],
     for k in range(len(accs)):
         dp = float(dps[k])
         feature, fe_tc = None, 0
+        tmr, calibrated, ft_tc = None, False, 0
+        if cfg.faulttol is not None:
+            # the masks from train_pareto_front already carry the spare
+            # levels; the TMR/calibrate genes price the voter and
+            # calibration-store overhead on the same budget axis
+            _, _, tmr_k, _, cal_k = decode_genome_faulttol(
+                genomes[k], sizes[0], cfg.bits, cfg.min_levels,
+                cfg.faulttol)
+            tmr = np.asarray(tmr_k, np.int32)
+            calibrated = bool(int(cal_k))
+            ft_tc = area.faulttol_tc(np.asarray(masks[k], np.int32), tmr,
+                                     calibrated)
         if fe is not None:
             # bake this genome's searched front-end point: the subsample
             # factor and alloc ladder come from the feature genes (the
@@ -172,8 +195,9 @@ def export_front(genomes: np.ndarray, data: Dict, sizes: Sequence[int],
             vmin=spec.vmin, vmax=spec.vmax, dp=dp, mask=mask,
             table=np.asarray(spec.value_table(mask), np.float32),
             weights=weights,
-            area_tc=area.system_tc(mask, cfg.design) + fe_tc,
-            accuracy=float(accs[k]), feature=feature))
+            area_tc=area.system_tc(mask, cfg.design) + fe_tc + ft_tc,
+            accuracy=float(accs[k]), feature=feature, tmr=tmr,
+            calibrated=calibrated))
     return designs
 
 
@@ -234,6 +258,10 @@ def save_front(directory, designs: Sequence[DeployedClassifier],
         if d.feature is not None:
             leaf["subsample"] = np.int64(d.feature.subsample)
             leaf["alloc"] = np.asarray(d.feature.alloc, np.int32)
+        if d.tmr is not None:
+            leaf["tmr"] = np.asarray(d.tmr, np.int32)
+        if d.tmr is not None or d.calibrated:
+            leaf["calibrated"] = np.int64(d.calibrated)
         leaf.update(zip(_WEIGHT_LEAVES[d.kind], d.weights))
         tree[f"design_{i:03d}"] = leaf
     CheckpointManager(directory, keep=1).save(0, tree, blocking=True)
@@ -271,7 +299,10 @@ def load_front(directory) -> List[DeployedClassifier]:
             table=flat[p + "table"],
             weights=tuple(flat[p + n] for n in _WEIGHT_LEAVES[meta["kind"]]),
             area_tc=int(flat[p + "area_tc"]),
-            accuracy=float(flat[p + "acc"]), feature=feature))
+            accuracy=float(flat[p + "acc"]), feature=feature,
+            tmr=(np.asarray(flat[p + "tmr"], np.int32)
+                 if p + "tmr" in flat else None),
+            calibrated=bool(int(flat.get(p + "calibrated", 0)))))
     return designs
 
 
@@ -456,14 +487,35 @@ def _mc_instance_accuracies(designs: Sequence[DeployedClassifier],
     d0 = designs[0]
     spec = d0.spec
     masks = jnp.stack([jnp.asarray(d.mask, jnp.int32) for d in designs])
-    if draws is None:
-        draws = nonideal_lib.draw(spec.bits, masks.shape[1],
-                                  samples if samples else 32, nonideal)
-    mc = nonideal_lib.mc_operands(spec, nonideal, masks, draws=draws)
     xj = jnp.asarray(np.asarray(x, np.float32))
     yj = jnp.asarray(np.asarray(y))
-    xq_mc = dispatch.dispatch("mc_eval_population", xj, *mc, spec=spec,
-                              interpret=interpret)       # (D, S, M, C)
+    # a §15 fault-tolerant front (TMR/calibrate provenance, or an
+    # explicit RedundantDraws stream) evaluates through the
+    # calibrated-table entry: redundancy folds into the draw stream and
+    # calibrated designs reconstruct through per-instance re-baked
+    # tables — op-for-op the in-search FT objective
+    ft = (isinstance(draws, ft_redundancy.RedundantDraws)
+          or any(d.tmr is not None or d.calibrated for d in designs))
+    if ft:
+        if draws is None:
+            draws = ft_redundancy.draw_redundant(
+                spec.bits, masks.shape[1], samples if samples else 32,
+                nonideal)
+        tmr = jnp.stack([
+            jnp.zeros(masks.shape[1], jnp.int32) if d.tmr is None
+            else jnp.asarray(d.tmr, jnp.int32) for d in designs])
+        cal = jnp.asarray([int(d.calibrated) for d in designs], jnp.int32)
+        ops_ft = faulttol_cal.mc_operands_ft(spec, nonideal, masks, tmr,
+                                             cal, draws)
+        xq_mc = dispatch.dispatch("mc_eval_cal_population", xj, *ops_ft,
+                                  spec=spec, interpret=interpret)
+    else:
+        if draws is None:
+            draws = nonideal_lib.draw(spec.bits, masks.shape[1],
+                                      samples if samples else 32, nonideal)
+        mc = nonideal_lib.mc_operands(spec, nonideal, masks, draws=draws)
+        xq_mc = dispatch.dispatch("mc_eval_population", xj, *mc, spec=spec,
+                                  interpret=interpret)   # (D, S, M, C)
     acc = svm_lib.accuracy if d0.kind == "svm" else mlp_lib.accuracy
     # dp=None: the baked weights are already po2/fixed-quantized at
     # export; re-quantization would be a no-op by construction and the
@@ -510,11 +562,16 @@ def evaluate_robustness(designs: Sequence[DeployedClassifier],
             "std_accuracy": float(np.asarray(inst, np.float64).std()),
             "expected_drop": float(expected[i]),
             "worst_case_error": float(worst[i]),
-            "yield": {f"{m:g}": float(np.mean(
-                inst >= d.accuracy - m)) for m in yield_margins},
+            # the same f64 count nonideal.robust_objective('yield')
+            # reduces in-search, so the searched yield column reproduces
+            # bit-for-bit as 1 - yield[margin]
+            "yield": {f"{m:g}": float(nonideal_lib.yield_fraction(
+                np.float64(d.accuracy), inst[None], m)[0])
+                for m in yield_margins},
             "instance_accuracies": [float(a) for a in inst],
         })
     return {"nonideal": nonideal.to_meta(), "samples": int(mc_accs.shape[1]),
+            "yield_margins": [float(m) for m in yield_margins],
             "kind": designs[0].kind, "num_designs": len(designs),
             "designs": rows}
 
@@ -601,6 +658,112 @@ def make_nonideal_bank_fn(designs: Sequence[DeployedClassifier],
     def fn(xb):
         xq = dispatch.dispatch("mc_eval_population", xb, *mc, spec=spec,
                                interpret=interpret)      # (D, 1, M, C)
+        return jax.vmap(lambda p, xq_d: apply(p, xq_d[0]))(params, xq)
+
+    return jax.jit(fn)
+
+
+# ------------------------------------------- serve-time calibration (§15)
+def _measured_instance(designs: Sequence["DeployedClassifier"],
+                       nonideal: NonIdealSpec, instance: int,
+                       samples: Optional[int]):
+    """The shared front half of the calibration paths: re-derive the
+    redundant MC stream (a pure function of ``nonideal.seed`` — the
+    identical stream the search and ``evaluate_robustness`` consume,
+    same ``samples`` semantics as ``make_nonideal_bank_fn``), slice the
+    measured ``instance``, and compile the calibrated-table operands for
+    the whole front with the calibrate action forced ON."""
+    import jax.numpy as jnp
+    d0 = designs[0]
+    spec = d0.spec
+    masks = jnp.stack([jnp.asarray(d.mask, jnp.int32) for d in designs])
+    if samples is None:
+        samples = instance + 1
+    if not 0 <= instance < samples:
+        raise ValueError(f"instance {instance} outside the "
+                         f"{samples}-sample MC stream")
+    draws = ft_redundancy.draw_redundant(spec.bits, masks.shape[1],
+                                         samples, nonideal)
+    one = ft_redundancy.RedundantDraws(
+        *(a[instance:instance + 1] for a in draws))
+    tmr = jnp.stack([
+        jnp.zeros(masks.shape[1], jnp.int32) if d.tmr is None
+        else jnp.asarray(d.tmr, jnp.int32) for d in designs])
+    cal = jnp.ones(len(designs), jnp.int32)
+    return spec, faulttol_cal.mc_operands_ft(spec, nonideal, masks, tmr,
+                                             cal, one)
+
+
+def calibrate_front(designs: Sequence[DeployedClassifier],
+                    nonideal: NonIdealSpec, *, instance: int = 0,
+                    samples: Optional[int] = None
+                    ) -> List[DeployedClassifier]:
+    """Re-bake a deployed front against ONE measured hardware instance
+    (DESIGN.md §15): each design's value table becomes the measured
+    interval midpoints (``faulttol.calibrated_value_rows``) and its
+    range rows become the instance's drifted analog range, so the plain
+    ideal-kernel serving path (``make_bank_fn``/``logits``) reconstructs
+    through calibrated values: the serving code walk is
+    ``floor((x - vmin_meas) * scale_meas)`` and each code's table entry
+    is the calibrated value of the measured leaf interval containing
+    that code's midpoint. The re-bake corrects the value ladder and the
+    range drift exactly; residual comparator offsets still move leaf
+    *boundaries* off the integer code grid — ``make_calibrated_bank_fn``
+    serves the measured instance's exact interval walk when that
+    matters. For an all-zero ``NonIdealSpec`` and an unpruned design
+    the re-bake reproduces the nominal table (the ideal-limit contract
+    the tests pin); merged regions of a pruned design get their
+    measured-region midpoint — the best constant reconstruction."""
+    designs = list(designs)
+    spec, (lb, ub, values, lo, scale) = _measured_instance(
+        designs, nonideal, instance, samples)
+    n = 2 ** spec.bits
+    lo0, scale0 = np.asarray(lo, np.float64)[0], \
+        np.asarray(scale, np.float64)[0]                      # (C,)
+    vmin = tuple(float(v) for v in lo0)
+    vmax = tuple(float(v) for v in lo0 + n / scale0)
+    probes = np.arange(n, dtype=np.float64) + 0.5    # measured code units
+    out = []
+    for k, d in enumerate(designs):
+        lbk = np.asarray(lb[k, 0], np.float64)                # (C, n)
+        ubk = np.asarray(ub[k, 0], np.float64)
+        vals = np.asarray(values[k, 0], np.float32)           # leaf values
+        # sel[c, code, leaf]: probes partition over the measured leaf
+        # intervals — exactly one live term per code
+        sel = ((probes[None, :, None] >= lbk[:, None, :])
+               & (probes[None, :, None] < ubk[:, None, :]))
+        table = (sel * vals[:, None, :]).sum(-1).astype(np.float32)
+        out.append(dataclass_replace(d, table=table, vmin=vmin,
+                                     vmax=vmax, calibrated=True))
+    return out
+
+
+def make_calibrated_bank_fn(designs: Sequence[DeployedClassifier],
+                            nonideal: NonIdealSpec, *, instance: int = 0,
+                            samples: Optional[int] = None,
+                            interpret: Optional[bool] = None):
+    """The calibrated twin of ``make_nonideal_bank_fn``: one jitted bank
+    call serving (M, C) samples -> (D, M, O) logits through a sampled
+    hardware instance's *exact* measured interval walk with per-design
+    re-baked value tables (the ``mc_eval_cal_population`` entry) — what
+    the serving engine swaps in when it calibrates a recovered device
+    against its measured non-idealities instead of serving degraded."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.kernels import dispatch
+    from repro.models import mlp as mlp_lib
+    from repro.models import svm as svm_lib
+    designs = list(designs)
+    d0 = designs[0]
+    spec, ops_ft = _measured_instance(designs, nonideal, instance, samples)
+    ops_ft = tuple(jnp.asarray(a) for a in ops_ft)
+    params = _stacked_model_params(designs)
+    apply = svm_lib.apply_svm if d0.kind == "svm" else mlp_lib.apply_mlp
+
+    def fn(xb):
+        xq = dispatch.dispatch("mc_eval_cal_population", xb, *ops_ft,
+                               spec=spec, interpret=interpret)
         return jax.vmap(lambda p, xq_d: apply(p, xq_d[0]))(params, xq)
 
     return jax.jit(fn)

@@ -47,7 +47,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-ROBUST_OBJECTIVES = ("expected", "worst")
+ROBUST_OBJECTIVES = ("expected", "worst", "yield")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -318,14 +318,32 @@ def mc_mean_accuracy(mc_accs: np.ndarray) -> np.ndarray:
     return mc.sum(axis=-1) / mc.shape[-1]
 
 
+def yield_fraction(accs: np.ndarray, mc_accs: np.ndarray,
+                   margin: float) -> np.ndarray:
+    """yield@margin: the fraction of MC instances whose accuracy stays
+    within ``margin`` of the design's ideal accuracy. Reduced host-side
+    in f64 — the comparison is exact (f32-precision operands widened to
+    f64) and the count/S division is correctly rounded, so the search
+    fitness and the deployed report compute the identical number from
+    the identical instance accuracies (bit-for-bit, not approximately).
+    accs: (...,) ideal accuracies; mc_accs: (..., S)."""
+    accs = np.asarray(accs, np.float64)
+    mc = np.asarray(mc_accs, np.float64)
+    ok = mc >= (accs[..., None] - float(margin))
+    return ok.sum(axis=-1, dtype=np.float64) / mc.shape[-1]
+
+
 def robust_objective(accs: np.ndarray, mc_accs: np.ndarray,
-                     kind: str) -> np.ndarray:
+                     kind: str, *, margin: float = 0.01) -> np.ndarray:
     """The minimized robustness fitness column, reduced host-side in f64
     (see ``mc_mean_accuracy`` for why). accs: (P,) ideal accuracies;
     mc_accs: (P, S) per-instance MC accuracies.
 
     'expected': expected accuracy drop ``acc - mean_s(acc_s)``;
-    'worst': worst-case error ``1 - min_s(acc_s)``.
+    'worst': worst-case error ``1 - min_s(acc_s)``;
+    'yield': yield loss ``1 - yield@margin`` (the fault-tolerance
+    subsystem's first-class objective, DESIGN.md §15; ``margin`` only
+    applies here).
     ``deploy.evaluate_robustness`` applies the identical reductions to
     the identical per-instance accuracies, which is what makes a
     3-objective front's robustness fitness column reproducible from the
@@ -336,4 +354,6 @@ def robust_objective(accs: np.ndarray, mc_accs: np.ndarray,
     mc = np.asarray(mc_accs, np.float64)
     if kind == "worst":
         return 1.0 - mc.min(axis=-1)
+    if kind == "yield":
+        return 1.0 - yield_fraction(accs, mc, margin)
     return accs - mc_mean_accuracy(mc)

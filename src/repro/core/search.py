@@ -53,6 +53,9 @@ from repro.core import nonideal as nonideal_lib
 from repro.core.nonideal import NonIdealSpec
 from repro.core.spec import AdcSpec, Range, normalize_range
 from repro.distributed import sharding as sharding_lib
+from repro.faulttol import calibrate as faulttol_cal
+from repro.faulttol import redundancy as ft_redundancy
+from repro.faulttol.spec import FaultTolSpec
 from repro.kernels import ops
 from repro.models import mlp as mlp_lib
 from repro.timeseries import feature as feature_lib
@@ -118,6 +121,16 @@ class SearchConfig:
     nonideal: Optional[NonIdealSpec] = None
     mc_samples: int = 0
     robust_objective: str = "expected"
+    # yield@margin (DESIGN.md §15): the robustness column 'yield' counts
+    # the fraction of MC instances within ``yield_margin`` of the ideal
+    # accuracy (minimized as 1 - yield)
+    yield_margin: float = 0.01
+    # fault-tolerant co-search (DESIGN.md §15): a FaultTolSpec appends
+    # redundancy/repair genes (per-channel TMR + spare levels, a global
+    # calibrate bit) and routes the MC generation through the
+    # calibrated-table kernel entries; requires the robustness objective
+    # (the genes only matter under the perturbed instance stream)
+    faulttol: Optional[FaultTolSpec] = None
     # sensor→feature→ADC→classifier co-search (DESIGN.md §14): a
     # FeatureSpec appends feature genes to the genome and switches the
     # data contract to stacked featurized variants (V, M, C_feat);
@@ -147,6 +160,15 @@ class SearchConfig:
                 "robustness objective are mutually exclusive: the MC "
                 "kernel family consumes flat (M, C) test batches, not "
                 "the co-search's stacked (V, M, C) variant data")
+        if not 0.0 <= self.yield_margin < 1.0:
+            raise ValueError(f"yield_margin must be in [0, 1), got "
+                             f"{self.yield_margin}")
+        if self.faulttol is not None and not self.wants_robustness:
+            raise ValueError(
+                "fault-tolerant co-search needs the Monte-Carlo "
+                "robustness objective (a NonIdealSpec and mc_samples "
+                "> 0) — redundancy genes only matter under the "
+                "perturbed instance stream")
 
     @property
     def wants_robustness(self) -> bool:
@@ -173,9 +195,44 @@ class SearchConfig:
 
 
 def genome_len(channels: int, bits: int,
-               frontend: Optional[FeatureSpec] = None) -> int:
+               frontend: Optional[FeatureSpec] = None,
+               faulttol: Optional[FaultTolSpec] = None) -> int:
     base = channels * 2 ** bits + DP_BITS
-    return base + (frontend.gene_bits if frontend is not None else 0)
+    base += frontend.gene_bits if frontend is not None else 0
+    return base + (faulttol.gene_bits(channels)
+                   if faulttol is not None else 0)
+
+
+def _faulttol_genes(genomes: jnp.ndarray, channels: int, bits: int,
+                    ft: FaultTolSpec):
+    """(..., G) genomes -> (tmr (..., C), spares (..., C), cal (...))
+    int32. Fault-tolerance genes sit after the dp bits (the frontend
+    genes of §14 are mutually exclusive with robustness search, so the
+    slot never collides)."""
+    base = channels * 2 ** bits + DP_BITS
+    genes = genomes[..., base:base + ft.gene_bits(channels)]
+    return ft_redundancy.decode_genes(genes, channels, ft)
+
+
+def decode_population_faulttol(genomes: jnp.ndarray, channels: int,
+                               bits: int, min_levels: int,
+                               faulttol: FaultTolSpec):
+    """FT decode: (P, G) -> (masks (P, C, 2^N) with the spare levels
+    applied, dps (P,) f32, tmr (P, C), spares (P, C), cal (P,)). Spares
+    re-enable pruned levels AFTER repair (adc.add_levels), so the mask
+    the fitness quantizes through — and the area walk prices — is the
+    spare-augmented one."""
+    masks, dps = decode_population(genomes, channels, bits, min_levels)
+    tmr, spares, cal = _faulttol_genes(genomes, channels, bits, faulttol)
+    return adc.add_levels(masks, spares), dps, tmr, spares, cal
+
+
+def decode_genome_faulttol(genome: jnp.ndarray, channels: int, bits: int,
+                           min_levels: int, faulttol: FaultTolSpec):
+    """Single-genome FT decode -> (mask, dp, tmr, spares, cal)."""
+    masks, dps, tmr, spares, cal = decode_population_faulttol(
+        jnp.asarray(genome)[None], channels, bits, min_levels, faulttol)
+    return masks[0], dps[0], tmr[0], spares[0], cal[0]
 
 
 def _frontend_genes(genomes: jnp.ndarray, channels: int, bits: int,
@@ -335,6 +392,10 @@ def _train_eval_one(genome, data, sizes, cfg: SearchConfig,
         mask, dp, sub, _ = decode_genome_cosearch(
             genome, channels, cfg.bits, cfg.min_levels, cfg.frontend)
         x_tr, x_te = data["x_train"][sub], data["x_test"][sub]
+    elif cfg.faulttol is not None:
+        mask, dp, tmr, _, cal = decode_genome_faulttol(
+            genome, channels, cfg.bits, cfg.min_levels, cfg.faulttol)
+        x_tr, x_te = data["x_train"], data["x_test"]
     else:
         mask, dp = decode_genome(genome, channels, cfg.bits,
                                  cfg.min_levels)
@@ -356,8 +417,16 @@ def _train_eval_one(genome, data, sizes, cfg: SearchConfig,
     if not robust:
         return out
     acc, trained = out
-    xq_mc = nonideal_lib.mc_quantize(data["x_test"], mask, cfg.adc_spec,
-                                     cfg.nonideal, draws=draws)
+    if cfg.faulttol is not None:
+        from repro.kernels import dispatch
+        ft_ops = faulttol_cal.mc_operands_ft(cfg.adc_spec, cfg.nonideal,
+                                             mask, tmr, cal, draws)
+        xq_mc = dispatch.dispatch("mc_eval_cal", data["x_test"], *ft_ops,
+                                  spec=cfg.adc_spec)           # (S, M, C)
+    else:
+        xq_mc = nonideal_lib.mc_quantize(data["x_test"], mask,
+                                         cfg.adc_spec, cfg.nonideal,
+                                         draws=draws)
     return acc, _mc_accuracy_fn(data, cfg)(trained, dp, xq_mc)   # (S,)
 
 
@@ -409,6 +478,16 @@ def _train_and_score(genomes: jnp.ndarray, params0, opt0, data: Dict,
                                           spec=spec)[lane, sub]
         xq_te = ops.adc_quantize_variants(data["x_test"], masks,
                                           spec=spec)[lane, sub]
+    elif cfg.faulttol is not None:
+        # FT co-search: the spare-augmented masks feed BOTH the ideal
+        # quantization (spare levels are real resolution) and the MC
+        # interval compilation below
+        masks, dps, tmr, _, cal = decode_population_faulttol(
+            genomes, sizes[0], cfg.bits, cfg.min_levels, cfg.faulttol)
+        xq_tr = ops.adc_quantize_population(data["x_train"], masks,
+                                            spec=spec)
+        xq_te = ops.adc_quantize_population(data["x_test"], masks,
+                                            spec=spec)
     else:
         masks, dps = decode_population(genomes, sizes[0], cfg.bits,
                                        cfg.min_levels)
@@ -426,10 +505,21 @@ def _train_and_score(genomes: jnp.ndarray, params0, opt0, data: Dict,
     result = {"acc": accs}
     if robust:
         from repro.kernels import dispatch
-        mc = nonideal_lib.mc_operands(spec, cfg.nonideal, masks,
-                                      draws=draws)
-        xq_mc = dispatch.dispatch("mc_eval_population", data["x_test"],
-                                  *mc, spec=spec)          # (P, S, M, C)
+        if cfg.faulttol is not None:
+            # redundancy folds into the draw stream (majority-voted
+            # effective draws) and calibration into per-design value
+            # tables — one mixed-population calibrated-table launch
+            ft_ops = faulttol_cal.mc_operands_ft(spec, cfg.nonideal,
+                                                 masks, tmr, cal, draws)
+            xq_mc = dispatch.dispatch("mc_eval_cal_population",
+                                      data["x_test"], *ft_ops,
+                                      spec=spec)           # (P, S, M, C)
+        else:
+            mc = nonideal_lib.mc_operands(spec, cfg.nonideal, masks,
+                                          draws=draws)
+            xq_mc = dispatch.dispatch("mc_eval_population",
+                                      data["x_test"], *mc,
+                                      spec=spec)           # (P, S, M, C)
         # per-instance accuracies leave the compiled program raw; the
         # objective reduction happens host-side in f64
         # (nonideal.robust_objective) so the search fitness and
@@ -460,17 +550,21 @@ def _stacked_init(pop: int, sizes, cfg: SearchConfig):
             jax.tree_util.tree_map(tile, opt))
 
 
-def search_draws(cfg: SearchConfig, channels: int
-                 ) -> Optional[nonideal_lib.Draws]:
+def search_draws(cfg: SearchConfig, channels: int):
     """The search's Monte-Carlo draw block — one stream per run, fixed
     across generations and shared across individuals (common random
     numbers), a pure function of ``cfg.nonideal.seed``. None when the
-    config has no robustness objective. ``deploy.evaluate_robustness``
-    re-derives the identical stream from the same NonIdealSpec, which is
-    what makes the third fitness column reproducible from a deployed
-    front."""
+    config has no robustness objective; a fault-tolerant config draws
+    the 3-replica ``RedundantDraws`` stream instead (the TMR genes pick
+    per channel whether the vote or replica 0 applies).
+    ``deploy.evaluate_robustness`` re-derives the identical stream from
+    the same NonIdealSpec, which is what makes the third fitness column
+    reproducible from a deployed front."""
     if not cfg.wants_robustness:
         return None
+    if cfg.faulttol is not None:
+        return ft_redundancy.draw_redundant(cfg.bits, channels,
+                                            cfg.mc_samples, cfg.nonideal)
     return nonideal_lib.draw(cfg.bits, channels, cfg.mc_samples,
                              cfg.nonideal)
 
@@ -511,6 +605,10 @@ def train_pareto_front(genomes: np.ndarray, data: Dict,
         masks, dps, _, _ = decode_population_cosearch(
             jnp.asarray(genomes), sizes[0], cfg.bits, cfg.min_levels,
             cfg.frontend)
+    elif cfg.faulttol is not None:
+        masks, dps, _, _, _ = decode_population_faulttol(
+            jnp.asarray(genomes), sizes[0], cfg.bits, cfg.min_levels,
+            cfg.faulttol)
     else:
         masks, dps = decode_population(jnp.asarray(genomes), sizes[0],
                                        cfg.bits, cfg.min_levels)
@@ -546,6 +644,20 @@ def population_areas(genomes: np.ndarray, channels: int, cfg: SearchConfig
               + feature_lib.frontend_tc(fe, fe.sub_grid[int(s)], a)
               for m, s, a in zip(masks, sub, alloc)]
         return np.array(tc, np.float64) / denom
+    ft = cfg.faulttol
+    if ft is not None:
+        # FT area: ADC transistors of the spare-augmented masks plus the
+        # exact voter/calibration overhead of (tmr, calibrate), on the
+        # same full-flash budget axis — redundancy is PAID, not free
+        tmr, spares, cal = _faulttol_genes(jnp.asarray(g, jnp.uint8),
+                                           channels, cfg.bits, ft)
+        masks = np.asarray(adc.add_levels(masks, spares))
+        tmr, cal = np.asarray(tmr), np.asarray(cal)
+        flash_full = max(area.flash_full_tc(cfg.bits) * channels, 1)
+        tc = [area.system_tc(m, cfg.design)
+              + area.faulttol_tc(m, t, bool(cv))
+              for m, t, cv in zip(masks, tmr, cal)]
+        return np.array(tc, np.float64) / flash_full
     masks = np.asarray(masks)
     flash_full = max(area.flash_full_tc(cfg.bits) * channels, 1)
     return np.array([area.system_tc(m, cfg.design) for m in masks],
@@ -613,7 +725,7 @@ def evaluate_population(genomes: np.ndarray, data: Dict, sizes,
     if "mc_accs" in out:
         cols.append(nonideal_lib.robust_objective(
             np.asarray(out["acc"]), np.asarray(out["mc_accs"]),
-            cfg.robust_objective))
+            cfg.robust_objective, margin=cfg.yield_margin))
     return np.stack(cols, axis=1)
 
 
@@ -692,7 +804,7 @@ def evaluate_population_sharded(genomes: np.ndarray, data: Dict, sizes,
     if "mc_accs" in out:
         cols.append(nonideal_lib.robust_objective(
             np.asarray(out["acc"]), np.asarray(out["mc_accs"]),
-            cfg.robust_objective))
+            cfg.robust_objective, margin=cfg.yield_margin))
     return np.stack(cols, axis=1)
 
 
@@ -719,7 +831,8 @@ def evaluate_population_reference(genomes: np.ndarray, data: Dict, sizes,
         accs = np.array([float(a) for a, _ in rows])
         mc_accs = np.stack([np.asarray(m) for _, m in rows])
         robust = nonideal_lib.robust_objective(accs, mc_accs,
-                                               cfg.robust_objective)
+                                               cfg.robust_objective,
+                                               margin=cfg.yield_margin)
         return np.stack([1.0 - accs, areas, robust], axis=1)
     accs = np.array([float(a) for a in rows])
     return np.stack([1.0 - accs, areas], axis=1)
@@ -874,7 +987,7 @@ def run_search(data: Dict, sizes, cfg: SearchConfig,
     C = sizes[0]
     cfg.adc_spec.validate_channels(C)   # per-channel ranges must match data
     _validate_frontend(data, sizes, cfg)
-    G = genome_len(C, cfg.bits, cfg.frontend)
+    G = genome_len(C, cfg.bits, cfg.frontend, cfg.faulttol)
     screened = cfg.screen_factor > 1
     sur = [surrogate_lib.init(G, cfg.n_objectives,
                               hidden=cfg.surrogate_hidden,
@@ -914,6 +1027,9 @@ def run_search(data: Dict, sizes, cfg: SearchConfig,
     if cfg.frontend is not None:
         decode = lambda g: decode_genome_cosearch(
             jnp.asarray(g), C, cfg.bits, cfg.min_levels, cfg.frontend)
+    elif cfg.faulttol is not None:
+        decode = lambda g: decode_genome_faulttol(
+            jnp.asarray(g), C, cfg.bits, cfg.min_levels, cfg.faulttol)
     else:
         decode = lambda g: decode_genome(jnp.asarray(g), C, cfg.bits,
                                          cfg.min_levels)
@@ -955,7 +1071,8 @@ def run_gradient_search(data: Dict, sizes, cfg: SearchConfig,
     cfg.adc_spec.validate_channels(C)
     _validate_frontend(data, sizes, cfg)
     fe = cfg.frontend
-    G = genome_len(C, cfg.bits, fe)
+    ft = cfg.faulttol
+    G = genome_len(C, cfg.bits, fe, ft)
     dp_lo = C * 2 ** cfg.bits                        # dp bits live here
     # 4 lanes per requested front point: the λ sweep, the dp grid and the
     # density strata each need room to cover their axis (lanes ride one
@@ -984,6 +1101,13 @@ def run_gradient_search(data: Dict, sizes, cfg: SearchConfig,
         ext[:, :fe.sub_bits] = (subs[:, None]
                                 >> np.arange(fe.sub_bits)) & 1
         snaps = np.concatenate([snaps, ext], axis=1)
+    elif ft is not None:
+        # the relaxation differentiates masks only; the redundancy genes
+        # start zeroed (plain single-comparator designs) and the exact
+        # polish flips explore TMR/spare/calibrate from there
+        snaps = np.concatenate(
+            [snaps, np.zeros((len(snaps), ft.gene_bits(C)), np.uint8)],
+            axis=1)
     # the mask family comes from the gate train; the decimal position is
     # combinatorial (the STE gradient only drifts it locally), so each
     # snapped mask re-scores at every grid dp — pure batched-rescore
@@ -1000,6 +1124,9 @@ def run_gradient_search(data: Dict, sizes, cfg: SearchConfig,
         # anchors embed the full-rate, full-allocation front end (sub
         # index 0; all-ones alloc genes already mean FULL_ALLOC)
         anchors[:, dp_lo + DP_BITS:dp_lo + DP_BITS + fe.sub_bits] = 0
+    elif ft is not None:
+        # anchors stay plain full-ADC designs — no redundancy overhead
+        anchors[:, dp_lo + DP_BITS:] = 0
     pool = np.unique(np.concatenate(variants + [anchors]), axis=0)
     fit = evaluate_population(pool, data, sizes, cfg)
     seen_g, seen_f = pool, fit
@@ -1049,6 +1176,9 @@ def run_gradient_search(data: Dict, sizes, cfg: SearchConfig,
     if fe is not None:
         decode = lambda g: decode_genome_cosearch(
             jnp.asarray(g), C, cfg.bits, cfg.min_levels, fe)
+    elif ft is not None:
+        decode = lambda g: decode_genome_faulttol(
+            jnp.asarray(g), C, cfg.bits, cfg.min_levels, ft)
     else:
         decode = lambda g: decode_genome(jnp.asarray(g), C, cfg.bits,
                                          cfg.min_levels)
@@ -1061,7 +1191,7 @@ def full_adc_baseline(data: Dict, sizes, cfg: SearchConfig) -> Dict[str, float]:
     """Reference point: full (unpruned) ADC + QAT — the paper's 'Baseline'
     column in Table 5, plus the three full-design area models."""
     C = sizes[0]
-    G = genome_len(C, cfg.bits, cfg.frontend)
+    G = genome_len(C, cfg.bits, cfg.frontend, cfg.faulttol)
     dp_lo = C * 2 ** cfg.bits
     genome = np.ones((1, G), np.uint8)
     genome[0, dp_lo:dp_lo + DP_BITS] = [1, 0, 1, 0]  # dp = 5 - 8 = -3
@@ -1069,6 +1199,8 @@ def full_adc_baseline(data: Dict, sizes, cfg: SearchConfig) -> Dict[str, float]:
         # full-rate (sub index 0), full-allocation front end
         genome[0, dp_lo + DP_BITS:
                dp_lo + DP_BITS + cfg.frontend.sub_bits] = 0
+    elif cfg.faulttol is not None:
+        genome[0, dp_lo + DP_BITS:] = 0   # baseline: no redundancy
     fit = evaluate_population(genome, data, sizes, cfg)
     return {
         "accuracy": 1.0 - float(fit[0, 0]),

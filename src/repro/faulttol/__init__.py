@@ -1,0 +1,32 @@
+"""Fault-tolerance subsystem (DESIGN.md §15): redundancy-aware genome,
+yield-first co-search, and per-instance calibration for pruned
+binary-search ADCs — the reproduction of "Fault Tolerant Design of
+IGZO-based Binary Search ADCs" (arXiv:2602.10790) on top of the §10
+non-ideality model.
+
+Layout:
+
+* ``spec``       — ``FaultTolSpec``: which redundancy/repair actions the
+                   search genome may take (frozen, hashable, JSON meta).
+* ``redundancy`` — the 3-replica draw stream, the majority-vote fold
+                   that keeps TMR on the existing interval-table path,
+                   and the gene decoder.
+* ``calibrate``  — measured-interval value-table re-bake and the
+                   ``mc_eval_cal*`` operand compiler.
+
+Search wiring lives in ``core/search.py`` (genome extension + the
+``yield`` objective), pricing in ``core/area.py`` (``tmr_tc`` /
+``calibration_tc``), deployment in ``core/deploy.py``
+(``calibrate_front`` / ``make_calibrated_bank_fn``), and the serve-time
+calibrate-on-recovery path in ``launch/serving_engine.py``.
+"""
+from repro.faulttol.calibrate import calibrated_value_rows, mc_operands_ft
+from repro.faulttol.redundancy import (REPLICAS, RedundantDraws,
+                                       decode_genes, draw_redundant,
+                                       effective_draws)
+from repro.faulttol.spec import FaultTolSpec
+
+__all__ = [
+    "FaultTolSpec", "RedundantDraws", "REPLICAS", "calibrated_value_rows",
+    "decode_genes", "draw_redundant", "effective_draws", "mc_operands_ft",
+]

@@ -1,0 +1,63 @@
+"""Per-instance calibration: re-bake value tables from measured
+intervals (DESIGN.md §15).
+
+The digital back end of an ideal design reconstructs code ``k`` as the
+nominal midpoint of level ``k``'s analog cell. A fabricated instance
+places its comparator thresholds elsewhere: the set of inputs reaching
+kept leaf ``k`` is the *measured* interval ``[lb, ub)`` that
+``nonideal.instance_bounds`` compiles. Post-fabrication calibration
+stores, per instance, the measured interval's analog midpoint instead —
+the best constant reconstruction for that region — and serves through
+the same compare/select kernel sweep with a per-instance value table
+(the ``mc_eval_cal`` / ``mc_eval_cal_population`` dispatch entries).
+
+For an all-zero ``NonIdealSpec`` the measured intervals are the exact
+ideal code regions, so calibration re-bakes a *valid* table (region
+midpoints) and changes nothing the classifier cannot absorb; under
+faults it recovers most of the accuracy a stuck/offset instance loses,
+which is exactly why the calibrate gene buys yield in the co-search.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core import nonideal as nonideal_lib
+from repro.faulttol import redundancy
+
+
+def calibrated_value_rows(lb, ub, lo, scale, bits: int) -> jnp.ndarray:
+    """Measured-interval midpoints as per-instance value tables.
+
+    lb/ub: (..., S, C, 2^N) code-unit interval tables (unreachable
+    leaves carry (+inf, -inf) sentinels); lo/scale: (S, C) measured
+    range rows. Bounds clip to the code range [0, 2^N] first (the outer
+    leaves are half-infinite), then map back to the analog domain via
+    ``x = lo + u / scale``. Returns f32 of lb's shape; unreachable
+    leaves get an arbitrary finite value the kernel never selects."""
+    n = float(2 ** bits)
+    mid_u = 0.5 * (jnp.clip(lb, 0.0, n) + jnp.clip(ub, 0.0, n))
+    return (lo[..., None] + mid_u / scale[..., None]).astype(jnp.float32)
+
+
+def mc_operands_ft(spec, nonideal: nonideal_lib.NonIdealSpec, masks,
+                   tmr, cal, rdraws: redundancy.RedundantDraws):
+    """FT analogue of ``nonideal.mc_operands``: compile (spec, nonideal,
+    spare-applied masks, TMR genes, calibrate genes, redundant draws)
+    into the ``mc_eval_cal`` / ``mc_eval_cal_population`` operand tuple
+    ``(lb, ub, values, lo, scale)`` with per-instance value tables.
+
+    masks: (C, 2^N) or (P, C, 2^N); tmr: (C,) or (P, C); cal: scalar or
+    (P,) {0,1}. Designs with the calibrate gene off get the nominal
+    ladder broadcast to the per-instance table shape, so one kernel
+    launch serves a mixed population."""
+    masks = jnp.asarray(masks)
+    channels = masks.shape[-2]
+    eff = redundancy.effective_draws(rdraws, tmr, nonideal)
+    lb, ub = nonideal_lib.instance_bounds(masks, spec.bits, eff, nonideal)
+    lo, scale = nonideal_lib.instance_rows(spec, channels, rdraws, nonideal)
+    nominal = nonideal_lib.level_value_rows(spec, channels)   # (C, 2^N)
+    calv = calibrated_value_rows(lb, ub, lo, scale, spec.bits)
+    cal = jnp.asarray(cal)
+    cond = cal.reshape(cal.shape + (1, 1, 1)).astype(bool)
+    values = jnp.where(cond, calv, nominal)
+    return lb, ub, values, lo, scale

@@ -1,0 +1,142 @@
+"""Redundancy genes and majority-voted Monte-Carlo draws (DESIGN.md §15).
+
+The trick that keeps fault-tolerant search on the existing compiled MC
+path: a triplicated comparator behind a majority voter is *still* a
+single threshold test on the analog input, so TMR folds into the
+interval-table compilation (``nonideal.instance_bounds``) as a pure
+transformation of the draw stream — no new kernel for the bounds walk.
+
+Per node, with replica thresholds ``t_i = mid + sigma * eps_i`` and the
+comparator firing when ``u >= t_i``:
+
+* all three replicas healthy -> the vote fires iff at least two do,
+  i.e. at ``u >=`` the **median** threshold;
+* one replica stuck-at-1 -> fires iff either healthy one does:
+  **min** of the two healthy thresholds;
+* one replica stuck-at-0 -> needs both healthy ones: **max**;
+* one stuck high and one low -> the lone healthy replica decides;
+* two or more stuck the same way -> the vote itself is stuck (encoded
+  as ``fault_u = 0`` so ``instance_bounds`` sees a faulted node with
+  the voted direction; healthy votes are encoded as ``fault_u = 1``,
+  which no ``fault_rate <= 1`` marks faulty).
+
+``draw_redundant`` draws the 3-replica stream once per evaluation as a
+pure function of ``NonIdealSpec.seed`` and the shapes — the same
+common-random-numbers contract as ``nonideal.draw``, which is what lets
+``deploy.evaluate_robustness`` reproduce an in-search yield fitness
+bit-for-bit from the spec alone. Channels whose TMR gene is off consume
+replica 0 verbatim, so a zero-gene genome under the redundant stream is
+an ordinary single-comparator design.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.nonideal import Draws, NonIdealSpec
+from repro.faulttol.spec import FaultTolSpec
+
+REPLICAS = 3
+
+
+class RedundantDraws(NamedTuple):
+    """3-replica comparator randomness for S instances (common random
+    numbers across a population, like ``nonideal.Draws``). Node arrays
+    are (S, C, 2^N - 1, REPLICAS); drift is shared per channel instance
+    (the reference ladder is not replicated): (S, C, 2)."""
+    eps: jnp.ndarray
+    fault_u: jnp.ndarray
+    stuck_hi: jnp.ndarray
+    drift: jnp.ndarray
+
+    @property
+    def samples(self) -> int:
+        return self.eps.shape[0]
+
+
+def draw_redundant(bits: int, channels: int, samples: int,
+                   nonideal: NonIdealSpec) -> RedundantDraws:
+    """Draw the 3-replica randomness block — a pure function of
+    ``nonideal.seed`` and the shapes (deploy-side calibration and
+    robustness evaluation re-derive the identical stream)."""
+    if samples < 1:
+        raise ValueError(f"need >= 1 MC sample, got {samples}")
+    nodes = 2 ** bits - 1
+    key = jax.random.PRNGKey(nonideal.seed)
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    shape = (samples, channels, nodes, REPLICAS)
+    return RedundantDraws(
+        eps=jax.random.normal(k1, shape, jnp.float32),
+        fault_u=jax.random.uniform(k2, shape, jnp.float32),
+        stuck_hi=jax.random.bernoulli(k3, 0.5, shape),
+        drift=jax.random.normal(k4, (samples, channels, 2), jnp.float32))
+
+
+def effective_draws(rd: RedundantDraws, tmr,
+                    nonideal: NonIdealSpec) -> Draws:
+    """Fold the replica axis into ordinary per-node ``Draws`` under
+    per-channel TMR selection. ``tmr``: (C,) or population-batched
+    (P, C) {0,1}; a leading P axis broadcasts straight through
+    ``instance_bounds`` (bounds come back (P, S, C, 2^N))."""
+    frate = float(nonideal.fault_rate)
+    e = rd.eps                                       # (S, C, K, 3)
+    f = rd.fault_u < frate
+    hi = rd.stuck_hi
+    n_hi = (f & hi).sum(-1)
+    n_lo = (f & ~hi).sum(-1)
+    n_f = n_hi + n_lo
+    e_min_h = jnp.min(jnp.where(f, jnp.inf, e), axis=-1)
+    e_max_h = jnp.max(jnp.where(f, -jnp.inf, e), axis=-1)
+    median = e.sum(-1) - e.max(-1) - e.min(-1)
+    lone = jnp.where(f, 0.0, e).sum(-1)              # the single healthy one
+    eps_v = jnp.where(
+        n_f == 0, median,
+        jnp.where((n_f == 1) & (n_hi == 1), e_min_h,
+                  jnp.where((n_f == 1) & (n_lo == 1), e_max_h,
+                            jnp.where((n_f == 2) & (n_hi == 1), lone,
+                                      jnp.float32(0.0)))))
+    voted_stuck = (n_hi >= 2) | (n_lo >= 2)
+    fu_v = jnp.where(voted_stuck, jnp.float32(0.0), jnp.float32(1.0))
+    sh_v = n_hi >= 2
+    # channels without TMR consume replica 0 verbatim
+    sel = jnp.asarray(tmr, bool)[..., None, :, None]  # (..., 1, C, 1)
+    return Draws(eps=jnp.where(sel, eps_v, e[..., 0]),
+                 fault_u=jnp.where(sel, fu_v, rd.fault_u[..., 0]),
+                 stuck_hi=jnp.where(sel, sh_v, rd.stuck_hi[..., 0]),
+                 drift=rd.drift)
+
+
+def decode_genes(genes, channels: int, ft: FaultTolSpec
+                 ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Decode the appended fault-tolerance gene slice.
+
+    genes: (..., ft.gene_bits(channels)) uint8. Returns ``(tmr, spares,
+    cal)``: (..., C) int32 {0,1}, (..., C) int32 in [0, max_spares]
+    (binary LSB-first, clipped), and (...) int32 {0,1}. jit/vmap safe.
+    """
+    g = jnp.asarray(genes, jnp.int32)
+    if g.shape[-1] != ft.gene_bits(channels):
+        raise ValueError(f"faulttol gene slice {g.shape[-1]} != "
+                         f"{ft.gene_bits(channels)}")
+    i = 0
+    if ft.tmr:
+        tmr = g[..., :channels]
+        i = channels
+    else:
+        tmr = jnp.zeros(g.shape[:-1] + (channels,), jnp.int32)
+    sb = ft.spare_bits
+    if sb:
+        raw = g[..., i:i + channels * sb]
+        raw = raw.reshape(raw.shape[:-1] + (channels, sb))
+        weights = jnp.asarray(2 ** jnp.arange(sb), jnp.int32)
+        spares = jnp.minimum((raw * weights).sum(-1), ft.max_spares)
+        i += channels * sb
+    else:
+        spares = jnp.zeros(g.shape[:-1] + (channels,), jnp.int32)
+    if ft.calibrate:
+        cal = g[..., i]
+    else:
+        cal = jnp.zeros(g.shape[:-1], jnp.int32)
+    return tmr, spares, cal

@@ -53,7 +53,9 @@ from typing import Callable, Dict, Optional, Tuple
 from repro.kernels import envelope, ref
 from repro.kernels.adc_quantize import (adc_quantize_pallas,
                                         adc_quantize_pallas_population)
-from repro.kernels.mc_eval import (mc_adc_eval_pallas,
+from repro.kernels.mc_eval import (mc_adc_eval_cal_pallas,
+                                   mc_adc_eval_cal_pallas_population,
+                                   mc_adc_eval_pallas,
                                    mc_adc_eval_pallas_population)
 from repro.kernels.qmlp import (bespoke_mlp_bank_pallas, bespoke_mlp_pallas,
                                 bespoke_svm_bank_pallas, bespoke_svm_pallas)
@@ -349,6 +351,30 @@ register(KernelEntry(
     kernel=lambda x, lb, ub, v, lo, sc, *, spec, interpret, block_m=None:
         mc_adc_eval_pallas_population(x, lb, ub, v, lo, sc,
                                       interpret=interpret, block_m=block_m),
+))
+
+# Calibrated-table MC entries (DESIGN.md §15): same operand order, but
+# the value tables are per instance ((S, C, 2^N); population adds the
+# design axis) because post-fabrication calibration re-bakes each
+# measured instance's reconstruction ladder
+# (faulttol.calibrate.mc_operands_ft builds the operands).
+register(KernelEntry(
+    name="mc_eval_cal",
+    oracle=lambda x, lb, ub, v, lo, sc, *, spec: ref.mc_adc_eval_cal_ref(
+        x, lb, ub, v, lo, sc),
+    kernel=lambda x, lb, ub, v, lo, sc, *, spec, interpret, block_m=None:
+        mc_adc_eval_cal_pallas(x, lb, ub, v, lo, sc, interpret=interpret,
+                               block_m=block_m),
+))
+
+register(KernelEntry(
+    name="mc_eval_cal_population",
+    oracle=lambda x, lb, ub, v, lo, sc, *, spec:
+        ref.mc_adc_eval_cal_ref_population(x, lb, ub, v, lo, sc),
+    kernel=lambda x, lb, ub, v, lo, sc, *, spec, interpret, block_m=None:
+        mc_adc_eval_cal_pallas_population(x, lb, ub, v, lo, sc,
+                                          interpret=interpret,
+                                          block_m=block_m),
 ))
 
 register(KernelEntry(

@@ -99,6 +99,32 @@ def mc_adc_eval_ref_population(x: jnp.ndarray, lb: jnp.ndarray,
     return jax.vmap(fn)(lb, ub)
 
 
+def mc_adc_eval_cal_ref(x: jnp.ndarray, lb: jnp.ndarray, ub: jnp.ndarray,
+                        values: jnp.ndarray, lo: jnp.ndarray,
+                        scale: jnp.ndarray) -> jnp.ndarray:
+    """Calibrated-table MC oracle (faulttol.calibrate operands): like
+    ``mc_adc_eval_ref`` but each perturbed instance reconstructs through
+    its own re-baked value table — values (S, C, 2^N) instead of a shared
+    (C, 2^N) nominal ladder. Returns (S, M, C)."""
+    u = (x[None, :, :] - lo[:, None, :]) * scale[:, None, :]   # (S, M, C)
+    sel = ((u[..., None] >= lb[:, None, :, :])
+           & (u[..., None] < ub[:, None, :, :]))               # (S, M, C, n)
+    return jnp.sum(jnp.where(sel, values[:, None, :, :], 0.0),
+                   axis=-1).astype(x.dtype)
+
+
+def mc_adc_eval_cal_ref_population(x: jnp.ndarray, lb: jnp.ndarray,
+                                   ub: jnp.ndarray, values: jnp.ndarray,
+                                   lo: jnp.ndarray, scale: jnp.ndarray
+                                   ) -> jnp.ndarray:
+    """Population-batched calibrated-table MC oracle: lb/ub/values carry
+    the design axis (P, S, C, 2^N) — per-design tables let one launch mix
+    calibrated and uncalibrated designs; lo/scale stay shared (common
+    random numbers). Returns (P, S, M, C)."""
+    fn = lambda l, u_, v: mc_adc_eval_cal_ref(x, l, u_, v, lo, scale)
+    return jax.vmap(fn)(lb, ub, values)
+
+
 def bespoke_mlp_ref(x: jnp.ndarray, table: jnp.ndarray, bits: int,
                     w1: jnp.ndarray, b1: jnp.ndarray,
                     w2: jnp.ndarray, b2: jnp.ndarray,

@@ -45,7 +45,11 @@ ONE sampled non-ideal hardware instance (MC instance ``--nonideal-instance``
 of the ``--nonideal-seed`` stream, DESIGN.md §10) — the live demonstration
 of what comparator offsets and stuck-at faults do to served accuracy; the
 report prints served-vs-exported degradation per design instead of
-asserting the ideal-hardware parity contract.
+asserting the ideal-hardware parity contract, plus a yield@margin summary
+over the instance stream (``--yield-margins``). Add ``--calibrate`` to
+re-bake the front against the sampled instance's *measured*
+non-idealities (DESIGN.md §15) and serve through the calibrated tables —
+the report then also prints the recovered accuracy per design.
 """
 from __future__ import annotations
 
@@ -156,16 +160,19 @@ def _smoke_front(dataset: str):
     return deploy.export_front(pg, data, sizes, cfg), data
 
 
-def _serve_async(fronts, args):
+def _serve_async(fronts, args, nonideal=None):
     """The --driver async path: one Tenant per loaded front, an open-loop
-    load trace per tenant, merged into one stream through the engine."""
+    load trace per tenant, merged into one stream through the engine.
+    With ``nonideal`` (--calibrate) every tenant serves calibrated
+    tables and re-calibrates on device-loss recovery (DESIGN.md §15)."""
     from repro.launch import loadgen, serving_engine
 
     tenants, traces = [], []
     for name, designs, data in fronts:
         tenants.append(serving_engine.Tenant(
             name=name, designs=designs,
-            parity_data=(data["x_test"], data["y_test"])))
+            parity_data=(data["x_test"], data["y_test"]),
+            nonideal=nonideal))
         traces.append(loadgen.make_workload(
             data["x_test"], args.requests, tenant=name,
             rate_rps=args.rate, request_size=args.request_size,
@@ -200,6 +207,9 @@ def _serve_async(fronts, args):
     dv = rep["devices"]
     print(f"  devices: {dv['alive']} alive, {dv['lost']} lost, "
           f"{rep['recoveries']} recoveries (sharded={dv['sharded']})")
+    if rep.get("calibrations"):
+        print("  calibrations: " + ", ".join(
+            f"{n}: {c}" for n, c in sorted(rep["calibrations"].items())))
     if args.fail_device_at is not None and rep["recoveries"] < 1:
         raise SystemExit("requested --fail-device-at but no recovery ran "
                          "(stream ended before the failing batch?)")
@@ -217,7 +227,7 @@ def _serve_async(fronts, args):
     return rep
 
 
-def main(argv=None):
+def build_parser():
     ap = argparse.ArgumentParser()
     ap.add_argument("--front-dir", action="append",
                     help="exported front (launch.train --export-front); "
@@ -270,6 +280,20 @@ def main(argv=None):
                          "evaluate_robustness report to serve exactly "
                          "the instance it lists (0: minimal "
                          "instance+1-sample stream)")
+    ap.add_argument("--calibrate", action="store_true",
+                    help="with --nonideal-*: calibrate the front against "
+                         "the sampled instance's measured non-idealities "
+                         "(DESIGN.md §15) and serve through the "
+                         "calibrated tables instead of degraded — the "
+                         "report compares degraded vs recovered accuracy")
+    ap.add_argument("--yield-margins", default="0.01,0.05",
+                    help="with --nonideal-*: comma list of accuracy-drop "
+                         "margins for the served front's yield summary")
+    return ap
+
+
+def main(argv=None):
+    ap = build_parser()
     args = ap.parse_args(argv)
 
     from repro.data import tabular
@@ -319,9 +343,17 @@ def main(argv=None):
                                 fault_rate=args.fault_rate,
                                 seed=args.nonideal_seed)
 
-    if args.driver == "async" and nonideal is not None:
+    if args.driver == "async" and nonideal is not None and not args.calibrate:
         ap.error("--driver async serves the ideal-hardware parity "
-                 "contract; --nonideal-* needs --driver batch")
+                 "contract; --nonideal-* needs --driver batch, or add "
+                 "--calibrate to serve calibrated tables with "
+                 "calibrate-on-recovery")
+    if args.calibrate and nonideal is None:
+        ap.error("--calibrate re-bakes the front against a measured "
+                 "non-ideal instance; it needs --nonideal-sigma / "
+                 "--fault-rate / --range-drift")
+    from repro.launch.train import parse_yield_margins
+    yield_margins = parse_yield_margins(args.yield_margins)
 
     mesh = None
     if args.sharded and args.driver == "batch":
@@ -337,20 +369,25 @@ def main(argv=None):
              f"instance={args.nonideal_instance})" if nonideal else ""))
 
     if args.driver == "async":
-        return _serve_async(fronts, args)
+        return _serve_async(fronts, args,
+                            nonideal=nonideal if args.calibrate else None)
 
-    nonideal_fn = None
+    nonideal_fn = cal_fn = None
     if nonideal is not None:
         # built ONCE: serve() drives it for throughput and the
         # degradation report below re-uses the same compiled closure
         nonideal_fn = deploy.make_nonideal_bank_fn(
             designs, nonideal, instance=args.nonideal_instance,
             samples=args.mc_samples or None)
+        if args.calibrate:
+            cal_fn = deploy.make_calibrated_bank_fn(
+                designs, nonideal, instance=args.nonideal_instance,
+                samples=args.mc_samples or None)
 
     requests = make_request_stream(data["x_test"], args.requests,
                                    args.request_size)
     rep = serve(designs, requests, args.batch, mesh=mesh,
-                bank_fn=nonideal_fn)
+                bank_fn=cal_fn if cal_fn is not None else nonideal_fn)
     print(f"  {rep['requests']} requests ({rep['samples']} samples) in "
           f"{rep['wall_s']:.3f}s: {rep['requests_per_s']:.1f} req/s, "
           f"{rep['samples_per_s']:.0f} samples/s "
@@ -362,19 +399,45 @@ def main(argv=None):
         # degraded-hardware demonstration: score the sampled instance
         # (same compiled closure serve() used) against the exported
         # (ideal) accuracies
-        logits = np.asarray(nonideal_fn(jnp.asarray(data["x_test"],
-                                                    jnp.float32)))
-        served = deploy._jnp_mean_acc(
-            np.argmax(logits, -1) == np.asarray(data["y_test"])[None, :])
+        y_np = np.asarray(data["y_test"])[None, :]
+        x_jnp = jnp.asarray(data["x_test"], jnp.float32)
+        logits = np.asarray(nonideal_fn(x_jnp))
+        served = deploy._jnp_mean_acc(np.argmax(logits, -1) == y_np)
+        recovered = None
+        if cal_fn is not None:
+            # calibration demonstration: the SAME measured instance,
+            # served through the re-baked tables (DESIGN.md §15)
+            recovered = deploy._jnp_mean_acc(
+                np.argmax(np.asarray(cal_fn(x_jnp)), -1) == y_np)
         for i, d in enumerate(designs):
+            rec = (f" calibrated={recovered[i]:.3f} "
+                   f"(recovered {recovered[i] - served[i]:+.3f})"
+                   if recovered is not None else "")
             print(f"  design {i}: area={d.area_tc:4d}T  acc "
                   f"exported={d.accuracy:.3f} served={served[i]:.3f} "
-                  f"(drop {d.accuracy - served[i]:+.3f})")
+                  f"(drop {d.accuracy - served[i]:+.3f}){rec}")
         print(f"  served a sampled non-ideal instance "
               f"({nonideal.describe()}): mean accuracy drop "
-              f"{float(np.mean(exported - served)):+.3f}")
+              f"{float(np.mean(exported - served)):+.3f}"
+              + (f", calibrated recovery "
+                 f"{float(np.mean(recovered - served)):+.3f}"
+                 if recovered is not None else ""))
+        # yield summary over the instance stream the served instance was
+        # drawn from (same seed/size, so the served row is one of the S)
+        rob = deploy.evaluate_robustness(
+            designs, nonideal, data["x_test"], data["y_test"],
+            samples=args.mc_samples or args.nonideal_instance + 1,
+            yield_margins=yield_margins)
+        for m in yield_margins:
+            ys = "  ".join(f"{row['yield'][f'{m:g}']:.2f}"
+                           for row in rob["designs"])
+            print(f"  yield@{m:g} over {rob['samples']} instances: {ys}")
         rep["nonideal"] = nonideal.to_meta()
         rep["served_accuracies"] = [float(a) for a in served]
+        if recovered is not None:
+            rep["calibrated_accuracies"] = [float(a) for a in recovered]
+        rep["yield_margins"] = [float(m) for m in yield_margins]
+        rep["yield"] = [row["yield"] for row in rob["designs"]]
         return rep
 
     # round-trip parity: the served front must reproduce each design's

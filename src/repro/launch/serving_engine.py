@@ -42,6 +42,15 @@ instead:
   parity contract is re-asserted** on the new mesh, and the interrupted
   microbatch is re-dispatched — accepted in-deadline requests are never
   dropped by a recovery. ``fault.StepWatchdog`` flags straggler batches.
+* **Calibrate-on-recovery** — a tenant whose hardware carries measured
+  non-idealities (``Tenant.nonideal``, a ``NonIdealSpec``) serves
+  *calibrated* tables (``deploy.calibrate_front``, DESIGN.md §15): MC
+  instance 0 of the measured stream at startup, and — because a
+  replacement device is a fresh piece of hardware with its own offsets
+  and stuck comparators — instance ``recoveries`` after every device
+  loss, re-baked before the parity re-assert and serving resume. The
+  parity contract for such tenants compares the re-sharded bank against
+  the calibrated reference accuracies instead of the exported ones.
 
 ``run_workload`` / ``run_closed_loop`` are the synchronous entry points
 (launch/serve_classifier ``--driver async`` and benchmarks/run.py
@@ -265,10 +274,15 @@ class Tenant:
     """One resident exported front: the routing key is the front's
     provenance (``front_meta``'s dataset name). ``parity_data`` is the
     (x_test, y_test) pair the recovery path re-asserts the bit-for-bit
-    served==exported contract against after a re-shard."""
+    served==exported contract against after a re-shard. ``nonideal``
+    (a ``core.nonideal.NonIdealSpec``) marks the tenant's hardware as
+    carrying measured non-idealities: the engine then serves calibrated
+    tables (DESIGN.md §15) and re-calibrates against a fresh measured
+    instance after every device-loss recovery."""
     name: str
     designs: Sequence[deploy.DeployedClassifier]
     parity_data: Optional[Tuple[np.ndarray, np.ndarray]] = None
+    nonideal: Optional[object] = None        # core.nonideal.NonIdealSpec
 
     @property
     def channels(self) -> int:
@@ -296,30 +310,58 @@ class _TenantState:
         self.interpret = interpret
         self.queue: deque = deque()       # (Request, future, enq_wall_s)
         self.bank_fn = None               # rebuilt on (re-)shard
+        # the LIVE front: the exported designs, or — for a tenant on
+        # measured non-ideal hardware — their calibrated re-bake for the
+        # current hardware instance (instance 0 at startup)
+        self.designs: List[deploy.DeployedClassifier] = list(tenant.designs)
+        self.calibrations = 0
+        if tenant.nonideal is not None:
+            self.calibrate(instance=0)
 
     @property
     def queued_rows(self) -> int:
         return sum(r.rows for r, _, _ in self.queue)
 
+    def calibrate(self, instance: int) -> None:
+        """Re-bake the served front against the measured non-idealities
+        of hardware instance ``instance`` (deploy.calibrate_front,
+        DESIGN.md §15) — called at startup and after every device-loss
+        recovery (a replacement device is a fresh instance)."""
+        self.designs = deploy.calibrate_front(
+            self.tenant.designs, self.tenant.nonideal,
+            instance=instance, samples=instance + 1)
+        self.calibrations += 1
+        log.info("tenant %s: calibrated against measured instance %d "
+                 "(calibration %d)", self.tenant.name, instance,
+                 self.calibrations)
+
     def build_bank(self, mesh) -> None:
-        self.bank_fn = deploy.make_bank_fn(self.tenant.designs, mesh=mesh,
+        self.bank_fn = deploy.make_bank_fn(self.designs, mesh=mesh,
                                            interpret=self.interpret)
 
     def assert_parity(self, mesh) -> None:
         """Re-assert the §8 bit-for-bit contract on the (new) mesh —
-        the recovery protocol's exit criterion."""
+        the recovery protocol's exit criterion. Calibrated tenants
+        compare against the calibrated reference accuracies (the
+        exported ones belong to ideal hardware)."""
         if self.tenant.parity_data is None:
             return
         x, y = self.tenant.parity_data
-        served = deploy.served_accuracies(self.tenant.designs, x, y,
+        served = deploy.served_accuracies(self.designs, x, y,
                                           mesh=mesh,
                                           interpret=self.interpret)
-        exported = np.array([d.accuracy for d in self.tenant.designs])
-        if not np.array_equal(served, exported):
+        if self.tenant.nonideal is not None:
+            expected = deploy.served_accuracies(self.designs, x, y,
+                                                interpret=self.interpret)
+            label = "calibrated reference"
+        else:
+            expected = np.array([d.accuracy for d in self.designs])
+            label = "exported"
+        if not np.array_equal(served, expected):
             raise RuntimeError(
                 f"post-recovery parity violated for tenant "
-                f"{self.tenant.name!r}: served {served} != exported "
-                f"{exported}")
+                f"{self.tenant.name!r}: served {served} != {label} "
+                f"{expected}")
 
 
 # ------------------------------------------------------------------- engine
@@ -475,11 +517,15 @@ class ServingEngine:
                     e.device_index, len(self._tenants), self.pool.alive,
                     self.recoveries, self.max_recoveries)
         for ts in self._tenants.values():
+            if ts.tenant.nonideal is not None:
+                # the replacement hardware is a fresh measured instance:
+                # re-bake the front before serving resumes (§15)
+                ts.calibrate(instance=self.recoveries)
             ts.build_bank(mesh)
             ts.assert_parity(mesh)
         self._warmup()
-        log.info("recovery complete: served==exported parity re-asserted "
-                 "for %d tenant(s)", len(self._tenants))
+        log.info("recovery complete: parity re-asserted for %d tenant(s)",
+                 len(self._tenants))
 
     async def _serve_one(self, ts: _TenantState, t0: float) -> None:
         now = time.perf_counter() - t0
@@ -596,6 +642,9 @@ class ServingEngine:
                              / max(self.dispatched_rows, 1)),
             "stragglers": self.watchdog.stragglers,
             "recoveries": self.recoveries,
+            "calibrations": {name: ts.calibrations
+                             for name, ts in self._tenants.items()
+                             if ts.calibrations},
             "devices": {"alive": self.pool.alive,
                         "lost": len(self.pool.lost),
                         "sharded": self.pool.mesh() is not None},

@@ -106,17 +106,35 @@ def adc_search_config(args, channels: int, data=None):
                                    sigma_range=args.range_drift,
                                    fault_rate=args.fault_rate,
                                    seed=args.nonideal_seed)
-    if args.engine == "gradient" and args.mc_samples > 0:
-        raise ValueError(
-            "the gradient engine optimizes the 2-objective accuracy/area "
-            "front; use --engine batched|sharded for robustness co-search")
+    ft = None
+    if args.faulttol:
+        if not knobs or args.mc_samples <= 0:
+            raise ValueError(
+                "--faulttol extends the robustness co-search; it needs "
+                "--mc-samples > 0 and at least one non-ideality knob")
+        from repro.faulttol import FaultTolSpec
+        ft = FaultTolSpec(max_spares=args.max_spares)
     cfg = search.SearchConfig.for_spec(
         adc_spec, pop_size=args.pop, generations=args.generations,
         train_steps=args.train_steps, engine=args.engine,
         screen_factor=args.screen_factor,
         nonideal=ni, mc_samples=args.mc_samples if ni else 0,
-        robust_objective=args.robust_objective)
+        robust_objective=args.robust_objective,
+        yield_margin=args.yield_margin, faulttol=ft)
     return adc_spec, cfg
+
+
+def parse_yield_margins(text: str):
+    """'--yield-margins 0.01,0.05' -> (0.01, 0.05) — the accuracy-drop
+    margins the exported robustness report tabulates yield at."""
+    try:
+        margins = tuple(float(t) for t in str(text).split(",") if t.strip())
+    except ValueError:
+        margins = ()
+    if not margins or any(not 0.0 <= m < 1.0 for m in margins):
+        raise ValueError(f"--yield-margins must be a comma list of "
+                         f"fractions in [0, 1), got {text!r}")
+    return margins
 
 
 def run_adc_search(args):
@@ -151,8 +169,14 @@ def run_adc_search(args):
           f"gens={cfg.generations} qat-steps={cfg.train_steps} "
           f"devices={len(jax.devices())}")
     if cfg.wants_robustness:
-        print(f"  robustness objective [{cfg.robust_objective}] over "
-              f"{cfg.mc_samples} MC instances: {cfg.nonideal.describe()}")
+        margin = (f"@{cfg.yield_margin:g}"
+                  if cfg.robust_objective == "yield" else "")
+        print(f"  robustness objective [{cfg.robust_objective}{margin}] "
+              f"over {cfg.mc_samples} MC instances: "
+              f"{cfg.nonideal.describe()}")
+    if cfg.faulttol is not None:
+        print(f"  fault-tolerance genome: {cfg.faulttol.describe()} "
+              f"(+{cfg.faulttol.gene_bits(sizes[0])} genes)")
     marks = [time.perf_counter()]
 
     def log(g, pop, fit):
@@ -207,15 +231,17 @@ def run_adc_search(args):
         if cfg.wants_robustness:
             # the yield report rides with the artifact: same NonIdealSpec
             # (hence same draw stream) as the search's third objective
+            margins = parse_yield_margins(args.yield_margins)
             rep = deploy.evaluate_robustness(
                 designs, cfg.nonideal, data["x_test"], data["y_test"],
-                samples=cfg.mc_samples)
+                samples=cfg.mc_samples, yield_margins=margins)
             deploy.save_robustness(front_dir, rep)
             for i, row in enumerate(rep["designs"]):
+                ys = "  ".join(f"yield@{m:g} {row['yield'][f'{m:g}']:.2f}"
+                               for m in margins)
                 print(f"  design {i} robustness: mean "
                       f"{row['mean_accuracy']:.3f}  worst "
-                      f"{row['worst_accuracy']:.3f}  yield@1% "
-                      f"{row['yield']['0.01']:.2f}")
+                      f"{row['worst_accuracy']:.3f}  {ys}")
             print(f"robustness report -> {front_dir}/robustness.json")
         print(f"serve it:  PYTHONPATH=src python -m repro.launch."
               f"serve_classifier --front-dir {front_dir}")
@@ -293,9 +319,25 @@ def build_parser() -> argparse.ArgumentParser:
     ap.add_argument("--nonideal-seed", type=int, default=0,
                     help="MC draw stream seed (NonIdealSpec.seed)")
     ap.add_argument("--robust-objective", default="expected",
-                    choices=("expected", "worst"),
+                    choices=("expected", "worst", "yield"),
                     help="third NSGA-II objective: expected accuracy "
-                         "drop or worst-case error over the MC instances")
+                         "drop, worst-case error, or 1 - yield@margin "
+                         "over the MC instances (DESIGN.md §15)")
+    ap.add_argument("--yield-margin", type=float, default=0.01,
+                    help="accuracy-drop margin of the in-search 'yield' "
+                         "objective (fraction, e.g. 0.01 = 1%%)")
+    ap.add_argument("--yield-margins", default="0.01,0.05",
+                    help="comma list of margins the exported robustness "
+                         "report tabulates yield at "
+                         "(robustness.json)")
+    ap.add_argument("--faulttol", action="store_true",
+                    help="fault-tolerant co-search (DESIGN.md §15): "
+                         "append per-channel TMR + spare-level genes and "
+                         "a calibrate gene to the genome; needs "
+                         "--mc-samples and a non-ideality knob")
+    ap.add_argument("--max-spares", type=int, default=2,
+                    help="per-channel spare-level gene range of "
+                         "--faulttol (0 disables the spare action)")
     return ap
 
 

@@ -113,6 +113,20 @@ def _tuning_operands(w: Workload, seed: int = 0) -> Tuple[tuple, object]:
         lead = (w.p,) if w.entry == "mc_eval_population" else ()
         ops_mc = nonideal.mc_operands(spec, ni, masks(*lead), samples=w.s)
         return (x,) + tuple(ops_mc), spec
+    if w.entry in ("mc_eval_cal", "mc_eval_cal_population"):
+        from repro.faulttol import calibrate as ft_cal
+        from repro.faulttol import redundancy as ft_red
+        ni = nonideal.NonIdealSpec(sigma_offset=0.3, sigma_range=0.01,
+                                   fault_rate=0.02, seed=seed)
+        lead = (w.p,) if w.entry == "mc_eval_cal_population" else ()
+        rdraws = ft_red.draw_redundant(w.bits, w.c, w.s, ni)
+        tmr = jnp.asarray((rng.random(lead + (w.c,)) < 0.5)
+                          .astype(np.int32))
+        cal = jnp.asarray(np.ones(lead, np.int32)) if lead \
+            else jnp.asarray(1, jnp.int32)
+        ops_ft = ft_cal.mc_operands_ft(spec, ni, masks(*lead), tmr, cal,
+                                       rdraws)
+        return (x,) + tuple(ops_ft), spec
     if w.entry == "bespoke_mlp":
         return (x, spec.value_table(masks()), weights(w.c, w.h),
                 weights(w.h), weights(w.h, w.o), weights(w.o)), spec
@@ -139,6 +153,8 @@ def default_workloads(m: int = 256, c: int = 8, bits: int = 3
         Workload("adc_quantize_population", m=m, c=c, bits=bits, p=8),
         Workload("mc_eval", m=m, c=c, bits=bits, s=4),
         Workload("mc_eval_population", m=m, c=c, bits=bits, p=4, s=4),
+        Workload("mc_eval_cal", m=m, c=c, bits=bits, s=4),
+        Workload("mc_eval_cal_population", m=m, c=c, bits=bits, p=4, s=4),
         Workload("bespoke_mlp", m=m, c=c, bits=bits, h=4, o=3),
         Workload("bespoke_svm", m=m, c=c, bits=bits, o=3),
         Workload("classifier_bank_mlp", m=m, c=c, bits=bits, d=4, h=4, o=3),

@@ -113,6 +113,8 @@ def heuristic_block_m(w: Workload) -> int:
         return adc_quantize.auto_block_m(w.m, w.c, n)
     if w.entry in ("mc_eval", "mc_eval_population"):
         return mc_eval.auto_block_m(w.m, w.c, n)
+    if w.entry in ("mc_eval_cal", "mc_eval_cal_population"):
+        return mc_eval.auto_block_m_cal(w.m, w.c, n)
     if w.entry in ("bespoke_mlp", "classifier_bank_mlp"):
         return qmlp.auto_block_m_mlp(w.m, w.c, n, w.h, w.o)
     if w.entry in ("bespoke_svm", "classifier_bank_svm"):
@@ -157,6 +159,17 @@ def cost(w: Workload, block_m: Optional[int] = None) -> Cost:
                     w.p * w.s * (xio_b + 2 * table_b)
                     + w.s * rows_b + table_b,
                     (2 * min(bm, m) * c + 3 * c * n + 2 * c) * F32,
+                    w.p * w.s * inner)
+    if w.entry == "mc_eval_cal":
+        # per-instance value tables: three (C, 2^N) streams per instance
+        return Cost(w.s * mc_flops, 0.0,
+                    w.s * (xio_b + 3 * table_b + rows_b),
+                    (2 * min(bm, m) * c + 4 * c * n + 2 * c) * F32,
+                    w.s * inner)
+    if w.entry == "mc_eval_cal_population":
+        return Cost(w.p * w.s * mc_flops, 0.0,
+                    w.p * w.s * (xio_b + 3 * table_b) + w.s * rows_b,
+                    (2 * min(bm, m) * c + 4 * c * n + 2 * c) * F32,
                     w.p * w.s * inner)
     # classifier entries: dequant + MXU matmuls; logits stream out.
     if w.entry in ("bespoke_mlp", "classifier_bank_mlp"):

@@ -98,6 +98,10 @@ def workload_of(entry: str, x_shape: Tuple[int, ...],
         w["s"] = int(table_shape[0])
     elif entry == "mc_eval_population":
         w["p"], w["s"] = int(table_shape[0]), int(table_shape[1])
+    elif entry == "mc_eval_cal":
+        w["s"] = int(table_shape[0])
+    elif entry == "mc_eval_cal_population":
+        w["p"], w["s"] = int(table_shape[0]), int(table_shape[1])
     elif entry == "bespoke_mlp":
         w["h"], w["o"] = int(weight_shapes[0][1]), int(weight_shapes[2][1])
     elif entry == "bespoke_svm":

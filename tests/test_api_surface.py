@@ -18,12 +18,14 @@ API_SURFACE = {
     "AdcSpec",
     "Bank",
     "DeployedClassifier",
+    "FaultTolSpec",
     "FeatureSpec",
     "Front",
     "cosearch",
     "NonIdealSpec",
     "SearchConfig",
     "autotune",
+    "calibrate",
     "deploy",
     "evaluate_robustness",
     "load_front",
@@ -51,7 +53,8 @@ def test_dispatch_registry_entry_set():
     assert dispatch.entries() == (
         "adc_quantize", "adc_quantize_population", "bespoke_mlp",
         "bespoke_svm", "classifier_bank_mlp", "classifier_bank_svm",
-        "mc_eval", "mc_eval_population")
+        "mc_eval", "mc_eval_cal", "mc_eval_cal_population",
+        "mc_eval_population")
     for name in dispatch.entries():
         entry = dispatch.get(name)
         # the interpret policy is explicit and IDENTICAL across entries

@@ -97,3 +97,46 @@ def test_nonideal_flags_build_spec():
     # no robustness flags at all: plain 2-objective search
     _, cfg0 = train.adc_search_config(_args([]), 7)
     assert not cfg0.wants_robustness
+
+
+def test_yield_margins_round_trip(tmp_path):
+    """--yield-margins argv -> parse -> evaluate_robustness ->
+    robustness.json -> reload keeps the margin list and tabulates the
+    per-design yield at exactly those margins (the §15 report contract
+    train.py and serve_classifier.py share)."""
+    args = _args(["--yield-margins", "0.02,0.1"])
+    margins = train.parse_yield_margins(args.yield_margins)
+    assert margins == (0.02, 0.1)
+    # the default survives the same parse
+    assert train.parse_yield_margins(
+        _args([]).yield_margins) == (0.01, 0.05)
+    for bad in ("", "a,b", "-0.1", "1.5", "0.01,,"):
+        if bad == "0.01,,":        # trailing commas are tolerated, not bad
+            assert train.parse_yield_margins(bad) == (0.01,)
+            continue
+        with pytest.raises(ValueError, match="yield-margins"):
+            train.parse_yield_margins(bad)
+    # serve_classifier's parser carries the identical flag/default
+    from repro.launch import serve_classifier
+    sargs = serve_classifier.build_parser().parse_args(["--smoke"])
+    assert train.parse_yield_margins(sargs.yield_margins) == (0.01, 0.05)
+
+    from repro import api
+    from repro.core import deploy
+    from repro.data import tabular
+    data = tabular.make_dataset("seeds")
+    front = api.search(api.AdcSpec(bits=2), data, pop_size=4,
+                       generations=0, train_steps=10, hidden=4)
+    bank = api.deploy(front)
+    ni = NonIdealSpec(sigma_offset=0.4, fault_rate=0.05, seed=3)
+    rep = deploy.evaluate_robustness(bank.designs, ni, data["x_test"],
+                                     data["y_test"], samples=4,
+                                     yield_margins=margins)
+    deploy.save_robustness(tmp_path, rep)
+    back = deploy.load_robustness(tmp_path)
+    assert tuple(back["yield_margins"]) == margins
+    assert back["nonideal"] == ni.to_meta()      # full spec stamped
+    for row in back["designs"]:
+        assert set(row["yield"]) == {f"{m:g}" for m in margins}
+        for v in row["yield"].values():
+            assert 0.0 <= v <= 1.0

@@ -1,0 +1,148 @@
+"""Property-based tests for core/nonideal.py interval-table compilation
+(the operand compiler every MC kernel, the yield objective, and the §15
+calibration pass sit on).
+
+``instance_bounds`` claims its per-instance tables *partition* the real
+line: any input in code units reaches exactly one kept leaf of the
+perturbed tree walk. Three properties are checked per (instance,
+channel) row over random masks/specs:
+
+* **partition** — probes (every finite boundary, every midpoint between
+  consecutive boundaries, and points beyond both ends) land in exactly
+  ONE live interval ``[lb, ub)``;
+* **disjoint + ordered** — the live intervals, read in leaf-code order,
+  are non-overlapping and monotone: each upper bound <= the next live
+  lower bound, the first live lb is -inf, the last live ub is +inf;
+* **ideal limit** — an all-zero ``NonIdealSpec`` makes every finite
+  bound an exact integer code boundary, identical across instances, and
+  interval membership at the code midpoints ``k + 0.5`` reproduces
+  ``adc.tree_lut`` exactly (the bit-for-bit ideal-limit contract).
+
+Runs with or without hypothesis (tests/hypothesis_compat): the
+``@given`` cases are skipped when hypothesis is absent; seeded
+deterministic sweeps over the same properties always run.
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import adc, nonideal
+from repro.core.nonideal import NonIdealSpec
+
+from hypothesis_compat import given, settings, st
+
+
+def random_mask(rng, channels: int, n: int, keep: float = 0.6) -> np.ndarray:
+    m = (rng.random((channels, n)) < keep).astype(np.int32)
+    return np.asarray(adc.repair_mask(jnp.asarray(m)))
+
+
+# ------------------------------------------------------------- properties
+def check_partition_disjoint_ordered(bits: int, mask: np.ndarray,
+                                     spec: NonIdealSpec,
+                                     samples: int = 4) -> None:
+    c, n = mask.shape
+    draws = nonideal.draw(bits, c, samples, spec)
+    lb, ub = nonideal.instance_bounds(jnp.asarray(mask), bits, draws, spec)
+    lb = np.asarray(lb, np.float64)
+    ub = np.asarray(ub, np.float64)
+    assert lb.shape == ub.shape == (samples, c, n)
+    for s in range(samples):
+        for ch in range(c):
+            l, u = lb[s, ch], ub[s, ch]
+            fin = np.unique(np.concatenate(
+                [l[np.isfinite(l)], u[np.isfinite(u)],
+                 np.arange(n + 1, dtype=np.float64)]))
+            probes = np.concatenate(
+                [fin, (fin[:-1] + fin[1:]) / 2.0,
+                 [fin[0] - 1.0, fin[-1] + 1.0]]).astype(np.float32)
+            sel = (probes[:, None] >= l[None, :]) \
+                & (probes[:, None] < u[None, :])
+            counts = sel.sum(axis=1)
+            assert (counts == 1).all(), (
+                f"instance {s} channel {ch}: probes "
+                f"{probes[counts != 1]} hit {counts[counts != 1]} "
+                f"intervals (lb={l}, ub={u})")
+            live = np.where(l < u)[0]
+            assert live.size >= 1
+            assert l[live[0]] == -np.inf and u[live[-1]] == np.inf
+            assert (u[live[:-1]] <= l[live[1:]]).all(), (
+                f"instance {s} channel {ch}: live intervals overlap or "
+                f"are out of code order (lb={l}, ub={u})")
+
+
+def check_ideal_limit(bits: int, mask: np.ndarray, samples: int = 3) -> None:
+    c, n = mask.shape
+    spec = NonIdealSpec()                     # all knobs exactly zero
+    draws = nonideal.draw(bits, c, samples, spec)
+    lb, ub = nonideal.instance_bounds(jnp.asarray(mask), bits, draws, spec)
+    lb, ub = np.asarray(lb), np.asarray(ub)
+    # zero randomness -> every instance compiles the identical table
+    assert (lb == lb[:1]).all() and (ub == ub[:1]).all()
+    for b in (lb, ub):
+        fin = b[np.isfinite(b)]
+        np.testing.assert_array_equal(fin, np.floor(fin))
+    # membership at code midpoints k + 0.5 IS the ideal pruned walk
+    lut = np.asarray(adc.tree_lut(jnp.asarray(mask)))        # (C, n)
+    for ch in range(c):
+        for k in range(n):
+            hit = np.where((lb[0, ch] <= k + 0.5)
+                           & (k + 0.5 < ub[0, ch]))[0]
+            assert hit.size == 1 and hit[0] == lut[ch, k], (
+                f"channel {ch} code {k}: interval walk -> {hit}, "
+                f"tree_lut -> {lut[ch, k]}")
+
+
+# ---------------------------------------------------- deterministic sweeps
+@pytest.mark.parametrize("bits", [2, 3, 4])
+def test_partition_disjoint_ordered_seeded(bits):
+    n = 2 ** bits
+    for seed in range(3):
+        rng = np.random.default_rng(seed)
+        mask = random_mask(rng, channels=3, n=n)
+        spec = NonIdealSpec(sigma_offset=0.7, sigma_range=0.05,
+                            fault_rate=0.2, seed=seed)
+        check_partition_disjoint_ordered(bits, mask, spec)
+
+
+@pytest.mark.parametrize("bits", [2, 3, 4])
+def test_partition_faults_only(bits):
+    """Stuck-at faults alone (no offsets) still leave a partition —
+    the stuck branch empties whole subtrees, never double-covers."""
+    n = 2 ** bits
+    rng = np.random.default_rng(7)
+    mask = random_mask(rng, channels=4, n=n)
+    spec = NonIdealSpec(fault_rate=0.5, seed=1)
+    check_partition_disjoint_ordered(bits, mask, spec, samples=6)
+
+
+@pytest.mark.parametrize("bits", [2, 3])
+def test_ideal_limit_seeded(bits):
+    n = 2 ** bits
+    check_ideal_limit(bits, np.ones((2, n), np.int32))       # full ladder
+    for seed in range(4):
+        rng = np.random.default_rng(seed)
+        check_ideal_limit(bits, random_mask(rng, 3, n, keep=0.4))
+    # minimum viable ADC: exactly two kept levels
+    m = np.zeros((1, n), np.int32)
+    m[0, 0] = m[0, n - 1] = 1
+    check_ideal_limit(bits, m)
+
+
+# ------------------------------------------------------- hypothesis cases
+@settings(max_examples=25, deadline=None)
+@given(st.integers(0, 2 ** 31 - 1), st.integers(2, 4),
+       st.floats(0.0, 1.5), st.floats(0.0, 0.5))
+def test_partition_property(seed, bits, sigma, fault_rate):
+    rng = np.random.default_rng(seed)
+    mask = random_mask(rng, channels=3, n=2 ** bits)
+    spec = NonIdealSpec(sigma_offset=sigma, sigma_range=0.03,
+                        fault_rate=fault_rate, seed=seed)
+    check_partition_disjoint_ordered(bits, mask, spec, samples=3)
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(0, 2 ** 31 - 1), st.integers(2, 4))
+def test_ideal_limit_property(seed, bits):
+    rng = np.random.default_rng(seed)
+    check_ideal_limit(bits, random_mask(rng, 3, 2 ** bits, keep=0.5))

@@ -24,6 +24,9 @@ WORKLOADS = {
     "mc_eval": Workload("mc_eval", m=32, c=4, bits=3, s=3),
     "mc_eval_population":
         Workload("mc_eval_population", m=32, c=4, bits=3, p=3, s=2),
+    "mc_eval_cal": Workload("mc_eval_cal", m=32, c=4, bits=3, s=3),
+    "mc_eval_cal_population":
+        Workload("mc_eval_cal_population", m=32, c=4, bits=3, p=3, s=2),
     "bespoke_mlp": Workload("bespoke_mlp", m=32, c=4, bits=3, h=5, o=3),
     "bespoke_svm": Workload("bespoke_svm", m=32, c=4, bits=3, o=3),
     "classifier_bank_mlp":
@@ -89,6 +92,8 @@ def test_heuristic_matches_kernel_families(name):
         "adc_quantize_population": w.c * n + 2 * w.c,
         "mc_eval": 3 * w.c * n + 2 * w.c,
         "mc_eval_population": 3 * w.c * n + 2 * w.c,
+        "mc_eval_cal": 4 * w.c * n + 2 * w.c,
+        "mc_eval_cal_population": 4 * w.c * n + 2 * w.c,
         "bespoke_mlp": w.c * n + w.c * w.h + w.h + w.h * w.o + w.o + 2 * w.c,
         "classifier_bank_mlp":
             w.c * n + w.c * w.h + w.h + w.h * w.o + w.o + 2 * w.c,
